@@ -1,0 +1,35 @@
+"""Fig. 10: PSNR vs retrieved bitrate (L2 fidelity even though IPComp
+optimizes L_inf)."""
+from __future__ import annotations
+
+from .common import csv_row, datasets, progressive_compressors, timed
+from repro.core import metrics
+
+BITRATES = [1.0, 2.0, 4.0]
+
+
+def run(scale=None):
+    rows, checks = [], []
+    for name, x in list(datasets(scale).items())[:3]:
+        rng = float(x.max() - x.min())
+        blobs = {c.name: c.compress(x, 1e-7 * rng)
+                 for c in progressive_compressors()}
+        for bpp in BITRATES:
+            budget = int(bpp * x.size / 8)
+            ps, within = {}, {}
+            for comp in progressive_compressors():
+                (out, bytes_read, _), dt = timed(comp.retrieve,
+                                                 blobs[comp.name],
+                                                 max_bytes=budget)
+                p = metrics.psnr(x, out)
+                ps[comp.name] = p
+                within[comp.name] = bytes_read <= budget * 1.02
+                rows.append(csv_row(f"fig10/{name}/bpp{bpp}/{comp.name}",
+                                    dt * 1e6,
+                                    f"psnr={p:.2f}"
+                                    f";within_budget={within[comp.name]}"))
+            others = [v for k, v in ps.items() if k != "ipcomp" and within[k]]
+            if others:
+                checks.append(("ipcomp_competitive_psnr", name, bpp,
+                               bool(ps["ipcomp"] >= max(others) - 10.0)))
+    return rows, checks

@@ -1,0 +1,48 @@
+"""Fig. 8/9: compression + retrieval speed; residual-count slowdown curve.
+
+Paper claims: IPComp is up to ~3x faster than progressive baselines (except
+non-progressive SZ3-M); residual compressors slow down sharply as the
+number of pre-defined bounds grows.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import csv_row, datasets, progressive_compressors, timed
+from repro.core.baselines import SZ3
+from repro.core.baselines.residual import ResidualProgressive
+from repro.core import metrics
+
+
+def run(scale=None):
+    rows, checks = [], []
+    data = datasets(scale)
+    name = "Density"
+    x = data[name]
+    rng = float(x.max() - x.min())
+    eb = 1e-9 * rng
+    speeds = {}
+    for comp in progressive_compressors():
+        buf, tc = timed(comp.compress, x, eb)
+        (_, _, passes), td = timed(comp.retrieve, buf, error_bound=eb * 4)
+        mbps_c = x.nbytes / tc / 1e6
+        mbps_d = x.nbytes / td / 1e6
+        speeds[comp.name] = (mbps_c, mbps_d)
+        rows.append(csv_row(f"fig8/{name}/{comp.name}/compress", tc * 1e6,
+                            f"MBps={mbps_c:.1f}"))
+        rows.append(csv_row(f"fig8/{name}/{comp.name}/retrieve", td * 1e6,
+                            f"MBps={mbps_d:.1f};passes={passes}"))
+    checks.append(("ipcomp_faster_than_residual", name, "compress",
+                   speeds["ipcomp"][0] >= 0.8 * speeds["sz3r"][0]))
+
+    # Fig 9: residual rung count vs compression time
+    import repro.core.baselines.residual as R
+    base_ladder = R.LADDER
+    for rungs in (2, 5, 9):
+        R.LADDER = [4 ** k for k in range(rungs - 1, -1, -1)]
+        comp = R.SZ3R()
+        _, tc = timed(comp.compress, x, eb * (4 ** (9 - rungs)))
+        rows.append(csv_row(f"fig9/{name}/sz3r/rungs{rungs}", tc * 1e6,
+                            f"MBps={x.nbytes / tc / 1e6:.1f}"))
+    R.LADDER = base_ladder
+    return rows, checks

@@ -1,0 +1,54 @@
+"""Cross-pod gradient-reduction wire traffic: plain f32 psum vs IPComp
+bitplane-compressed psum (the paper's §4.4 pipeline on the inter-pod links).
+
+Collective bytes are read from the compiled HLO of the isolated reduction
+(the integrated train step compresses the same tensors; on XLA:CPU the
+mixed manual/auto module trips a compiler bug in AllReducePromotion —
+EXPERIMENTS.md §Perf cell 3 — so the wire measurement is taken here).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def run(scale=None):
+    import os
+    rows, checks = [], []
+    if "XLA_FLAGS" not in os.environ:  # needs the 512-device dry-run env
+        rows.append("grad_compress/skipped(no XLA_FLAGS),0.0,run via dryrun")
+        return rows, checks
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.compression.grad import compressed_psum
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import collective_bytes
+
+    mesh = make_production_mesh(multi_pod=True)
+    npods = mesh.shape["pod"]
+    # yi-6b-sized flat gradient shard per device pair
+    n = 6_061_000_000 // 512  # one device's FSDP+TP shard of the grads
+    n = (n // 128) * 128
+    g = jax.ShapeDtypeStruct((npods, n), jnp.float32)
+
+    def plain(x):
+        return jax.lax.psum(x, "pod") / npods
+
+    def comp(x):
+        return compressed_psum(x, "pod", keep_bits=14, rel_eb=1e-4) / npods
+
+    out = []
+    for name, fn in (("plain_f32", plain), ("ipcomp_bitplane", comp)):
+        f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("pod"),
+                                  out_specs=P("pod"), axis_names={"pod"},
+                                  check_vma=False))
+        hlo = f.lower(g).compile().as_text()
+        coll = collective_bytes(hlo)
+        tot = sum(coll.values())
+        out.append(tot)
+        rows.append(f"grad_compress/{name},0.0,"
+                    f"coll_bytes={tot};breakdown={coll}")
+    ratio = out[0] / max(out[1], 1)
+    rows.append(f"grad_compress/reduction,0.0,ratio={ratio:.2f}x")
+    checks.append(("compressed_wire_smaller", "yi-6b", "", out[1] < out[0]))
+    return rows, checks

@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV; claim-checks are summarized at the
+end (a failed claim check is a regression against the paper's comparisons,
+not a crash).
+
+  PYTHONPATH=src python -m benchmarks.run [--scale 0.15] [--only fig5,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import (fig5_ratio, fig6_retrieval, fig7_bitrate, fig8_speed,
+               fig10_psnr, table2_entropy, grad_compress_bench)
+
+MODULES = {
+    "fig5": fig5_ratio, "fig6": fig6_retrieval, "fig7": fig7_bitrate,
+    "fig8": fig8_speed, "fig10": fig10_psnr, "table2": table2_entropy,
+    "grad_compress": grad_compress_bench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+    all_checks = []
+    print("name,us_per_call,derived")
+    for n in names:
+        rows, checks = MODULES[n].run(args.scale)
+        for r in rows:
+            print(r)
+        all_checks.extend(checks)
+    ok = sum(1 for c in all_checks if c[-1])
+    print(f"\n# claim-checks: {ok}/{len(all_checks)} hold", file=sys.stderr)
+    for c in all_checks:
+        if not c[-1]:
+            print(f"#   FAILED: {c}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

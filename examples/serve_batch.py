@@ -1,0 +1,11 @@
+"""Batched serving example (deliverable b): thin wrapper over the serving
+launcher — heterogeneous prompts, continuous batched decode.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import subprocess
+import sys
+
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2-0.5b",
+     "--reduced", "--requests", "8", "--max-new", "12"]))

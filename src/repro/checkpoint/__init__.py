@@ -1,0 +1,5 @@
+from .store import (CheckpointManager, save_checkpoint, restore_checkpoint,
+                    progressive_restore)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "progressive_restore"]

@@ -1,0 +1,219 @@
+"""Progressive checkpointing — the paper's technique as a first-class
+training-infrastructure feature.
+
+Every parameter leaf is an IPComp archive (error-bounded, bitplane-
+progressive).  Restart paths:
+
+  * ``restore_checkpoint``       — full precision (error <= eb everywhere).
+  * ``progressive_restore``      — coarse-first: load only the bitplanes
+    needed for a requested weight error bound, start stepping immediately,
+    refine in the background (Algorithm 2) touching ONLY the missing planes.
+    At 1000-node scale this turns a cold restart's all-hosts-read-everything
+    storm into a small fraction of the bytes (measured in the benchmarks).
+
+Layout (object-store friendly):
+  <dir>/step_<N>/manifest.json       leaf index, shapes, dtypes, eb, hashes
+  <dir>/step_<N>/<leaf_id>.ipc       one IPComp archive per leaf
+  <dir>/LATEST                       atomic pointer (rename)
+
+Checkpoints are sharding-agnostic: leaves are saved as logical (gathered)
+arrays and re-sharded on restore against whatever mesh the restart uses —
+elastic scaling after node failure.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core import ipcomp
+from ..core.container import ArchiveReader
+
+
+def _leaf_id(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return ".".join(parts).replace("/", "_")
+
+
+def _as_f32(x: np.ndarray) -> np.ndarray:
+    return np.asarray(jax.device_get(x)).astype(np.float32)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
+                    rel_eb: float = 1e-6, interp: str = "cubic",
+                    lossless_small: int = 4096) -> Dict:
+    """Write ``tree`` (params or full TrainState) at ``step``.
+
+    Leaves smaller than ``lossless_small`` elements (norms, biases, scalars)
+    are stored raw — compression metadata would dominate.
+    """
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".step_{step}_")
+    leaves = {}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    total_raw = total_comp = 0
+    for path, leaf in flat:
+        lid = _leaf_id(path)
+        arr = _as_f32(leaf)
+        raw = arr.size * np.asarray(leaf).dtype.itemsize
+        if arr.size <= lossless_small or arr.ndim == 0:
+            blob = arr.tobytes()
+            kind = "raw"
+        else:
+            a2 = arr.reshape(arr.shape[0], -1) if arr.ndim > 2 else arr
+            blob = ipcomp.compress(a2, rel_eb, interp, relative=True)
+            kind = "ipc"
+        with open(os.path.join(tmp, lid + ".ipc"), "wb") as f:
+            f.write(blob)
+        leaves[lid] = dict(
+            kind=kind, shape=list(np.asarray(leaf).shape),
+            dtype=str(np.asarray(leaf).dtype),
+            comp_shape=list(a2.shape) if kind == "ipc" else None,
+            nbytes=len(blob),
+            sha=hashlib.sha256(blob).hexdigest()[:16])
+        total_raw += raw
+        total_comp += len(blob)
+    manifest = dict(step=step, rel_eb=rel_eb, interp=interp, leaves=leaves,
+                    total_raw=total_raw, total_comp=total_comp,
+                    treedef=str(treedef))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                        # atomic publish
+    with open(os.path.join(ckpt_dir, ".LATEST_tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(ckpt_dir, ".LATEST_tmp"),
+               os.path.join(ckpt_dir, "LATEST"))  # atomic pointer flip
+    return manifest
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    return int(open(p).read().strip())
+
+
+def _load_leaf(d: str, lid: str, meta: dict,
+               error_bound: Optional[float],
+               states: Optional[Dict] = None) -> np.ndarray:
+    blob = open(os.path.join(d, lid + ".ipc"), "rb").read()
+    if meta["kind"] == "raw":
+        arr = np.frombuffer(blob, np.float32).reshape(meta["shape"])
+        return arr.astype(np.dtype(meta["dtype"]))
+    if error_bound is None:
+        out = ipcomp.decompress(blob)
+    else:
+        reader = ipcomp.open_archive(blob)
+        st = states.get(lid) if states is not None else None
+        out, st = ipcomp.retrieve(reader, error_bound=error_bound, state=st)
+        if states is not None:
+            states[lid] = st
+    return out.reshape(meta["shape"]).astype(np.dtype(meta["dtype"]))
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Full-precision restore into the structure of ``like`` (re-sharding
+    against whatever mesh ``like``'s shardings carry)."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in flat:
+        lid = _leaf_id(path)
+        arr = _load_leaf(d, lid, manifest["leaves"][lid], None)
+        out.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(out)
+
+
+@dataclass
+class ProgressiveRestore:
+    """Carries per-leaf RetrievalStates between refinement rounds."""
+    dir: str
+    step: int
+    manifest: dict
+    states: Dict[str, Any]
+    bytes_read: int = 0
+
+
+def progressive_restore(ckpt_dir: str, step: int, like: Any, *,
+                        weight_error: float,
+                        session: Optional[ProgressiveRestore] = None
+                        ) -> Tuple[Any, ProgressiveRestore]:
+    """Coarse-first restore: load only the bitplanes needed for
+    ``weight_error`` (relative to each leaf's range).  Call again with the
+    returned session and a smaller bound to refine incrementally — only the
+    missing planes are read (Algorithm 2 at checkpoint scale)."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    if session is None:
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        session = ProgressiveRestore(dir=d, step=step, manifest=manifest,
+                                     states={})
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in flat:
+        lid = _leaf_id(path)
+        meta = session.manifest["leaves"][lid]
+        if meta["kind"] == "ipc":
+            # absolute bound per leaf: weight_error is relative to range
+            arr = _load_leaf(d, lid, meta, _abs_bound(d, lid, weight_error,
+                                                      session),
+                             session.states)
+        else:
+            arr = _load_leaf(d, lid, meta, None)
+        out.append(jax.numpy.asarray(arr))
+    session.bytes_read = sum(
+        st.bytes_read for st in session.states.values())
+    return treedef.unflatten(out), session
+
+
+def _abs_bound(d: str, lid: str, rel: float,
+               session: ProgressiveRestore) -> float:
+    st = session.states.get(lid)
+    if st is not None:
+        m = st.reader.meta
+    else:
+        blob = open(os.path.join(d, lid + ".ipc"), "rb").read()
+        from ..core.container import parse_meta
+        m = parse_meta(blob)
+    # eb stored absolute; manifest rel_eb relates it to the range
+    rng = m.eb / session.manifest["rel_eb"]
+    return max(rel * rng, m.eb)
+
+
+class CheckpointManager:
+    """keep_n rotation + restart helper for the training driver."""
+
+    def __init__(self, ckpt_dir: str, keep_n: int = 3, rel_eb: float = 1e-6):
+        self.dir = ckpt_dir
+        self.keep_n = keep_n
+        self.rel_eb = rel_eb
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save(self, step: int, tree: Any) -> Dict:
+        man = save_checkpoint(self.dir, step, tree, rel_eb=self.rel_eb)
+        self._gc()
+        return man
+
+    def _gc(self):
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(self.dir)
+                       if n.startswith("step_"))
+        for s in steps[: -self.keep_n]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like: Any) -> Tuple[Optional[int], Any]:
+        step = latest_step(self.dir)
+        if step is None:
+            return None, like
+        return step, restore_checkpoint(self.dir, step, like)

@@ -1,0 +1,3 @@
+from .grad import compress_gradients, compressed_psum, init_error_feedback
+
+__all__ = ["compress_gradients", "compressed_psum", "init_error_feedback"]

@@ -1,0 +1,39 @@
+"""Architecture registry: --arch <id> resolution."""
+import importlib
+from typing import Tuple
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+
+ARCHS = {
+    "whisper-tiny": "whisper_tiny",
+    "yi-6b": "yi_6b",
+    "command-r-35b": "command_r_35b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "smollm-360m": "smollm_360m",
+    "hymba-1.5b": "hymba_1_5b",
+    "mamba2-370m": "mamba2_370m",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "internvl2-1b": "internvl2_1b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.CONFIG
+
+
+def get_opt_kind(arch: str) -> str:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return getattr(mod, "OPT_KIND", "adamw")
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (DESIGN.md §6)."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, "full-attention arch: long_500k skipped (DESIGN.md §6)"
+    return True, ""

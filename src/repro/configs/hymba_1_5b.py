@@ -1,0 +1,11 @@
+"""hymba-1.5b [hybrid]: parallel attention + mamba heads per layer, sliding
+window attention (sub-quadratic -> runs long_500k).  [arXiv:2411.13676; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+    d_ff=5504, vocab=32001, head_dim=64,
+    ssm_state=16, ssm_head_dim=64, ssm_expand=2,
+    sliding_window=1024,
+)

@@ -1,0 +1,10 @@
+"""internvl2-1b [vlm]: InternViT frontend (stub: 256 patch embeddings via
+input_specs) + qwen2-arch LM backbone.  [arXiv:2404.16821; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b", family="vlm",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    d_ff=4864, vocab=151655, qkv_bias=True, head_dim=64,
+    rope_theta=1e6, frontend="vision_stub", n_prefix_embeds=256,
+)

@@ -1,0 +1,11 @@
+"""kimi-k2-1t-a32b [moe]: trillion-param MoE, 384 experts top-8 (paper-table
+config).  Adafactor states at this scale.  [arXiv:2501.kimi2; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=2048, vocab=163840, head_dim=112,
+    n_experts=384, top_k=8,
+)
+OPT_KIND = "adafactor"

@@ -1,0 +1,11 @@
+"""whisper-tiny [audio]: enc-dec, conv frontend stubbed (frame embeddings
+via input_specs).  [arXiv:2212.04356; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab=51865,
+    encoder_layers=4, encoder_seq=1500, frontend="audio_stub",
+    head_dim=64,
+)

@@ -1,0 +1,14 @@
+"""IPComp core: interpolation-based progressive error-bounded lossy compression.
+
+Public API:
+    compress(x, eb, interp)            -> archive bytes
+    decompress(buf)                    -> full-precision array
+    retrieve(buf, error_bound=|max_bytes=|bitrate=) -> (array, RetrievalState)
+    retrieve(reader, ..., state=state) -> incremental refinement (Algorithm 2)
+"""
+from .ipcomp import compress, decompress, retrieve, open_archive, RetrievalState
+from .interpolation import LINEAR, CUBIC
+from . import metrics
+
+__all__ = ["compress", "decompress", "retrieve", "open_archive",
+           "RetrievalState", "LINEAR", "CUBIC", "metrics"]

@@ -1,0 +1,21 @@
+"""Baseline compressors from the paper's evaluation (§6.1.3).
+
+All baselines share the zlib entropy backend (container has no zstd; see
+DESIGN.md §7) so speed/ratio comparisons measure the *algorithms*, not the
+entropy coder.
+
+  SZ3      — non-progressive interpolation compressor (ratio/speed reference)
+  SZ3M     — multi-fidelity: independent archives at a bound ladder
+  SZ3R     — progressive by residual re-compression (multi-pass retrieval)
+  ZFP      — orthogonal 4^d block-transform compressor
+  ZFPR     — residual-progressive ZFP
+  PMGARD   — multilevel hierarchical-basis (transform-mode) progressive
+"""
+from .sz3 import SZ3
+from .multifidelity import SZ3M
+from .residual import ResidualProgressive, SZ3R, ZFPR
+from .zfp import ZFP
+from .mgard import PMGARD
+
+__all__ = ["SZ3", "SZ3M", "SZ3R", "ZFP", "ZFPR", "PMGARD",
+           "ResidualProgressive"]

@@ -1,0 +1,63 @@
+"""Shared helpers for baseline compressors."""
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+from typing import List, Tuple
+
+import numpy as np
+
+ZLEVEL = 6
+
+
+def zigzag(q: np.ndarray) -> np.ndarray:
+    """Signed -> unsigned interleave, keeps small |q| in few bytes."""
+    q = q.astype(np.int64)
+    return ((q << 1) ^ (q >> 63)).astype(np.uint32)
+
+
+def unzigzag(u: np.ndarray) -> np.ndarray:
+    u = u.astype(np.uint32).astype(np.int64)
+    return (u >> 1) ^ -(u & 1)
+
+
+def byteplane_encode(q: np.ndarray) -> bytes:
+    """Zigzag + byte-plane split + zlib (SZ3's Huffman+zstd stand-in).
+
+    Byte-plane decomposition keeps high bytes (mostly zero) in long runs,
+    which zlib exploits — same role Huffman+zstd plays in SZ3.
+    """
+    u = zigzag(q)
+    planes = [((u >> np.uint32(8 * k)) & np.uint32(0xFF)).astype(np.uint8)
+              for k in range(4)]
+    blobs = [zlib.compress(p.tobytes(), ZLEVEL) for p in planes]
+    head = struct.pack("<Q4I", q.size, *[len(b) for b in blobs])
+    return head + b"".join(blobs)
+
+
+def byteplane_decode(buf: bytes) -> Tuple[np.ndarray, int]:
+    n, *sizes = struct.unpack("<Q4I", buf[:24])
+    off = 24
+    u = np.zeros(n, np.uint32)
+    for k in range(4):
+        raw = zlib.decompress(buf[off:off + sizes[k]])
+        u |= np.frombuffer(raw, np.uint8).astype(np.uint32) << np.uint32(8 * k)
+        off += sizes[k]
+    return unzigzag(u), off
+
+
+def pack_sections(meta: dict, sections: List[bytes]) -> bytes:
+    meta = dict(meta, sections=[len(s) for s in sections])
+    hj = json.dumps(meta, separators=(",", ":")).encode()
+    return struct.pack("<I", len(hj)) + hj + b"".join(sections)
+
+
+def unpack_sections(buf: bytes) -> Tuple[dict, List[bytes]]:
+    (hlen,) = struct.unpack("<I", buf[:4])
+    meta = json.loads(buf[4:4 + hlen].decode())
+    out, off = [], 4 + hlen
+    for sz in meta["sections"]:
+        out.append(buf[off:off + sz])
+        off += sz
+    return meta, out

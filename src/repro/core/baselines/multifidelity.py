@@ -1,0 +1,58 @@
+"""SZ3-M: multi-fidelity via independent archives (paper §6.1.3).
+
+Compresses the input at a ladder of error bounds (2^16 eb ... eb, factor 4
+apart) and stores all archives together.  Supports multi-fidelity retrieval
+but is NOT progressive: each retrieval decompresses one archive from
+scratch; nothing is reused between fidelity levels.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .sz3 import SZ3
+from . import common
+
+LADDER = [2 ** k for k in range(16, -1, -2)]  # 2^16 eb ... eb
+
+
+class SZ3M:
+    name = "sz3m"
+
+    def __init__(self, interp: str = "cubic"):
+        self.base = SZ3(interp)
+
+    def compress(self, x: np.ndarray, eb: float) -> bytes:
+        sections = [self.base.compress(x, eb * f) for f in LADDER]
+        meta = dict(eb=eb, ladder=LADDER)
+        return common.pack_sections(meta, sections)
+
+    def decompress(self, buf: bytes) -> np.ndarray:
+        _, secs = common.unpack_sections(buf)
+        return self.base.decompress(secs[-1])
+
+    def retrieve(self, buf: bytes, error_bound: Optional[float] = None,
+                 max_bytes: Optional[int] = None
+                 ) -> Tuple[np.ndarray, int, int]:
+        """Returns (output, bytes_read, decompression_passes)."""
+        meta, secs = common.unpack_sections(buf)
+        eb = meta["eb"]
+        pick = len(secs) - 1
+        if error_bound is not None:
+            for i, f in enumerate(meta["ladder"]):
+                if eb * f <= error_bound:
+                    pick = i
+                    break
+        elif max_bytes is not None:
+            pick = 0
+            for i in range(len(secs)):
+                if len(secs[i]) <= max_bytes:
+                    pick = i  # largest archive under budget (finest fitting)
+            # ladder sizes grow with precision; choose the biggest that fits
+            best = None
+            for i, s in enumerate(secs):
+                if len(s) <= max_bytes and (best is None or len(s) > len(secs[best])):
+                    best = i
+            pick = best if best is not None else 0
+        return self.base.decompress(secs[pick]), len(secs[pick]), 1

@@ -1,0 +1,81 @@
+"""Residual-based progressive wrappers: SZ3-R / ZFP-R (paper §6.1.3).
+
+Compress at a large bound, then repeatedly compress the residual error at a
+4x smaller bound until the target eb is reached (9 rungs: 2^16 eb .. eb).
+Retrieval at fidelity rung k must load AND decompress rungs 0..k — the
+multi-pass cost the paper criticizes.  Only the ladder's bounds are
+retrievable (no arbitrary-eb support).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from . import common
+from .sz3 import SZ3
+from .zfp import ZFP
+
+LADDER = [2 ** k for k in range(16, -1, -2)]
+
+
+class ResidualProgressive:
+    def __init__(self, base, name: str):
+        self.base = base
+        self.name = name
+
+    def compress(self, x: np.ndarray, eb: float) -> bytes:
+        x64 = np.asarray(x, np.float64)
+        sections = []
+        recon = np.zeros_like(x64)
+        for f in LADDER:
+            blob = self.base.compress((x64 - recon).astype(x.dtype), eb * f)
+            sections.append(blob)
+            recon = recon + np.asarray(self.base.decompress(blob), np.float64)
+        meta = dict(eb=eb, ladder=LADDER, dtype=str(x.dtype))
+        return common.pack_sections(meta, sections)
+
+    def decompress(self, buf: bytes) -> np.ndarray:
+        out, _, _ = self.retrieve(buf)
+        return out
+
+    def retrieve(self, buf: bytes, error_bound: Optional[float] = None,
+                 max_bytes: Optional[int] = None
+                 ) -> Tuple[np.ndarray, int, int]:
+        """Returns (output, bytes_read, decompression_passes)."""
+        meta, secs = common.unpack_sections(buf)
+        eb = meta["eb"]
+        upto = len(secs)
+        if error_bound is not None:
+            upto = len(secs)
+            for i, f in enumerate(meta["ladder"]):
+                if eb * f <= error_bound:
+                    upto = i + 1
+                    break
+        elif max_bytes is not None:
+            tot, upto = 0, 0
+            for i, s in enumerate(secs):
+                if tot + len(s) > max_bytes:
+                    break
+                tot += len(s)
+                upto = i + 1
+            upto = max(upto, 1) if len(secs[0]) <= (max_bytes or 0) else upto
+        out = None
+        bytes_read = 0
+        for i in range(upto):
+            part = np.asarray(self.base.decompress(secs[i]), np.float64)
+            out = part if out is None else out + part
+            bytes_read += len(secs[i])
+        if out is None:  # nothing fits the budget: coarsest rung anyway
+            out = np.asarray(self.base.decompress(secs[0]), np.float64)
+            bytes_read = len(secs[0])
+            upto = 1
+        return out.astype(np.dtype(meta["dtype"])), bytes_read, upto
+
+
+def SZ3R(interp: str = "cubic") -> ResidualProgressive:
+    return ResidualProgressive(SZ3(interp), "sz3r")
+
+
+def ZFPR() -> ResidualProgressive:
+    return ResidualProgressive(ZFP(), "zfpr")

@@ -1,0 +1,101 @@
+"""ZFP-like orthogonal block-transform compressor (paper §2, §6.1.3).
+
+4^d blocks, separable orthonormal 4-point DCT-II per dimension ("nearly
+orthogonal block transform"), uniform coefficient quantization, byteplane
+entropy coding.  Error control is transform-model style: the coefficient
+bound is eb / ||T^-1||_inf^d (Eq. 3's amplification — the structural
+disadvantage vs prediction models the paper analyzes in §4.2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import common
+
+_B = 4  # block edge
+
+
+def _dct4() -> np.ndarray:
+    k = np.arange(_B)[:, None]
+    n = np.arange(_B)[None, :]
+    m = np.cos(np.pi * (2 * n + 1) * k / (2 * _B))
+    m[0] *= np.sqrt(1.0 / _B)
+    m[1:] *= np.sqrt(2.0 / _B)
+    return m  # orthonormal: m @ m.T == I
+
+
+_T = _dct4()
+_TINV_NORM = float(np.abs(_T.T).sum(axis=1).max())  # ||T^-1||_inf per dim
+
+
+def _pad(x: np.ndarray) -> np.ndarray:
+    pads = [(0, (-s) % _B) for s in x.shape]
+    return np.pad(x, pads, mode="edge")
+
+
+def _apply(x: np.ndarray, mat: np.ndarray) -> np.ndarray:
+    for ax in range(x.ndim):
+        x = np.moveaxis(np.tensordot(mat, np.moveaxis(x, ax, 0), axes=(1, 0)), 0, ax)
+    return x
+
+
+def _blockify(x: np.ndarray):
+    nd = x.ndim
+    shape = x.shape
+    nb = [s // _B for s in shape]
+    view = x.reshape([v for s in nb for v in (s, _B)])
+    # (n0,4,n1,4,...) -> (n0,n1,...,4,4,...)
+    perm = [2 * i for i in range(nd)] + [2 * i + 1 for i in range(nd)]
+    return view.transpose(perm), nb
+
+
+def _unblockify(blocks: np.ndarray, nb, nd) -> np.ndarray:
+    perm = []
+    for i in range(nd):
+        perm += [i, nd + i]
+    x = blocks.transpose(perm)
+    return x.reshape([n * _B for n in nb])
+
+
+class ZFP:
+    name = "zfp"
+
+    def compress(self, x: np.ndarray, eb: float) -> bytes:
+        x = np.asarray(x)
+        orig_shape = x.shape
+        xp = _pad(x.astype(np.float64))
+        blocks, nb = _blockify(xp)
+        nd = x.ndim
+        # transform the trailing nd axes (each of size 4)
+        c = blocks
+        for ax in range(nd, 2 * nd):
+            c = np.moveaxis(np.tensordot(_T, np.moveaxis(c, ax, 0), axes=(1, 0)), 0, ax)
+        eb_c = eb / (_TINV_NORM ** nd)
+        q = np.rint(c / (2.0 * eb_c)).astype(np.int64)
+        big = (q > (1 << 40)) | (q < -(1 << 40))
+        esc_i = np.flatnonzero(big.ravel())
+        esc_v = c.ravel()[esc_i] if esc_i.size else np.zeros(0)
+        q.ravel()[esc_i] = 0
+        sections = [common.byteplane_encode(np.clip(q, -(1 << 31), (1 << 31) - 1)),
+                    esc_i.astype(np.int64).tobytes(),
+                    np.asarray(esc_v, np.float64).tobytes()]
+        meta = dict(shape=list(orig_shape), dtype=str(x.dtype), eb=eb,
+                    nb=nb, nd=nd, qshape=list(q.shape))
+        return common.pack_sections(meta, sections)
+
+    def decompress(self, buf: bytes) -> np.ndarray:
+        meta, secs = common.unpack_sections(buf)
+        q, _ = common.byteplane_decode(secs[0])
+        q = q.astype(np.float64).reshape(meta["qshape"])
+        esc_i = np.frombuffer(secs[1], np.int64)
+        esc_v = np.frombuffer(secs[2], np.float64)
+        nd = meta["nd"]
+        eb_c = meta["eb"] / (_TINV_NORM ** nd)
+        c = q * (2.0 * eb_c)
+        if esc_i.size:
+            c.ravel()[esc_i] = esc_v
+        for ax in range(nd, 2 * nd):
+            c = np.moveaxis(np.tensordot(_T.T, np.moveaxis(c, ax, 0), axes=(1, 0)), 0, ax)
+        xp = _unblockify(c, meta["nb"], nd)
+        sl = tuple(slice(0, s) for s in meta["shape"])
+        return xp[sl].astype(np.dtype(meta["dtype"]))

@@ -1,0 +1,102 @@
+"""Bitplane split + predictive XOR coding (paper §4.4.1) + lossless backend.
+
+Each level's negabinary integers are sliced into bitplanes (bit k of every
+integer forms plane k).  Planes are stored MSB-first so progressively loading
+a *prefix* of planes refines precision.  Cross-bitplane correlation is
+recovered with 2-bit-prefix predictive coding:
+
+    enc_k = b_{k+2} ^ b_{k+1} ^ b_k        (prefix = two more-significant bits)
+
+which the paper's Table 2 shows minimizes entropy.  Encoded planes are
+bit-packed and zlib-compressed independently, so any prefix of planes is
+independently decodable (the "blocks" of Fig. 2).
+"""
+from __future__ import annotations
+
+import zlib
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+ZLEVEL = 6
+
+
+def split_planes(nb: np.ndarray, nbits: int) -> List[np.ndarray]:
+    """uint32 negabinary -> list of uint8 bit arrays, index k = bit k."""
+    return [((nb >> np.uint32(k)) & np.uint32(1)).astype(np.uint8)
+            for k in range(nbits)]
+
+
+def join_planes(planes: List[Optional[np.ndarray]], n: int) -> np.ndarray:
+    """Inverse of split_planes; missing (None) planes contribute 0."""
+    nb = np.zeros(n, np.uint32)
+    for k, p in enumerate(planes):
+        if p is not None:
+            nb |= p.astype(np.uint32) << np.uint32(k)
+    return nb
+
+
+def xor_encode(planes: List[np.ndarray]) -> List[np.ndarray]:
+    """enc_k = b_k ^ b_{k+1} ^ b_{k+2} (more-significant planes are prefix)."""
+    nb = len(planes)
+    out = []
+    for k in range(nb):
+        e = planes[k]
+        if k + 1 < nb:
+            e = e ^ planes[k + 1]
+        if k + 2 < nb:
+            e = e ^ planes[k + 2]
+        out.append(e)
+    return out
+
+
+def xor_decode_plane(enc_k: np.ndarray, b_k1: Optional[np.ndarray],
+                     b_k2: Optional[np.ndarray]) -> np.ndarray:
+    """Decode plane k given already-loaded planes k+1, k+2 (None if absent)."""
+    b = enc_k
+    if b_k1 is not None:
+        b = b ^ b_k1
+    if b_k2 is not None:
+        b = b ^ b_k2
+    return b
+
+
+def compress_plane(bits: np.ndarray) -> bytes:
+    """Pack a 0/1 uint8 array and zlib it. All-zero planes compress to b''."""
+    if bits.size == 0 or not bits.any():
+        return b""
+    return zlib.compress(np.packbits(bits).tobytes(), ZLEVEL)
+
+
+def decompress_plane(blob: bytes, n: int) -> np.ndarray:
+    if not blob:
+        return np.zeros(n, np.uint8)
+    raw = np.frombuffer(zlib.decompress(blob), np.uint8)
+    return np.unpackbits(raw, count=n)
+
+
+def encode_level(nb: np.ndarray) -> Tuple[List[bytes], int]:
+    """negabinary ints -> (blobs MSB-first, nbits). blobs[i] is plane nbits-1-i."""
+    nbits = int(nb.max()).bit_length() if nb.size else 0
+    if nbits == 0:
+        return [], 0
+    planes = split_planes(nb, nbits)
+    enc = xor_encode(planes)
+    blobs = [compress_plane(enc[k]) for k in range(nbits - 1, -1, -1)]
+    return blobs, nbits
+
+
+def decode_level(blobs: List[Optional[bytes]], nbits: int, n: int) -> np.ndarray:
+    """Prefix of MSB-first blobs (None = not loaded) -> truncated negabinary."""
+    planes: List[Optional[np.ndarray]] = [None] * nbits
+    for i, blob in enumerate(blobs):
+        k = nbits - 1 - i
+        if blob is None:
+            break  # prefix property: once a plane is missing, rest are too
+        enc_k = decompress_plane(blob, n)
+        planes[k] = xor_decode_plane(
+            enc_k,
+            planes[k + 1] if k + 1 < nbits else None,
+            planes[k + 2] if k + 2 < nbits else None,
+        )
+    return join_planes(planes, n)

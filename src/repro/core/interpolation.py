@@ -1,0 +1,205 @@
+"""Multi-level interpolation predictor (paper §4.1–§4.3).
+
+The data grid is decomposed into L orthogonal levels.  Level ``l``
+(l = L..1, finest = 1) predicts the points whose finest stride is
+s = 2**(l-1) from the already-reconstructed points at stride 2*s, sweeping
+dimension-by-dimension (Fig. 3).  Interpolation is used as a *prediction*
+model: each level predicts from the lossy reconstruction ``xhat`` of the
+previous level, so quantization error never amplifies (Eq. 4), unlike
+transform models where ||T^-1||_inf can be O(n) (Eq. 3).
+
+Formulas (paper Eq. 1/2):
+  linear:  y_i = (x_{i-s} + x_{i+s}) / 2                        L_inf(P) = 1
+  cubic:   y_i = (-x_{i-3s} + 9 x_{i-s} + 9 x_{i+s} - x_{i+3s})/16
+                                                               L_inf(P) = 1.25
+Boundary fallback: cubic -> linear -> copy-left.
+
+Traversal order is shared verbatim by the compressor and the decompressor;
+the quantized residual stream is the concatenation of every (level, phase)
+target block in C order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+LINEAR = "linear"
+CUBIC = "cubic"
+
+#: L_inf norm of the prediction operator, used by Theorem 1 (p^l factors).
+PRED_NORM = {LINEAR: 1.0, CUBIC: 1.25}
+
+
+def num_levels(shape: Sequence[int]) -> int:
+    """L such that the anchor grid (stride 2^L) collapses to index 0 per dim."""
+    m = int(max(shape))
+    L = 1
+    while (1 << L) < m:
+        L += 1
+    return L
+
+
+def anchor_slices(shape: Sequence[int], L: int) -> Tuple[slice, ...]:
+    s = 1 << L
+    return tuple(slice(0, None, s) for _ in shape)
+
+
+@dataclass(frozen=True)
+class Phase:
+    """One dimension-sweep inside a level."""
+    level: int          # L..1
+    stride: int         # 2**(level-1)
+    dim: int            # axis being interpolated
+    view: Tuple[slice, ...]   # restriction of the full array for this phase
+    targets: np.ndarray       # target indices along `dim` (odd multiples of stride)
+    n_dim: int                # full extent along `dim`
+    count: int                # number of scalars predicted in this phase
+
+
+def iter_phases(shape: Sequence[int], L: int) -> Iterator[Phase]:
+    """Deterministic (level, dim) traversal shared by comp/decomp."""
+    ndim = len(shape)
+    for level in range(L, 0, -1):
+        s = 1 << (level - 1)
+        for d in range(ndim):
+            targets = np.arange(s, shape[d], 2 * s)
+            if targets.size == 0:
+                continue
+            view = tuple(
+                slice(0, None, s) if dd < d else
+                (slice(None) if dd == d else slice(0, None, 2 * s))
+                for dd in range(ndim)
+            )
+            cnt = targets.size
+            for dd in range(ndim):
+                if dd < d:
+                    cnt *= len(range(0, shape[dd], s))
+                elif dd > d:
+                    cnt *= len(range(0, shape[dd], 2 * s))
+            yield Phase(level, s, d, view, targets, shape[d], cnt)
+
+
+def level_sizes(shape: Sequence[int], L: int) -> List[int]:
+    """Number of predicted scalars per level, index 0 = level L (coarsest)."""
+    sizes = [0] * L
+    for ph in iter_phases(shape, L):
+        sizes[L - ph.level] += ph.count
+    return sizes
+
+
+def _bcast(mask: np.ndarray, axis: int, ndim: int) -> np.ndarray:
+    shp = [1] * ndim
+    shp[axis] = mask.size
+    return mask.reshape(shp)
+
+
+def predict_block(view: np.ndarray, axis: int, idx: np.ndarray, s: int,
+                  n: int, interp: str) -> np.ndarray:
+    """Interpolate values at ``idx`` (odd multiples of s) along ``axis``.
+
+    ``view`` holds the already-known values (previous level at 2s multiples).
+    Pure gather/arith — linear in the data, which Algorithm 2 (incremental
+    delta reconstruction) relies on.
+    """
+    nd = view.ndim
+    l1 = np.take(view, idx - s, axis=axis)
+    r_ok = idx + s <= n - 1
+    r1 = np.take(view, np.minimum(idx + s, n - 1), axis=axis)
+    lin = 0.5 * (l1 + r1)
+    if interp == LINEAR:
+        return np.where(_bcast(r_ok, axis, nd), lin, l1)
+    ll_ok = idx - 3 * s >= 0
+    rr_ok = idx + 3 * s <= n - 1
+    l3 = np.take(view, np.maximum(idx - 3 * s, 0), axis=axis)
+    r3 = np.take(view, np.minimum(idx + 3 * s, n - 1), axis=axis)
+    cub = (-l3 + 9.0 * l1 + 9.0 * r1 - r3) / 16.0
+    pred = np.where(_bcast(ll_ok & rr_ok & r_ok, axis, nd), cub,
+                    np.where(_bcast(r_ok, axis, nd), lin, l1))
+    return pred
+
+
+def _assign(view: np.ndarray, axis: int, idx: np.ndarray, vals: np.ndarray) -> None:
+    view[(slice(None),) * axis + (idx,)] = vals
+
+
+def decorrelate(x: np.ndarray, eb: float, interp: str,
+                quantizer: Callable[[np.ndarray, np.ndarray], Tuple],
+                ) -> Tuple[np.ndarray, List[np.ndarray], List[List[Tuple]], np.ndarray]:
+    """Compression-side sweep.
+
+    ``quantizer(residual, tvals) -> (q, recon_residual, (esc_idx, esc_vals))``
+    returns int64 bins, the dequantized residual, and escape records holding
+    the block-local flat indices and *absolute original values* of points the
+    quantizer cannot represent.  Escapes are applied as exact overwrites —
+    storing residuals would lose the value to catastrophic cancellation when
+    |pred| >> |x|.
+
+    Returns (xhat, per-level q arrays [index 0 = level L], per-level escape
+    records with level-global indices, anchors).
+    """
+    shape = x.shape
+    L = num_levels(shape)
+    xhat = np.zeros_like(x, dtype=np.float64)
+    anc = anchor_slices(shape, L)
+    anchors = np.array(x[anc], np.float64, copy=True)
+    xhat[anc] = anchors  # P_L(0) replaced by exact anchors (lossless channel)
+
+    qs: List[List[np.ndarray]] = [[] for _ in range(L)]
+    escs: List[List[Tuple]] = [[] for _ in range(L)]
+    offsets = [0] * L
+    for ph in iter_phases(shape, L):
+        xv = x[ph.view]
+        hv = xhat[ph.view]
+        pred = predict_block(hv, ph.dim, ph.targets, ph.stride, ph.n_dim, interp)
+        tvals = np.take(xv, ph.targets, axis=ph.dim).astype(np.float64)
+        q, recon_res, esc = quantizer(tvals - pred, tvals)
+        flat, vals = esc
+        block = pred + recon_res
+        if flat.size:
+            block.reshape(-1)[flat] = vals  # exact overwrite, no cancellation
+        _assign(hv, ph.dim, ph.targets, block)
+        li = L - ph.level
+        qs[li].append(q.ravel())
+        escs[li].append((flat + offsets[li], vals))  # level-global indices
+        offsets[li] += q.size
+    return xhat, [np.concatenate(v) if v else np.zeros(0, np.int64) for v in qs], escs, anchors
+
+
+def reconstruct(shape: Sequence[int], interp: str, anchors: np.ndarray,
+                yhat_per_level: List[np.ndarray],
+                overrides: Optional[List[Tuple[np.ndarray, np.ndarray]]] = None,
+                out_dtype=np.float64) -> np.ndarray:
+    """Decompression-side sweep (Algorithm 1 core).
+
+    ``yhat_per_level[i]`` is the dequantized residual stream for level L-i.
+    ``overrides[i]`` = (stream_idx, values): positions whose output is set to
+    ``values`` exactly instead of pred+res (the lossless escape channel; for
+    Algorithm 2's delta cascade the values are zeros, since escaped points
+    never change across refinements).  Aside from overrides, purely linear in
+    (anchors, yhat): the same routine reconstructs incremental deltas by
+    feeding zero anchors and residual *differences*.
+    """
+    L = num_levels(shape)
+    xhat = np.zeros(shape, np.float64)
+    xhat[anchor_slices(shape, L)] = anchors
+    offs = [0] * L
+    for ph in iter_phases(shape, L):
+        hv = xhat[ph.view]
+        pred = predict_block(hv, ph.dim, ph.targets, ph.stride, ph.n_dim, interp)
+        li = L - ph.level
+        lo = offs[li]
+        res = yhat_per_level[li][lo: lo + ph.count]
+        offs[li] += ph.count
+        tgt_shape = list(hv.shape)
+        tgt_shape[ph.dim] = ph.targets.size
+        block = pred + res.reshape(tgt_shape)
+        if overrides is not None:
+            oidx, ovals = overrides[li]
+            if oidx.size:
+                sel = (oidx >= lo) & (oidx < lo + ph.count)
+                if sel.any():
+                    block.reshape(-1)[oidx[sel] - lo] = ovals[sel]
+        _assign(hv, ph.dim, ph.targets, block)
+    return xhat.astype(out_dtype)

@@ -1,0 +1,202 @@
+"""IPComp public API: compress / retrieve / refine (paper Algorithms 1 & 2).
+
+Compression pipeline (Fig. 2):
+  x --interpolation predictor--> residuals y_l --quantize--> q_l
+    --negabinary--> nb_l --bitplanes + XOR predictive coding--> blobs
+    --container--> archive bytes
+
+Retrieval: the DP loader (§5) plans the minimum bitplane set for the
+requested error bound / bitrate; a single reconstruction pass produces the
+output (no multi-pass residual decompression).  ``refine`` implements
+Algorithm 2: it loads only the *additional* bitplanes and pushes a linear
+delta cascade on top of the previous reconstruction.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import bitplane, container, interpolation, loader, negabinary, quantize
+from .container import ArchiveReader
+from .loader import LoadPlan
+
+
+# ----------------------------------------------------------------- compress
+
+def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
+             relative: bool = False) -> bytes:
+    """Compress ``x`` with point-wise error bound ``eb``.
+
+    ``relative=True`` interprets eb as a fraction of the value range.
+    """
+    x = np.asarray(x)
+    if relative:
+        eb = eb * (float(x.max()) - float(x.min()) or 1.0)
+    if eb <= 0:
+        raise ValueError("error bound must be positive")
+    shape, dtype = x.shape, x.dtype
+    L = interpolation.num_levels(shape)
+    esc_records: List[List[Tuple[np.ndarray, np.ndarray]]] = [[] for _ in range(L)]
+
+    def quantizer(res: np.ndarray, tvals: np.ndarray):
+        q = quantize.quantize(res, eb)
+        esc = quantize.escape_mask(q)
+        recon = quantize.dequantize(q, eb)
+        if esc.any():
+            flat = np.flatnonzero(esc.ravel())
+            vals = tvals.ravel()[flat].astype(np.float64)  # absolute values
+            q.ravel()[flat] = 0
+            return q, recon, (flat, vals)
+        return q, recon, (np.zeros(0, np.int64), np.zeros(0, np.float64))
+
+    _, qs, escs, anchors = interpolation.decorrelate(
+        x.astype(np.float64), eb, interp, quantizer)
+
+    level_blobs, level_meta, esc_blobs = [], [], []
+    for li in range(L):
+        q = qs[li]
+        nb = negabinary.to_negabinary(q)
+        blobs, nbits = bitplane.encode_level(nb)
+        delta = negabinary.truncation_loss_table(nb, nbits, eb)
+        level_blobs.append(blobs)
+        level_meta.append(dict(level=L - li, n=int(q.size), nbits=nbits,
+                               delta_table=delta.tolist()))
+        esc_blobs.append(_pack_escapes(escs[li]))
+    return container.write_archive(shape, dtype, eb, interp, L, anchors,
+                                   level_blobs, level_meta, esc_blobs)
+
+
+def _pack_escapes(phase_escs) -> bytes:
+    """Escape records (level-global flat idx, exact residuals) -> one blob."""
+    idx_parts = [i for i, v in phase_escs if i.size]
+    val_parts = [v for i, v in phase_escs if i.size]
+    if not idx_parts:
+        return b""
+    idx = np.concatenate(idx_parts).astype(np.int64)
+    val = np.concatenate(val_parts).astype(np.float64)
+    raw = np.int64(idx.size).tobytes() + idx.tobytes() + val.tobytes()
+    return zlib.compress(raw, 6)
+
+
+def _unpack_escapes(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
+    if not blob:
+        return np.zeros(0, np.int64), np.zeros(0, np.float64)
+    raw = zlib.decompress(blob)
+    n = int(np.frombuffer(raw[:8], np.int64)[0])
+    idx = np.frombuffer(raw[8:8 + 8 * n], np.int64)
+    val = np.frombuffer(raw[8 + 8 * n:], np.float64)
+    return idx, val
+
+
+# ----------------------------------------------------------------- retrieve
+
+@dataclass
+class RetrievalState:
+    """Progressive state carried between retrievals (Algorithm 2)."""
+    reader: ArchiveReader
+    planes_loaded: List[int]              # per level, MSB-first count
+    nb_partial: List[np.ndarray]          # truncated negabinary per level
+    esc_idx: List[np.ndarray]             # escape stream positions per level
+    xhat: np.ndarray                      # current reconstruction
+    err_bound: float
+    bytes_read: int = 0
+
+
+def open_archive(buf: bytes) -> ArchiveReader:
+    return ArchiveReader(buf)
+
+
+def _initial_state(reader: ArchiveReader) -> RetrievalState:
+    """Coarsest approximation: anchors + escapes only, zero bitplanes."""
+    m = reader.meta
+    anchors = reader.anchors()
+    yhat, overrides = [], []
+    for li, lv in enumerate(m.levels):
+        yhat.append(np.zeros(lv.n, np.float64))
+        idx, val = _unpack_escapes(reader.escapes(li))
+        overrides.append((idx, val))
+    xhat = interpolation.reconstruct(m.shape, m.interp, anchors, yhat,
+                                     overrides=overrides)
+    full_err = m.eb + sum(
+        float(lv.delta_table[lv.nbits]) *
+        loader._prop_factor(m, lv.level, loader.SAFE)
+        for lv in m.levels)
+    return RetrievalState(reader=reader,
+                          planes_loaded=[0] * len(m.levels),
+                          nb_partial=[np.zeros(lv.n, np.uint32) for lv in m.levels],
+                          esc_idx=[o[0] for o in overrides],
+                          xhat=xhat, err_bound=full_err,
+                          bytes_read=reader.bytes_read)
+
+
+def retrieve(buf_or_reader, error_bound: Optional[float] = None,
+             max_bytes: Optional[int] = None,
+             bitrate: Optional[float] = None,
+             propagation: str = loader.SAFE,
+             state: Optional[RetrievalState] = None,
+             ) -> Tuple[np.ndarray, RetrievalState]:
+    """Single-pass progressive retrieval.
+
+    Exactly one of (error_bound, max_bytes, bitrate) selects the plan; None
+    of them = full-precision.  Pass ``state`` from a previous call to refine
+    incrementally (Algorithm 2) — only missing bitplanes are fetched.
+    """
+    reader = buf_or_reader if isinstance(buf_or_reader, ArchiveReader) \
+        else ArchiveReader(buf_or_reader)
+    m = reader.meta
+    if bitrate is not None:
+        max_bytes = int(bitrate * m.n_elements / 8)
+    if error_bound is not None:
+        plan = loader.plan_error_mode(m, error_bound, propagation)
+    elif max_bytes is not None:
+        plan = loader.plan_bitrate_mode(m, max_bytes, propagation)
+    else:
+        plan = loader.plan_full(m)
+
+    if state is None:
+        state = _initial_state(reader)
+    delta_y: List[np.ndarray] = []
+    any_new = False
+    for li, lv in enumerate(m.levels):
+        have = state.planes_loaded[li]
+        want = max(have, plan.keep_planes[li])  # refinement never drops planes
+        if want > have:
+            any_new = True
+            blobs: List[Optional[bytes]] = [None] * lv.nbits
+            # XOR decode needs planes k+1, k+2; re-decode the prefix from the
+            # already-fetched blobs (reader caches fetched ranges; re-reads of
+            # the same tag are not double-counted).
+            for i in range(want):
+                blobs[i] = reader.plane(li, i)
+            nb_new = bitplane.decode_level(blobs, lv.nbits, lv.n)
+            dq = negabinary.from_negabinary(nb_new) - \
+                negabinary.from_negabinary(state.nb_partial[li])
+            delta_y.append(dq.astype(np.float64) * 2.0 * m.eb)
+            state.nb_partial[li] = nb_new
+            state.planes_loaded[li] = want
+        else:
+            delta_y.append(np.zeros(lv.n, np.float64))
+    if any_new:
+        zero_anchors = np.zeros(m.anchors_shape, np.float64)
+        # escaped points are exact from the first pass: their delta is pinned 0
+        zero_ovr = [(idx, np.zeros(idx.size)) for idx in state.esc_idx]
+        delta = interpolation.reconstruct(m.shape, m.interp, zero_anchors,
+                                          delta_y, overrides=zero_ovr)
+        state.xhat = state.xhat + delta
+    # achieved bound: from the *union* of loaded planes
+    errs, _ = loader._level_cost_tables(m, propagation)
+    state.err_bound = m.eb + sum(
+        float(errs[li][lv.nbits - state.planes_loaded[li]])
+        for li, lv in enumerate(m.levels))
+    state.bytes_read = reader.bytes_read
+    out = state.xhat.astype(np.dtype(m.dtype))
+    return out, state
+
+
+def decompress(buf: bytes) -> np.ndarray:
+    """Full-precision decompression (error <= eb everywhere)."""
+    out, _ = retrieve(buf)
+    return out

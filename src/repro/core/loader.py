@@ -1,0 +1,184 @@
+"""Optimized data loading (paper §5): knapsack DP over (level x bitplanes).
+
+Two modes:
+  * error-bound mode (§5.2): minimize loaded bytes s.t.
+        sum_l p^(l-1) * delta_y_l(b_l) + eb <= E
+  * bitrate / fixed-size mode (§5.3): minimize the error bound s.t.
+        sum_l LoadedSize(l, b_l) <= S
+
+``b_l`` = number of LSB planes discarded at level l.  delta_y_l(b) is the
+exact per-level truncation loss table pre-computed at compression time
+(container header), p = L_inf(P) (1.0 linear / 1.25 cubic, Theorem 1).
+
+The DP discretizes the continuous budget into ``NBUCKETS`` units (the paper
+normalizes E/eb into [128, 1023]); costs are rounded UP when consuming
+budget, so the returned plan is always feasible (conservative).
+
+``propagation="paper"`` uses Theorem 1's p^(l-1).  ``propagation="safe"``
+uses p^((l-1+1)*ndim_phases) — an upper bound that also covers within-level
+dimension-sequential amplification (see DESIGN.md §3); used by the
+adversarial property tests.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .container import ArchiveMeta
+from .interpolation import PRED_NORM
+
+NBUCKETS = 1024
+PAPER = "paper"
+SAFE = "safe"
+
+
+@dataclass
+class LoadPlan:
+    keep_planes: List[int]        # planes to load per level (MSB-first count)
+    loaded_bytes: int             # data bytes the plan touches (excl. header)
+    err_bound: float              # guaranteed L_inf bound of the plan
+    mode: str
+
+
+def _prop_factor(meta: ArchiveMeta, level: int, propagation: str) -> float:
+    """Amplification applied to level ``level``'s truncation loss (level 1 = finest).
+
+    PAPER: Theorem 1's p^(l-1).  SAFE: corrected bound that also accounts for
+    within-level dimension-sequential propagation.  Per level, a phase-d
+    target's delta obeys e_d = p*e_{d-1} + delta_l over ndim phases, so level
+    l contributes (sum_{k<ndim} p^k) * p^(ndim*(l-1)) * delta_l.  Empirically
+    the paper's factor under-covers cubic 3D by up to ~2.3x (see
+    EXPERIMENTS.md §Repro-findings); SAFE is the default so the paper's
+    "error guarantee" objective actually holds.
+    """
+    p = PRED_NORM[meta.interp]
+    if propagation == PAPER:
+        return p ** (level - 1)
+    ndim = len(meta.shape)
+    geo = sum(p ** k for k in range(ndim))
+    return geo * p ** (ndim * (level - 1))
+
+
+def _level_cost_tables(meta: ArchiveMeta, propagation: str):
+    """Per level: arrays over b (0..nbits) of [propagated error, loaded bytes]."""
+    errs, sizes = [], []
+    for li, lv in enumerate(meta.levels):
+        f = _prop_factor(meta, lv.level, propagation)
+        e = np.asarray(lv.delta_table, np.float64) * f          # err(l, b)
+        tot = np.cumsum([0] + lv.plane_sizes)                    # prefix sums
+        # keeping (nbits - b) MSB planes loads tot[nbits-b] bytes (+escapes)
+        s = np.array([tot[lv.nbits - b] for b in range(lv.nbits + 1)], np.int64)
+        s += lv.esc_size  # escape channel always loaded with the level
+        errs.append(e)
+        sizes.append(s)
+    return errs, sizes
+
+
+def plan_error_mode(meta: ArchiveMeta, E: float,
+                    propagation: str = PAPER) -> LoadPlan:
+    """Minimum-volume plan with guaranteed L_inf error <= E (requires E >= eb)."""
+    if E < meta.eb:
+        raise ValueError(f"requested bound {E} < compression bound {meta.eb}")
+    errs, sizes = _level_cost_tables(meta, propagation)
+    budget = E - meta.eb
+    nl = len(meta.levels)
+    if budget <= 0:
+        keep = [meta.levels[i].nbits for i in range(nl)]
+        return _finish(meta, keep, errs, mode="error")
+    unit = budget / NBUCKETS
+    # err in integer units, rounded UP => conservative
+    err_units = [np.minimum(np.ceil(e / unit), NBUCKETS + 1).astype(np.int64)
+                 for e in errs]
+    # DP[u] = min bytes with total err units <= u, processed levels so far
+    INF = np.int64(1 << 60)
+    dp = np.full(NBUCKETS + 1, INF, np.int64)
+    dp[:] = 0  # zero levels processed: zero bytes whatever the budget
+    choice = np.zeros((nl, NBUCKETS + 1), np.int16)
+    for li in range(nl):
+        ndp = np.full(NBUCKETS + 1, INF, np.int64)
+        nch = np.zeros(NBUCKETS + 1, np.int16)
+        for b in range(meta.levels[li].nbits + 1):
+            eu = int(err_units[li][b])
+            if eu > NBUCKETS:
+                continue  # this choice alone blows the budget
+            cost = sizes[li][b]
+            # shifting: state u can take choice b if u >= eu
+            cand = np.full(NBUCKETS + 1, INF, np.int64)
+            cand[eu:] = dp[: NBUCKETS + 1 - eu] + cost
+            upd = cand < ndp
+            ndp[upd] = cand[upd]
+            nch[upd] = b
+        dp = ndp
+        choice[li] = nch
+    # backtrack from the full budget
+    u = NBUCKETS
+    keep = []
+    discard = []
+    for li in range(nl - 1, -1, -1):
+        b = int(choice[li][u])
+        discard.append(b)
+        u -= int(err_units[li][b])
+    discard.reverse()
+    keep = [meta.levels[i].nbits - discard[i] for i in range(nl)]
+    return _finish(meta, keep, errs, mode="error")
+
+
+def plan_bitrate_mode(meta: ArchiveMeta, max_bytes: int,
+                      propagation: str = PAPER) -> LoadPlan:
+    """Minimum-error plan with loaded bytes <= max_bytes."""
+    errs, sizes = _level_cost_tables(meta, propagation)
+    nl = len(meta.levels)
+    min_bytes = int(sum(int(s[-1]) for s in sizes))  # b = nbits per level
+    budget = max_bytes - min_bytes
+    if budget <= 0:  # can't even afford the escape channels: load minimum
+        return _finish(meta, [0] * nl, errs, mode="bitrate")
+    # ceil-rounded units guarantee sum(sizes) <= NBUCKETS*unit = budget
+    unit = budget / NBUCKETS
+    size_units = [np.minimum(np.ceil((s - s[-1]) / unit), NBUCKETS + 1).astype(np.int64)
+                  for s in sizes]
+    INF = float("inf")
+    dp = np.zeros(NBUCKETS + 1, np.float64)
+    choice = np.zeros((nl, NBUCKETS + 1), np.int16)
+    for li in range(nl):
+        ndp = np.full(NBUCKETS + 1, INF, np.float64)
+        nch = np.full(NBUCKETS + 1, meta.levels[li].nbits, np.int16)
+        for b in range(meta.levels[li].nbits + 1):
+            su = int(size_units[li][b])
+            if su > NBUCKETS:
+                continue
+            e = errs[li][b]
+            cand = np.full(NBUCKETS + 1, INF, np.float64)
+            cand[su:] = dp[: NBUCKETS + 1 - su] + e
+            upd = cand < ndp
+            ndp[upd] = cand[upd]
+            nch[upd] = b
+        dp = ndp
+        choice[li] = nch
+    u = NBUCKETS
+    discard = []
+    for li in range(nl - 1, -1, -1):
+        b = int(choice[li][u])
+        discard.append(b)
+        u -= int(size_units[li][b])
+    discard.reverse()
+    keep = [meta.levels[i].nbits - discard[i] for i in range(nl)]
+    return _finish(meta, keep, errs, mode="bitrate")
+
+
+def plan_full(meta: ArchiveMeta) -> LoadPlan:
+    errs, _ = _level_cost_tables(meta, PAPER)
+    return _finish(meta, [lv.nbits for lv in meta.levels], errs, mode="full")
+
+
+def _finish(meta: ArchiveMeta, keep: List[int], errs, mode: str) -> LoadPlan:
+    total = 0
+    err = meta.eb
+    for li, lv in enumerate(meta.levels):
+        b = lv.nbits - keep[li]
+        total += sum(lv.plane_sizes[: keep[li]]) + lv.esc_size
+        err += float(errs[li][b])
+    return LoadPlan(keep_planes=keep, loaded_bytes=int(total),
+                    err_bound=float(err), mode=mode)

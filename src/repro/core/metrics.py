@@ -1,0 +1,36 @@
+"""Standard scientific-lossy-compression metrics (paper §3.1.1)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def value_range(x: np.ndarray) -> float:
+    x = np.asarray(x)
+    return float(x.max() - x.min())
+
+
+def linf(x: np.ndarray, xhat: np.ndarray) -> float:
+    """L-infinity norm of the decompression error (max point-wise |diff|)."""
+    return float(np.max(np.abs(np.asarray(x, np.float64) - np.asarray(xhat, np.float64))))
+
+
+def mse(x: np.ndarray, xhat: np.ndarray) -> float:
+    d = np.asarray(x, np.float64) - np.asarray(xhat, np.float64)
+    return float(np.mean(d * d))
+
+
+def psnr(x: np.ndarray, xhat: np.ndarray) -> float:
+    """Peak signal-to-noise ratio: 20*log10(range / sqrt(MSE))."""
+    m = mse(x, xhat)
+    if m == 0.0:
+        return float("inf")
+    return 20.0 * np.log10(value_range(x) / np.sqrt(m))
+
+
+def compression_ratio(original_nbytes: int, compressed_nbytes: int) -> float:
+    return original_nbytes / max(1, compressed_nbytes)
+
+
+def bitrate(nbytes: int, n_elements: int) -> float:
+    """Average number of bits stored per scalar value."""
+    return 8.0 * nbytes / max(1, n_elements)

@@ -1,0 +1,51 @@
+"""Negabinary (base -2) integer coding (paper §4.4.2).
+
+Negabinary needs no separate sign bit and keeps high-order bitplanes sparse
+for values fluctuating around zero:  1 -> ...0001, -1 -> ...0011 (vs two's
+complement ...1111).  Truncating d low digits yields uncertainty ~(2/3)*2^d,
+vs 2^d - 1 for sign-magnitude (paper's uncertainty formulas).
+
+Conversion uses the classic O(1) trick with M = 0xAAAAAAAA (bits at the
+negative powers of -2):   nb = (x + M) ^ M,   x = (nb ^ M) - M   (mod 2^32).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_M = np.uint32(0xAAAAAAAA)
+
+
+def to_negabinary(q: np.ndarray) -> np.ndarray:
+    """int64 (two's-complement range of int32) -> uint32 negabinary digits."""
+    u = q.astype(np.int64).astype(np.uint32)  # modular wrap = two's complement
+    return (u + _M) ^ _M
+
+
+def from_negabinary(nb: np.ndarray) -> np.ndarray:
+    """uint32 negabinary digits -> int64 value."""
+    u = (nb.astype(np.uint32) ^ _M) - _M  # modular wrap
+    return u.view(np.int32).astype(np.int64)
+
+
+def truncate(nb: np.ndarray, discard_bits: int) -> np.ndarray:
+    """Zero the ``discard_bits`` least-significant negabinary digits."""
+    if discard_bits <= 0:
+        return nb
+    if discard_bits >= 32:
+        return np.zeros_like(nb)
+    mask = np.uint32(0xFFFFFFFF) << np.uint32(discard_bits)
+    return nb & mask
+
+
+def truncation_loss_table(nb: np.ndarray, nbits: int, eb: float) -> np.ndarray:
+    """delta_y_l(b) for b = 0..nbits: exact max |value - truncated value| * 2eb.
+
+    Pre-computed during compression (paper Thm. 1: "its value can be
+    pre-computed during compression"); drives the DP loader.
+    """
+    vals = from_negabinary(nb)
+    out = np.zeros(nbits + 1, np.float64)
+    for b in range(1, nbits + 1):
+        tv = from_negabinary(truncate(nb, b))
+        out[b] = float(np.max(np.abs(vals - tv))) * 2.0 * eb if nb.size else 0.0
+    return out

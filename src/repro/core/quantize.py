@@ -1,0 +1,34 @@
+"""Error-bounded linear-scale quantization (paper §4.2.2).
+
+q = round(y / (2*eb))  guarantees  |y - dequantize(q)| <= eb.
+
+Values whose quantized magnitude exceeds ``QMAX`` do not fit the 32-digit
+negabinary representation and are routed through a lossless escape channel
+(SZ-style "unpredictable data").
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# 32-digit negabinary covers [-2863311530, 1431655765]; |q| <= 2**30 is safe
+# on both sides and leaves headroom for the XOR/bitplane pipeline.
+QMAX = 1 << 30
+
+
+def quantize(y: np.ndarray, eb: float) -> np.ndarray:
+    """Quantize prediction residuals to int64 bins of width 2*eb."""
+    return np.rint(np.asarray(y, np.float64) / (2.0 * eb)).astype(np.int64)
+
+
+def dequantize(q: np.ndarray, eb: float) -> np.ndarray:
+    return np.asarray(q, np.float64) * (2.0 * eb)
+
+
+def escape_mask(q: np.ndarray) -> np.ndarray:
+    """Positions that must go to the lossless escape channel.
+
+    Written as two comparisons: np.abs(INT64_MIN) overflows back to a
+    negative value (float->int64 casts of huge residuals produce INT64_MIN),
+    which |q| > QMAX would silently miss.
+    """
+    return (q > QMAX) | (q < -QMAX)

@@ -1,0 +1,3 @@
+from .pipeline import TokenStream, make_batch_iterator
+
+__all__ = ["TokenStream", "make_batch_iterator"]

@@ -1,0 +1,91 @@
+"""Deterministic, restartable, sharded synthetic data pipeline.
+
+Design mirrors a production grain/tf.data stack on the axes that matter for
+fault tolerance:
+
+  * **Stateless indexing** — batch ``i`` is a pure function of (seed, i), so
+    restart-from-step-N needs no pipeline checkpoint and every data shard
+    can be recomputed on any host (elastic re-sharding after node loss).
+  * **Host sharding** — each process materializes only its
+    ``(process_index, process_count)`` slice of the global batch.
+  * **Prefetch** — a background thread keeps ``depth`` batches ready so the
+    accelerator never waits on the host (CPU container: same code path).
+
+The token distribution is a mixture of Zipfian unigrams and short Markov
+repeats — enough structure for loss curves to be meaningfully decreasing.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclass
+class TokenStream:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    process_index: int = 0
+    process_count: int = 1
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.process_count == 0
+        return self.global_batch // self.process_count
+
+    def batch_at(self, step: int) -> np.ndarray:
+        """Batch for global step ``step`` — pure function, restart-safe."""
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 7919 + self.process_index)
+        B, S = self.local_batch, self.seq_len + 1
+        # Zipf unigrams, clipped to vocab
+        base = rng.zipf(1.3, size=(B, S)).astype(np.int64)
+        tokens = np.minimum(base, self.vocab - 1)
+        # inject Markov repeats: token[t] = token[t-k] for short runs
+        n_runs = max(1, S // 64)
+        for b in range(B):
+            starts = rng.integers(1, S - 8, n_runs)
+            for st in starts:
+                ln = int(rng.integers(4, 8))
+                k = int(rng.integers(1, min(st, 16) + 1))
+                end = min(st + ln, S)
+                tokens[b, st:end] = tokens[b, st - k:end - k]
+        return tokens.astype(np.int32)
+
+
+def make_batch_iterator(stream: TokenStream, start_step: int = 0,
+                        prefetch_depth: int = 2,
+                        extras: Optional[Dict[str, tuple]] = None
+                        ) -> Iterator[Dict[str, np.ndarray]]:
+    """Prefetching iterator over dict batches starting at ``start_step``.
+
+    ``extras`` maps name -> shape for modality-stub inputs (frames/prefix)
+    generated deterministically alongside tokens.
+    """
+    q: "queue.Queue" = queue.Queue(maxsize=prefetch_depth)
+    stop = threading.Event()
+
+    def producer():
+        step = start_step
+        while not stop.is_set():
+            batch = {"tokens": stream.batch_at(step)}
+            if extras:
+                rng = np.random.default_rng(stream.seed * 31 + step)
+                for name, shape in extras.items():
+                    batch[name] = rng.standard_normal(shape).astype(np.float32)
+            q.put((step, batch))
+            step += 1
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    try:
+        while True:
+            step, batch = q.get()
+            yield batch
+    finally:
+        stop.set()

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for IPComp's compute hot spots.
+
+Two kernels cover the profile of the paper's pipeline (everything else is
+metadata-sized):
+
+  interp_quant   — fused interpolation-predict + quantize + dequant-writeback
+                   for one dimension sweep (the O(n) inner loop of §4.1).
+  bitplane_pack  — negabinary conversion + 2-bit-prefix XOR predictive coding
+                   + cross-lane bitplane packing (§4.4) in a single VMEM pass.
+  attention      — flash-attention (GQA) forward for the LM serving/training
+                   stack: per-(batch, head, q-tile) programs stream kv tiles
+                   with running-softmax state; O(S^2) never touches HBM.
+
+Each kernel ships with ops.py (jit'd public wrapper, interpret-mode switch)
+and ref.py (pure-jnp oracle used by the allclose test sweeps).  The container
+is CPU-only, so tests run with interpret=True; BlockSpecs are written for
+TPU v5e VMEM tiling (8x128-aligned).
+"""

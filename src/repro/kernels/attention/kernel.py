@@ -1,0 +1,88 @@
+"""Flash-attention (GQA) Pallas TPU kernel — forward pass.
+
+Grid (B, H, nQ): each program owns one (qb x D) query tile in VMEM and
+streams its kv-head's keys/values (index_map folds GQA: kv head = h // G),
+carrying the running (max, denom, acc) flash state through a fori_loop
+over kv tiles.  Causal masking compares absolute positions built from
+``program_id`` and in-kernel iota.  The O(S^2) probability tile exists
+only as a (qb x kb) register block — never in HBM.
+
+This is the TPU-native sibling of the pure-XLA ``layers.flash_attention``
+(which the dry-run uses so cost_analysis sees the FLOPs); on real v5e
+hardware this kernel replaces it via ops.flash_attention_tpu.
+VMEM budget per program: q (qb x D) + k,v (kb x D each) + acc — with
+qb=kb=512, D=128, f32: ~0.8 MiB, well under the 16 MiB/core budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+QB = 256   # query tile rows
+KB = 256   # kv tile rows
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool, Sk: int, D: int,
+            kb: int):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)          # (qb, D)
+    qb = q.shape[0]
+    scale = 1.0 / np.sqrt(D)
+    nk = Sk // kb
+
+    qpos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], ki * kb, kb,
+                                         axis=0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], ki * kb, kb,
+                                         axis=0).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            kpos = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+            s = jnp.where(qpos >= kpos, s, -1e30)
+        mi = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - mi[:, None])
+        a = jnp.exp(m - mi)
+        l2 = l * a + jnp.sum(p, axis=1)
+        acc2 = acc * a[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return mi, l2, acc2
+
+    m0 = jnp.full((qb,), -1e30, jnp.float32)
+    l0 = jnp.zeros((qb,), jnp.float32)
+    a0 = jnp.zeros((qb, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "qb", "kb", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, qb: int = QB, kb: int = KB,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D); H = KV * G; Sq % qb == 0,
+    Sk % kb == 0.  Returns (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    grid = (B, H, Sq // qb)
+    return pl.pallas_call(
+        functools.partial(_kernel, causal=causal, Sk=Sk, D=D, kb=kb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Sk, D), lambda b, h, i: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Sk, D), lambda b, h, i: (b, h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, D), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

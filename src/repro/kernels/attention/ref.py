@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, causal: bool = True) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D)."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(D)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import bitplane_pack
+from .ref import bitplane_pack_ref, unpack_planes_ref
+
+__all__ = ["bitplane_pack", "bitplane_pack_ref", "unpack_planes_ref"]

@@ -1,0 +1,61 @@
+"""Negabinary + XOR-predictive bitplane packing Pallas TPU kernel (§4.4).
+
+Key TPU adaptation (DESIGN.md §3): the paper's per-plane predictive coding
+    enc_k = b_k ^ b_{k+1} ^ b_{k+2}
+collapses, over ALL planes at once, into THREE integer ops on the whole
+word:      enc = nb ^ (nb >> 1) ^ (nb >> 2)
+so the kernel converts q -> negabinary -> XOR-encoded word in O(1) VPU ops
+per element, then bit-transposes lanes into packed uint32 plane words
+(32 lanes -> one word per plane, MSB-first within the word).
+
+Block layout: (ROWS_B, LANES) int32 in VMEM; output (32, ROWS_B, LANES/32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+ROWS_B = 8
+GROUP = 32          # lanes packed per output word
+NEG_M = np.uint32(0xAAAAAAAA)
+
+
+def _kernel(q_ref, out_ref, *, C: int):
+    q = q_ref[...]
+    u = q.astype(jnp.uint32)
+    nb = (u + NEG_M) ^ NEG_M                        # negabinary (§4.4.2)
+    enc = nb ^ (nb >> jnp.uint32(1)) ^ (nb >> jnp.uint32(2))  # 2-bit-prefix XOR
+    R = enc.shape[0]
+    g = enc.reshape(R, C // GROUP, GROUP)
+    # pack bit k of 32 consecutive lanes into one uint32 word, lane 0 = MSB.
+    # weight exponents come from an in-kernel iota (vector constants cannot
+    # be captured by a Pallas kernel body).
+    j = jax.lax.broadcasted_iota(jnp.uint32, g.shape, dimension=2)
+    shift = jnp.uint32(GROUP - 1) - j
+    for k in range(32):
+        bits = (g >> jnp.uint32(k)) & jnp.uint32(1)
+        out_ref[k, :, :] = jnp.sum(bits << shift, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitplane_pack_pallas(q: jax.Array, *, interpret: bool = True):
+    """q: (R, C) int32, R % ROWS_B == 0, C % GROUP == 0.
+
+    Returns packed (32, R, C // GROUP) uint32, plane k = bit k of the
+    XOR-encoded negabinary words.
+    """
+    R, C = q.shape
+    assert R % ROWS_B == 0 and C % GROUP == 0
+    grid = (R // ROWS_B,)
+    return pl.pallas_call(
+        functools.partial(_kernel, C=C),
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS_B, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((32, ROWS_B, C // GROUP), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, R, C // GROUP), jnp.uint32),
+        interpret=interpret,
+    )(q)

@@ -1,0 +1,31 @@
+"""Public jit'd wrapper for the bitplane packing kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import GROUP, ROWS_B, bitplane_pack_pallas
+
+
+def bitplane_pack(q, *, interpret: bool | None = None):
+    """(n,) or (R, C) int32 -> (32, R', W) packed planes (+ padding info).
+
+    Pads to (ROWS_B, GROUP) multiples; returns (packed, n_valid) where the
+    flattened valid prefix of each plane covers the original n elements.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    q = jnp.asarray(q, jnp.int32)
+    if q.ndim == 1:
+        n = q.shape[0]
+        C = 128 * GROUP
+        R = -(-n // C)
+        q = jnp.pad(q, (0, R * C - n)).reshape(R, C)
+    else:
+        n = q.size
+    R, C = q.shape
+    pr, pc = (-R) % ROWS_B, (-C) % GROUP
+    if pr or pc:
+        q = jnp.pad(q, ((0, pr), (0, pc)))
+    packed = bitplane_pack_pallas(q, interpret=interpret)
+    return packed, n

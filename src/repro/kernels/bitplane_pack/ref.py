@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the bitplane packing kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_M = np.uint32(0xAAAAAAAA)
+GROUP = 32
+
+
+def bitplane_pack_ref(q: jnp.ndarray) -> jnp.ndarray:
+    """(R, C) int32 -> (32, R, C//32) uint32 packed XOR-coded negabinary."""
+    u = q.astype(jnp.uint32)
+    nb = (u + NEG_M) ^ NEG_M
+    enc = nb ^ (nb >> jnp.uint32(1)) ^ (nb >> jnp.uint32(2))
+    R, C = q.shape
+    g = enc.reshape(R, C // GROUP, GROUP)
+    w = (jnp.uint32(1) << jnp.arange(GROUP - 1, -1, -1, dtype=jnp.uint32))
+    planes = []
+    for k in range(32):
+        bits = (g >> jnp.uint32(k)) & jnp.uint32(1)
+        planes.append(jnp.sum(bits * w, axis=-1, dtype=jnp.uint32))
+    return jnp.stack(planes)
+
+
+def unpack_planes_ref(packed, n_keep_msb: int) -> jnp.ndarray:
+    """Inverse for tests: decode the top ``n_keep_msb`` planes back to the
+    truncated negabinary word (plane prefix == truncation, §4.4 invariant)."""
+    nplanes, R, W = packed.shape
+    bits = []
+    for k in range(nplanes):
+        word = packed[k]
+        lane = (word[..., None] >> jnp.arange(GROUP - 1, -1, -1,
+                                              dtype=jnp.uint32)) & jnp.uint32(1)
+        bits.append(lane.reshape(R, W * GROUP))
+    enc = jnp.zeros((R, W * GROUP), jnp.uint32)
+    for k in range(nplanes):
+        enc = enc | (bits[k].astype(jnp.uint32) << jnp.uint32(k))
+    # sequential decode from MSB: b_k = e_k ^ b_{k+1} ^ b_{k+2}
+    b = jnp.zeros_like(enc)
+    for k in range(31, 31 - n_keep_msb, -1):
+        bk1 = (b >> jnp.uint32(k + 1)) & jnp.uint32(1) if k + 1 < 32 else 0
+        bk2 = (b >> jnp.uint32(k + 2)) & jnp.uint32(1) if k + 2 < 32 else 0
+        ek = (enc >> jnp.uint32(k)) & jnp.uint32(1)
+        b = b | ((ek ^ bk1 ^ bk2) << jnp.uint32(k))
+    return b

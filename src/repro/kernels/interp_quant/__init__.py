@@ -1,0 +1,4 @@
+from .ops import interp_quant
+from .ref import interp_quant_ref, predict_ref
+
+__all__ = ["interp_quant", "interp_quant_ref", "predict_ref"]

@@ -1,0 +1,116 @@
+"""Fused interpolation-predict + quantize Pallas TPU kernel.
+
+One (level, dim) sweep of §4.1 with the sweep axis laid out on lanes:
+for a row-block in VMEM, predict target columns (odd multiples of stride s)
+from neighbour columns at +-s / +-3s, quantize the residual against the
+original values, and emit both the int32 bins and the dequantized
+reconstruction — one HBM round-trip for what the CPU reference does in
+three passes (predict, quantize, writeback).
+
+TPU adaptation (DESIGN.md §3): neighbour access uses *static strided
+slices* (lane-aligned, no gathers); boundary fallback masks are trace-time
+constants; blocks are (ROWS_B x C) so the whole sweep axis sits in VMEM —
+C up to ~16k f32 fits comfortably (8 x 16k x 4B = 512 KiB).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+ROWS_B = 8  # sublane-aligned row block
+
+
+def _neighbors(xh, s: int, C: int, T: int):
+    """l3,l1,r1,r3 columns for targets idx=s+2s*j, j<T, via static slices."""
+    # l1: idx-s = 0, 2s, 4s, ...            always valid
+    l1 = xh[:, 0:2 * s * T:2 * s]
+    # r1: idx+s = 2s, 4s, ...               last may exceed C-1
+    r1_valid = [c for c in range(2 * s, C, 2 * s)][:T]
+    r1 = xh[:, 2 * s:2 * s * (len(r1_valid)) + 1:2 * s]
+    if len(r1_valid) < T:  # clamp: reuse l1's last column (copy-left fallback)
+        r1 = jnp.concatenate([r1, l1[:, len(r1_valid):T]], axis=1)
+    # l3: idx-3s = -2s, 0, 2s, ...          first invalid -> clamp to col 0
+    l3 = jnp.concatenate([xh[:, 0:1], xh[:, 0:2 * s * (T - 1):2 * s]], axis=1) \
+        if T > 1 else xh[:, 0:1]
+    # r3: idx+3s = 4s, 6s, ...              tail may exceed -> clamp to last valid
+    r3_cols = [min(c, C - 1) for c in range(4 * s, 4 * s + 2 * s * T, 2 * s)]
+    # static slices where possible, then patch the clamped tail
+    n_ok = sum(1 for c in range(4 * s, 4 * s + 2 * s * T, 2 * s) if c <= C - 1)
+    r3_main = xh[:, 4 * s:4 * s + 2 * s * n_ok:2 * s]
+    if n_ok < T:
+        r3 = jnp.concatenate([r3_main,
+                              jnp.repeat(xh[:, C - 1:C], T - n_ok, axis=1)], axis=1)
+    else:
+        r3 = r3_main
+    return l3, l1, r1, r3
+
+
+def _masks(s: int, C: int, T: int) -> Tuple[np.ndarray, np.ndarray]:
+    idx = np.arange(s, C, 2 * s)[:T]
+    r_ok = idx + s <= C - 1
+    cubic_ok = (idx - 3 * s >= 0) & (idx + 3 * s <= C - 1) & r_ok
+    return cubic_ok, r_ok
+
+
+def _select_runs(parts_by_choice, choice: np.ndarray):
+    """Assemble pred from static runs of identical boundary choice.
+
+    Boundary fallback only happens at the edges, so ``choice`` has <= 4 runs;
+    static concatenation of slices avoids both vector-constant captures
+    (disallowed in Pallas kernels) and per-lane selects.
+    """
+    T = choice.size
+    runs, start = [], 0
+    for j in range(1, T + 1):
+        if j == T or choice[j] != choice[start]:
+            runs.append((start, j, int(choice[start])))
+            start = j
+    parts = [parts_by_choice[c][:, a:b] for a, b, c in runs]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+
+def _kernel(x_ref, xh_ref, q_ref, recon_ref, *, s: int, eb: float,
+            interp: str, C: int, T: int):
+    xh = xh_ref[...]
+    x = x_ref[...]
+    l3, l1, r1, r3 = _neighbors(xh, s, C, T)
+    lin = 0.5 * (l1 + r1)
+    cubic_ok, r_ok = _masks(s, C, T)
+    if interp == "linear":
+        pred = _select_runs({1: lin, 0: l1}, r_ok.astype(np.int8))
+    else:
+        cub = (-l3 + 9.0 * l1 + 9.0 * r1 - r3) * (1.0 / 16.0)
+        choice = np.where(cubic_ok, 2, np.where(r_ok, 1, 0))
+        pred = _select_runs({2: cub, 1: lin, 0: l1}, choice)
+    tgt = x[:, s:s + 2 * s * T:2 * s]
+    # divide (not multiply-by-reciprocal): bit-identical rounding vs the oracle
+    q = jnp.rint((tgt - pred) / (2.0 * eb)).astype(jnp.int32)
+    q_ref[...] = q
+    recon_ref[...] = (pred + q.astype(x.dtype) * (2.0 * eb)).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "eb", "interp", "interpret"))
+def interp_quant_pallas(x: jax.Array, xhat: jax.Array, *, s: int, eb: float,
+                        interp: str = "cubic", interpret: bool = True):
+    """x, xhat: (R, C) with R % ROWS_B == 0. Returns (q (R,T) i32, recon (R,T))."""
+    R, C = x.shape
+    T = len(range(s, C, 2 * s))
+    assert R % ROWS_B == 0 and T > 0
+    grid = (R // ROWS_B,)
+    bspec_in = pl.BlockSpec((ROWS_B, C), lambda i: (i, 0))
+    bspec_out = pl.BlockSpec((ROWS_B, T), lambda i: (i, 0))
+    kern = functools.partial(_kernel, s=s, eb=eb, interp=interp, C=C, T=T)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[bspec_in, bspec_in],
+        out_specs=[bspec_out, bspec_out],
+        out_shape=[jax.ShapeDtypeStruct((R, T), jnp.int32),
+                   jax.ShapeDtypeStruct((R, T), x.dtype)],
+        interpret=interpret,
+    )(x, xhat)

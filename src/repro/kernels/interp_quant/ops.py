@@ -1,0 +1,33 @@
+"""Public jit'd wrapper for the fused interpolate+quantize kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import ROWS_B, interp_quant_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interp_quant(x, xhat, *, s: int, eb: float, interp: str = "cubic",
+                 interpret: bool | None = None):
+    """Fused phase sweep for arbitrary (R, C): pads rows to the block size.
+
+    Returns (q int32 (R, T), recon (R, T)) for targets at odd multiples of s
+    along the last axis.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    x = jnp.asarray(x)
+    xhat = jnp.asarray(xhat, x.dtype)
+    R, C = x.shape
+    pad = (-R) % ROWS_B
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        xhat = jnp.pad(xhat, ((0, pad), (0, 0)))
+    q, recon = interp_quant_pallas(x, xhat, s=s, eb=eb, interp=interp,
+                                   interpret=interpret)
+    return q[:R], recon[:R]

@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: build the production mesh, abstract params/optimizer state
+(jax.eval_shape — no allocation), resolve shardings, then
+``jit(step).lower(...).compile()``.  Success proves the distribution config
+is coherent; ``memory_analysis()`` proves it fits; ``cost_analysis()`` +
+optimized-HLO collective parsing feed §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] --out results.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, cell_is_applicable, get_config,
+                           get_opt_kind, get_shape)
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (input_specs, make_prefill_step,
+                                make_serve_step, make_train_step)
+from repro.models import model as M
+from repro.models.config import SHAPES
+from repro.optim.adamw import TrainState
+from repro.parallel import sharding as SH
+from repro.parallel.api import sharding_ctx
+
+
+def abstract_state(cfg, opt_kind: str):
+    """Abstract TrainState via eval_shape — no allocation."""
+    def build():
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        from repro.optim import make_train_state
+        return make_train_state(params, opt_kind)
+    return jax.eval_shape(build)
+
+
+def _tuned(cfg, shape):
+    """Shape-dependent tuning knobs (documented in EXPERIMENTS.md §Perf)."""
+    if shape.kind == "prefill":
+        cfg = replace(cfg, q_chunk=2048, kv_chunk=4096)
+    return cfg
+
+
+def _lower_compile(cfg, shape, mesh, opt_kind, grad_compress: bool = False):
+    """Lower + compile one step function under the mesh; returns compiled."""
+    with sharding_ctx(mesh):
+        specs = input_specs(cfg, shape)
+        if shape.kind == "train":
+            state = abstract_state(cfg, opt_kind)
+            state_sh = TrainState(
+                params=SH.param_sharding(cfg, mesh, state.params),
+                opt=_opt_sharding(cfg, mesh, state.opt),
+                step=SH.replicated(mesh, state.step))
+            batch_sh = SH.batch_sharding(cfg, mesh, specs)
+            if grad_compress and "pod" in mesh.axis_names:
+                from repro.launch.steps import make_train_step_compressed
+                step_fn = make_train_step_compressed(cfg, mesh, opt_kind)
+            else:
+                step_fn = make_train_step(cfg, opt_kind)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(state_sh, batch_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, specs)
+        elif shape.kind == "prefill":
+            params = jax.eval_shape(
+                lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+            p_sh = SH.param_sharding(cfg, mesh, params, fsdp=False)
+            b_sh = SH.batch_sharding(cfg, mesh, specs)
+            jitted = jax.jit(make_prefill_step(cfg),
+                             in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params, specs)
+        else:  # decode
+            params = jax.eval_shape(
+                lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+            p_sh = SH.param_sharding(cfg, mesh, params, fsdp=False)
+            c_sh = SH.cache_sharding(cfg, mesh, specs["cache"])
+            t_sh = SH.batch_sharding(cfg, mesh, specs["token"])
+            jitted = jax.jit(make_serve_step(cfg),
+                             in_shardings=(p_sh, c_sh, t_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params, specs["cache"], specs["token"])
+        return lowered.compile()
+
+
+def _probe_costs(compiled):
+    cost = compiled.cost_analysis()
+    coll = RL.collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = cell_is_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                    status="skipped", reason=why)
+    cfg = _tuned(cfg, shape)
+    opt_kind = get_opt_kind(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        # 1) full-depth scanned compile: the deliverable + memory analysis
+        compiled = _lower_compile(cfg, shape, mesh, opt_kind)
+        mem = compiled.memory_analysis()
+
+        if multi_pod:
+            # the roofline table is single-pod by spec; the multi-pod pass
+            # proves the "pod" axis shards + fits.  (Unrolled probes also
+            # trip an XLA:CPU SPMD crash on 3-axis meshes; see EXPERIMENTS.)
+            return dict(status="ok", compile_s=round(time.time() - t0, 1),
+                        arch=arch, shape=shape_name, mesh=mesh_name,
+                        chips=chips, memory_analysis=str(mem),
+                        bytes_per_device=_mem_bytes(mem))
+
+        # 2) cost probes: XLA's cost_analysis counts a while-loop body ONCE
+        # regardless of trip count, so flops/bytes/collectives of the scanned
+        # module are depth-independent.  Two unrolled shallow compiles give
+        # the exact per-layer slope: true(L) = f(1) + (L-1) * (f(2) - f(1)).
+        L = cfg.n_layers
+        enc = cfg.encoder_layers
+
+        def probe(k):
+            c = replace(cfg, n_layers=k,
+                        encoder_layers=(k if enc else 0),
+                        scan_layers=False, unroll_scans=True)
+            return _probe_costs(_lower_compile(c, shape, mesh, opt_kind))
+
+        f1, b1, c1 = probe(1)
+        f2, b2, c2 = probe(2)
+        flops = f1 + (L - 1) * (f2 - f1)
+        byt = b1 + (L - 1) * (b2 - b1)
+        coll = {k: c1.get(k, 0) + (L - 1) * (c2.get(k, 0) - c1.get(k, 0))
+                for k in set(c1) | set(c2)}
+        # cost_analysis reports per-device numbers for SPMD modules
+        rl = RL.Roofline(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            hlo_flops=flops * chips, hlo_bytes=byt * chips,
+            coll_bytes=float(sum(coll.values())) * chips,
+            coll_breakdown=coll,
+            model_flops=RL.model_flops(get_config(arch), shape),
+            bytes_per_device=_mem_bytes(mem))
+        out = dict(status="ok", compile_s=round(time.time() - t0, 1),
+                   memory_analysis=str(mem), **rl.row())
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] OK "
+                  f"compile={out['compile_s']}s "
+                  f"flops/dev={flops:.3e} bytes/dev={byt:.3e} "
+                  f"coll/dev={sum(coll.values()):.3e} "
+                  f"bottleneck={rl.bottleneck} "
+                  f"useful={rl.useful_flops_ratio:.2f} "
+                  f"frac={rl.roofline_fraction:.3f}", flush=True)
+            print("  memory:", str(mem), flush=True)
+        return out
+    except Exception as e:
+        if verbose:
+            traceback.print_exc()
+        return dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                    status="error", error=f"{type(e).__name__}: {e}",
+                    compile_s=round(time.time() - t0, 1))
+
+
+def _opt_sharding(cfg, mesh, opt):
+    """Optimizer states inherit their parameter's sharding (same shapes);
+    factored Adafactor stats drop the last/second-last dim spec."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def assign(path, leaf):
+        if not hasattr(leaf, "shape"):
+            return NamedSharding(mesh, P())
+        names = SH._path_names(path)
+        if names and names[-1] in ("count",):
+            return NamedSharding(mesh, P())
+        # reuse param rules by stripping the m/v/stats/r/c prefix
+        core = tuple(n for n in names if n not in
+                     ("m", "v", "stats", "r", "c"))
+        for suffix, logicals in SH._PARAM_RULES:
+            if len(core) >= len(suffix) and core[-len(suffix):] == suffix:
+                logi = list(logicals)
+                if names[-1] == "r":      # row stats: last dim reduced away
+                    logi = logi[:-1]
+                elif names[-1] == "c":    # col stats: second-last reduced
+                    logi = logi[:-2] + logi[-1:]
+                if len(logi) != len(leaf.shape):
+                    logi = [None] * len(leaf.shape)
+                return NamedSharding(mesh, SH._spec(mesh, leaf.shape, logi))
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+
+    return jax.tree_util.tree_map_with_path(assign, opt)
+
+
+def _mem_bytes(mem) -> float:
+    """Per-device HBM estimate from memory_analysis (API varies by backend)."""
+    try:
+        return float(mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                     + mem.output_size_in_bytes)
+    except Exception:
+        return -1.0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(run_cell(arch, shape, mp))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"\n{len(results)} cells: "
+          f"{sum(r['status'] == 'ok' for r in results)} ok, "
+          f"{sum(r['status'] == 'skipped' for r in results)} skipped, "
+          f"{len(bad)} errors")
+    for r in bad:
+        print("ERROR:", r["arch"], r["shape"], r["mesh"], r["error"][:200])
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,5 @@
+from .config import ModelConfig, ShapeConfig, SHAPES
+from . import model, layers, moe, ssm
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "model", "layers",
+           "moe", "ssm"]

@@ -1,0 +1,159 @@
+"""Model configuration covering all assigned architecture families."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                # 0 => attention-free
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # attention details
+    qkv_bias: bool = False
+    attn_out_bias: bool = False
+    head_dim: int = 0           # 0 => d_model // n_heads
+    rope_theta: float = 10000.0
+    sliding_window: int = 0     # 0 = full attention (hybrid uses SWA)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    # SSM (Mamba2 SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_expand: int = 2
+    # encoder-decoder
+    encoder_layers: int = 0
+    encoder_seq: int = 1500     # whisper 30s frame count
+    # multimodal stub frontends
+    frontend: str = "none"      # none | audio_stub | vision_stub
+    n_prefix_embeds: int = 0    # vision: patch embeddings prepended
+    # numerics / training
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    # attention chunking for long-context prefill (pure-XLA flash pattern)
+    q_chunk: int = 1024
+    kv_chunk: int = 2048
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots (saveable policies)
+    scan_layers: bool = True        # False: unroll (cost-analysis probes)
+    unroll_scans: bool = False      # unroll inner scans too (probes only:
+                                    # XLA cost_analysis counts loop bodies
+                                    # once, undercounting attention/loss)
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def has_attention(self) -> bool:
+        return self.n_heads > 0 or self.family == "hybrid"
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Eligible for long_500k (SSM / sliding-window hybrid)."""
+        return self.family == "ssm" or (
+            self.family == "hybrid" and self.sliding_window > 0)
+
+    @property
+    def ssm_heads(self) -> int:
+        if self.ssm_state == 0:
+            return 0
+        return (self.d_model * self.ssm_expand) // self.ssm_head_dim
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Small same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2),
+            d_model=128,
+            n_heads=min(self.n_heads, 4) if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            d_ff=256,
+            vocab=512,
+            n_experts=min(self.n_experts, 8) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else 64,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=64,
+            n_prefix_embeds=min(self.n_prefix_embeds, 16),
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            q_chunk=64, kv_chunk=64, ssm_chunk=32,
+            head_dim=32 if self.n_heads else 0,
+            dtype="float32",
+            name=self.name + "-smoke",
+        )
+        small.update(overrides)
+        return replace(self, **small)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab
+        hd, H, KV = self.hd, self.n_heads, self.n_kv_heads
+        n = V * d  # embed
+        if not self.tie_embeddings:
+            n += V * d
+        def attn():
+            a = d * H * hd + 2 * d * KV * hd + H * hd * d
+            if self.qkv_bias:
+                a += (H + 2 * KV) * hd
+            return a
+        def mlp(width=ff):
+            return 3 * d * width  # swiglu
+        def ssm():
+            di = d * self.ssm_expand
+            # in_proj (x, z, B, C, dt) + out_proj + A, D, dt_bias, conv
+            ngroups = 1
+            return (d * (2 * di + 2 * ngroups * self.ssm_state + self.ssm_heads)
+                    + di * d + 3 * self.ssm_heads + 4 * di)
+        per_layer = 2 * d  # norms
+        if self.family in ("dense", "vlm", "encdec"):
+            per_layer += attn() + mlp()
+        elif self.family == "moe":
+            per_layer += attn() + self.n_experts * mlp() + d * self.n_experts
+        elif self.family == "ssm":
+            per_layer = d + ssm()
+        elif self.family == "hybrid":
+            per_layer += attn() + ssm() + mlp()
+        n += self.n_layers * per_layer
+        if self.family == "encdec":
+            enc_layer = 2 * d + attn() + mlp()
+            dec_cross = attn()  # cross-attention per decoder layer
+            n += self.encoder_layers * enc_layer + self.n_layers * dec_cross
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        dense_like = self.param_count() - self.n_layers * (self.n_experts * 3 * d * ff)
+        return dense_like + self.n_layers * (self.top_k * 3 * d * ff)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,214 @@
+"""Core transformer layers: RMSNorm, RoPE, chunked flash attention, SwiGLU.
+
+Everything is a pure function over parameter pytrees (dicts of arrays) —
+no framework dependency.  Attention uses a pure-XLA flash pattern (double
+lax.scan over query/key chunks with running max/denominator) so that (a)
+S^2 logits never hit HBM for 32k prefill and (b) the dry-run's
+``cost_analysis()`` still sees every FLOP (a custom kernel would hide them;
+see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = theta ** (-np.arange(0, d, 2, dtype=np.float32) / d)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+
+def _chunk_attn_inner(q, k, v, qpos, kpos, k_limit: int, window: int,
+                      causal: bool):
+    """One (q_chunk x kv_chunk) tile with masking; fp32 accumulation.
+
+    q: (B, Tq, H, D)  k/v: (B, Tk, KV, D) with H = KV * G.
+    ``k_limit`` masks right-padded keys (kpos >= k_limit invalid).
+    """
+    B, Tq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Tq, KV, G, D)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (1.0 / np.sqrt(D))
+    mask = (kpos < k_limit)[None, :] * jnp.ones((Tq, 1), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1)                      # (B,KV,G,Tq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 2048,
+                    q_offset=0, unroll: bool = False) -> jax.Array:
+    """Pure-XLA flash attention with GQA.
+
+    q: (B, Sq, H, D), k/v: (B, Sk, KV, D).  q_offset: position of q[0]
+    relative to k[0] (prefill: 0; decode-with-cache: cache length).
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Sk)
+    nq, nk = -(-Sq // qc), -(-Sk // kc)
+    pad_q, pad_k = nq * qc - Sq, nk * kc - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    def q_step(qi: int):
+        # qi is a PYTHON int: the kv range below is static, so causal and
+        # sliding-window tiles outside the band are never built — the
+        # classic flash block-skipping, done at trace time (§Perf: halves
+        # attention FLOPs vs masking full tiles).
+        qblk = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=1)
+        qpos = qi * qc + jnp.arange(qc) + q_offset
+        if causal and isinstance(q_offset, int):
+            hi = min(Sk, (qi + 1) * qc + q_offset)
+        else:
+            hi = Sk
+        lo = 0
+        if window and isinstance(q_offset, int):
+            lo = max(0, qi * qc + q_offset - window + 1)
+        lo = (lo // kc) * kc
+        n_tiles = max(1, -(-(hi - lo) // kc))
+
+        # checkpointed: scan autodiff would otherwise SAVE every (Tq x Tk)
+        # probability tile for the backward — O(S^2) HBM, the exact thing
+        # flash attention exists to avoid.  Recompute tiles in the bwd sweep.
+        @jax.checkpoint
+        def kv_step_body(m, l, acc, ki):
+            kblk = jax.lax.dynamic_slice_in_dim(k, lo + ki * kc, kc, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, lo + ki * kc, kc, axis=1)
+            kpos = lo + ki * kc + jnp.arange(kc)
+            mi, li, acci = _chunk_attn_inner(qblk, kblk, vblk, qpos, kpos,
+                                             Sk, window, causal)
+            mnew = jnp.maximum(m, mi)
+            a = jnp.exp(m - mnew)
+            b = jnp.exp(mi - mnew)
+            l2 = l * a + li * b
+            acc2 = (acc * a.transpose(0, 3, 1, 2)[..., None]
+                    + acci * b.transpose(0, 3, 1, 2)[..., None])
+            return mnew, l2, acc2
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            return kv_step_body(m, l, acc, ki), None
+
+        m0 = jnp.full((B, KV, G, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, qc, KV, G, D), jnp.float32)
+        if unroll:  # probe mode: every tile visible to cost_analysis
+            m, l, acc = m0, l0, a0
+            for ki in range(n_tiles):
+                m, l, acc = kv_step_body(m, l, acc, jnp.int32(ki))
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(n_tiles))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return out.reshape(B, qc, H, D)
+
+    outs = [q_step(qi) for qi in range(nq)]
+    out = jnp.concatenate(outs, axis=1) if nq > 1 else outs[0]
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
+    """Single-token attention over a (possibly padded) KV cache.
+
+    q: (B, 1, H, D), caches: (B, S, KV, D); positions >= cache_len masked.
+    """
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) / np.sqrt(D)
+    valid = jnp.arange(S)[None] < cache_len[:, None]  # (B,S)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ------------------------------------------------------------- projections
+
+def attn_proj(x, p: Params, cfg: ModelConfig):
+    """QKV projections -> (q, k, v) with per-head layout."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def attn_out(o, p: Params):
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+
+def swiglu(x, p: Params):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+
+
+# ------------------------------------------------------------- init helpers
+
+def _he(key, shape, dtype, fan_in):
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def init_attn(key, cfg: ModelConfig, dtype) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=_he(ks[0], (d, H, hd), dtype, d),
+        wk=_he(ks[1], (d, KV, hd), dtype, d),
+        wv=_he(ks[2], (d, KV, hd), dtype, d),
+        wo=_he(ks[3], (H, hd, d), dtype, H * hd),
+    )
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((H, hd), dtype), bk=jnp.zeros((KV, hd), dtype),
+                 bv=jnp.zeros((KV, hd), dtype))
+    return p
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, width: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, width or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return dict(w1=_he(ks[0], (d, f), dtype, d),
+                w3=_he(ks[1], (d, f), dtype, d),
+                w2=_he(ks[2], (f, d), dtype, f))

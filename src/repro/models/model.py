@@ -1,0 +1,470 @@
+"""Unified model: dense / MoE / SSM / hybrid / enc-dec / VLM families.
+
+One parameter pytree + three apply paths (train forward, prefill, decode),
+all built on the same block primitives.  The layer stack is ``lax.scan``-ned
+over stacked parameters, so HLO size and compile time are O(1) in depth —
+essential for the 61-layer trillion-parameter dry-runs on a CPU host.
+
+Sharding is injected via ``repro.parallel.api.shard_act`` constraints so the
+same code runs unsharded on CPU tests and fully sharded under the
+production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers, moe as moe_mod, ssm as ssm_mod
+from .config import ModelConfig
+from ..parallel.api import shard_act
+
+P = Dict[str, jax.Array]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ================================================================== init
+
+def init_layer(cfg: ModelConfig, key, cross: bool = False) -> P:
+    dtype = _dt(cfg)
+    ks = jax.random.split(key, 8)
+    p: P = dict(ln1=jnp.ones((cfg.d_model,), dtype))
+    fam = cfg.family
+    if fam in ("dense", "vlm", "encdec"):
+        p["attn"] = layers.init_attn(ks[0], cfg, dtype)
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        p["mlp"] = layers.init_mlp(ks[1], cfg, dtype)
+        if cross:
+            p["lnx"] = jnp.ones((cfg.d_model,), dtype)
+            p["xattn"] = layers.init_attn(ks[2], cfg, dtype)
+    elif fam == "moe":
+        p["attn"] = layers.init_attn(ks[0], cfg, dtype)
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    elif fam == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg, dtype)
+    elif fam == "hybrid":
+        p["attn"] = layers.init_attn(ks[0], cfg, dtype)
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg, dtype)
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        p["mlp"] = layers.init_mlp(ks[2], cfg, dtype)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> P:
+    dtype = _dt(cfg)
+    ks = jax.random.split(key, 6)
+    stack = jax.vmap(lambda k: init_layer(cfg, k, cross=cfg.family == "encdec")
+                     )(jax.random.split(ks[0], cfg.n_layers))
+    p: P = dict(
+        embed=(jax.random.normal(ks[1], (cfg.vocab, cfg.d_model)) * 0.02
+               ).astype(dtype),
+        blocks=stack,
+        norm_f=jnp.ones((cfg.d_model,), dtype),
+    )
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(ks[2], (cfg.d_model, cfg.vocab))
+                     * 0.02).astype(dtype)
+    if cfg.family == "encdec":
+        enc_cfg = cfg  # same dims; bidirectional attention in apply
+        p["enc_blocks"] = jax.vmap(lambda k: init_layer(enc_cfg, k))(
+            jax.random.split(ks[3], cfg.encoder_layers))
+        p["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+# ================================================================== blocks
+
+def _attn_block(x, p, cfg: ModelConfig, positions, causal=True,
+                kv_override=None, window=None):
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = layers.attn_proj(h, p["attn"], cfg)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    if kv_override is None:
+        k = layers.rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+    q = shard_act(q, "batch", None, "heads", None)
+    k = shard_act(k, "batch", None, "kv_heads", None)
+    w = cfg.sliding_window if window is None else window
+    o = layers.flash_attention(q, k, v, causal=causal, window=w,
+                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                               unroll=cfg.unroll_scans)
+    return layers.attn_out(o, p["attn"]), (k, v)
+
+
+def block_train(x, p, cfg: ModelConfig, positions):
+    fam = cfg.family
+    x = shard_act(x, "batch", None, None)
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        a, kv = _attn_block(x, p, cfg, positions)
+        x = x + a
+        h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if fam == "moe":
+            x = x + moe_mod.moe_block(h, p["moe"], cfg)
+        else:
+            x = x + layers.swiglu(h, p["mlp"])
+    elif fam == "ssm":
+        h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        x = x + ssm_mod.ssm_block(h, p["ssm"], cfg)
+    elif fam == "hybrid":
+        h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = layers.attn_proj(h, p["attn"], cfg)
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+        attn_o = layers.flash_attention(q, k, v, causal=True,
+                                        window=cfg.sliding_window,
+                                        q_chunk=cfg.q_chunk,
+                                        kv_chunk=cfg.kv_chunk,
+                                        unroll=cfg.unroll_scans)
+        attn_o = layers.attn_out(attn_o, p["attn"])
+        ssm_o = ssm_mod.ssm_block(h, p["ssm"], cfg)
+        x = x + 0.5 * (attn_o + ssm_o)          # Hymba parallel heads (mean)
+        h2 = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + layers.swiglu(h2, p["mlp"])
+    return x
+
+
+def _remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat_policy == "dots" else
+              jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _layer_slice(stacked, i):
+    return jax.tree_util.tree_map(lambda p: p[i], stacked)
+
+
+def _scan_blocks(x, stacked: P, cfg: ModelConfig, fn):
+    body = _remat(fn, cfg)
+    if not cfg.scan_layers:  # unrolled: exact cost_analysis per layer
+        L = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        for i in range(L):
+            x = body(x, _layer_slice(stacked, i))
+        return x
+
+    def step(h, lp):
+        return body(h, lp), None
+
+    x, _ = jax.lax.scan(step, x, stacked)
+    return x
+
+
+# ================================================================== forward
+
+def embed_tokens(params: P, tokens, cfg: ModelConfig,
+                 prefix_embeds=None):
+    x = params["embed"][tokens] * 1.0
+    # pin the gather output: without this, SPMD explores a pathological
+    # vocab-shard -> batch-shard reshard on the multi-pod mesh (hard crash
+    # in spmd_partitioner_util on XLA:CPU; see EXPERIMENTS.md §Dry-run)
+    x = shard_act(x, "batch", None, None)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def encoder_apply(params: P, frames, cfg: ModelConfig):
+    """Whisper-style bidirectional encoder over precomputed frame embeds."""
+    x = frames.astype(_dt(cfg))
+    pos = jnp.arange(x.shape[1])[None, :]
+
+    def fn(h, lp):
+        a, _ = _attn_block(h, lp, cfg, pos, causal=False)
+        h = h + a
+        hh = layers.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        return h + layers.swiglu(hh, lp["mlp"])
+
+    x = _scan_blocks(x, params["enc_blocks"], cfg, fn)
+    return layers.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params: P, tokens, cfg: ModelConfig, prefix_embeds=None,
+            encoder_frames=None):
+    """Training forward -> final hidden states (B, S, d)."""
+    x = embed_tokens(params, tokens, cfg, prefix_embeds)
+    positions = jnp.arange(x.shape[1])[None, :]
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encoder_apply(params, encoder_frames, cfg)
+        ek, ev = None, None
+
+        def fn(h, lp):
+            a, _ = _attn_block(h, lp, cfg, positions, causal=True)
+            h = h + a
+            hx = layers.rmsnorm(h, lp["lnx"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhe->bshe", hx, lp["xattn"]["wq"])
+            k = jnp.einsum("bsd,dhe->bshe", enc_out, lp["xattn"]["wk"])
+            v = jnp.einsum("bsd,dhe->bshe", enc_out, lp["xattn"]["wv"])
+            o = layers.flash_attention(q, k, v, causal=False,
+                                       q_chunk=cfg.q_chunk,
+                                       kv_chunk=cfg.kv_chunk,
+                                       unroll=cfg.unroll_scans)
+            h = h + jnp.einsum("bshe,hed->bsd", o, lp["xattn"]["wo"])
+            hh = layers.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            return h + layers.swiglu(hh, lp["mlp"])
+
+        x = _scan_blocks(x, params["blocks"], cfg, fn)
+    else:
+        x = _scan_blocks(x, params["blocks"], cfg,
+                         lambda h, lp: block_train(h, lp, cfg, positions))
+    return layers.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+
+
+def lm_head(params: P, h, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", h, w)
+
+
+def chunked_ce_loss(params: P, h, labels, cfg: ModelConfig,
+                    chunk: int = 512):
+    """Cross-entropy without materializing (B, S, V) logits at once."""
+    B, S, d = h.shape
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    c = min(chunk, S)
+    n = -(-S // c)
+    pad = n * c - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    hc = h.reshape(B, n, c, d)
+    lc = labels.reshape(B, n, c)
+
+    @jax.checkpoint  # recompute (B,c,V) logits in backward: never resident
+    def chunk_loss(hb, lb):
+        logits = jnp.einsum("bcd,dv->bcv", hb, w).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    def step(acc, inp):
+        hb, lb = inp                      # (B, c, d), (B, c)
+        return acc + chunk_loss(hb, lb), None
+
+    if cfg.unroll_scans:  # probe mode: make every chunk's matmul visible
+        tot = jnp.float32(0.0)
+        for i in range(n):
+            tot = tot + chunk_loss(hc[:, i], lc[:, i])
+    else:
+        tot, _ = jax.lax.scan(step, jnp.float32(0.0),
+                              (hc.transpose(1, 0, 2, 3), lc.transpose(1, 0, 2)))
+    return tot / (B * S)
+
+
+# ================================================================== prefill
+
+def prefill(params: P, tokens, cfg: ModelConfig, max_len: Optional[int] = None,
+            prefix_embeds=None, encoder_frames=None):
+    """Forward pass that also builds the decode cache.
+
+    Returns (last-position logits (B, V), cache).  Attention KV are cached
+    post-RoPE at absolute positions; SSM blocks return their final state.
+    """
+    x = embed_tokens(params, tokens, cfg, prefix_embeds)
+    B, S = x.shape[0], x.shape[1]
+    max_len = max(max_len or 0, S)  # prefix embeds extend the true length
+    positions = jnp.arange(S)[None, :]
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encoder_apply(params, encoder_frames, cfg)
+
+    def fn(h, lp):
+        ys = {}
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe", "encdec"):
+            hn = layers.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = layers.attn_proj(hn, lp["attn"], cfg)
+            q = layers.rope(q, positions, cfg.rope_theta)
+            k = layers.rope(k, positions, cfg.rope_theta)
+            o = layers.flash_attention(q, k, v, causal=True,
+                                       window=cfg.sliding_window,
+                                       q_chunk=cfg.q_chunk,
+                                       kv_chunk=cfg.kv_chunk,
+                                       unroll=cfg.unroll_scans)
+            h = h + layers.attn_out(o, lp["attn"])
+            ys["k"], ys["v"] = k, v
+            if fam == "encdec":
+                hx = layers.rmsnorm(h, lp["lnx"], cfg.norm_eps)
+                qx = jnp.einsum("bsd,dhe->bshe", hx, lp["xattn"]["wq"])
+                ek = jnp.einsum("bsd,dhe->bshe", enc_out, lp["xattn"]["wk"])
+                ev = jnp.einsum("bsd,dhe->bshe", enc_out, lp["xattn"]["wv"])
+                ox = layers.flash_attention(qx, ek, ev, causal=False,
+                                            q_chunk=cfg.q_chunk,
+                                            kv_chunk=cfg.kv_chunk,
+                                            unroll=cfg.unroll_scans)
+                h = h + jnp.einsum("bshe,hed->bsd", ox, lp["xattn"]["wo"])
+                ys["ek"], ys["ev"] = ek, ev
+            hn2 = layers.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            if fam == "moe":
+                h = h + moe_mod.moe_block(hn2, lp["moe"], cfg)
+            else:
+                h = h + layers.swiglu(hn2, lp["mlp"])
+        elif fam == "ssm":
+            hn = layers.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            o, st = ssm_mod.ssm_block(hn, lp["ssm"], cfg, return_state=True)
+            h = h + o
+            ys["ssm"] = st
+        elif fam == "hybrid":
+            hn = layers.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = layers.attn_proj(hn, lp["attn"], cfg)
+            q = layers.rope(q, positions, cfg.rope_theta)
+            k = layers.rope(k, positions, cfg.rope_theta)
+            ao = layers.flash_attention(q, k, v, causal=True,
+                                        window=cfg.sliding_window,
+                                        q_chunk=cfg.q_chunk,
+                                        kv_chunk=cfg.kv_chunk,
+                                        unroll=cfg.unroll_scans)
+            ao = layers.attn_out(ao, lp["attn"])
+            so, st = ssm_mod.ssm_block(hn, lp["ssm"], cfg, return_state=True)
+            h = h + 0.5 * (ao + so)
+            hn2 = layers.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            h = h + layers.swiglu(hn2, lp["mlp"])
+            ys["k"], ys["v"], ys["ssm"] = k, v, st
+        return h, ys
+
+    if cfg.scan_layers:
+        x, ys = jax.lax.scan(lambda h, lp: fn(h, lp), x, params["blocks"])
+    else:
+        ys_list = []
+        for i in range(cfg.n_layers):
+            x, y = fn(x, _layer_slice(params["blocks"], i))
+            ys_list.append(y)
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys_list)
+    h = layers.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    logits = lm_head(params, h[:, -1:], cfg)[:, 0]
+
+    cache = init_cache(cfg, B, max_len)
+    if "k" in cache:
+        eff = cache["k"].shape[2]
+        src_k, src_v = ys["k"], ys["v"]
+        if cfg.sliding_window and eff < src_k.shape[2]:
+            # rotating buffer invariant: position p lives in slot p % eff
+            src_k = jnp.roll(src_k[:, :, -eff:], (S - eff) % eff, axis=2)
+            src_v = jnp.roll(src_v[:, :, -eff:], (S - eff) % eff, axis=2)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], src_k.astype(cache["k"].dtype), 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], src_v.astype(cache["v"].dtype), 0, axis=2)
+    if "ssm" in cache:
+        cache["ssm"] = ys["ssm"]
+    if "ek" in cache:
+        cache["ek"], cache["ev"] = ys["ek"], ys["ev"]
+    cache["len"] = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+# ================================================================== decode
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> P:
+    """Decode cache pytree; attention caches are sequence-sharded."""
+    dtype = _dt(cfg)
+    L = cfg.n_layers
+    cache: P = dict(len=jnp.zeros((), jnp.int32))
+    eff = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    if cfg.family in ("dense", "vlm", "moe", "encdec", "hybrid"):
+        cache["k"] = jnp.zeros((L, batch, eff, cfg.n_kv_heads, cfg.hd), dtype)
+        cache["v"] = jnp.zeros((L, batch, eff, cfg.n_kv_heads, cfg.hd), dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        cache["ssm"] = jnp.zeros((L, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                                  cfg.ssm_state), jnp.float32)
+    if cfg.family == "encdec":
+        cache["ek"] = jnp.zeros((L, batch, cfg.encoder_seq, cfg.n_kv_heads,
+                                 cfg.hd), dtype)
+        cache["ev"] = jnp.zeros((L, batch, cfg.encoder_seq, cfg.n_kv_heads,
+                                 cfg.hd), dtype)
+    return cache
+
+
+def decode_step(params: P, cache: P, token, cfg: ModelConfig):
+    """One token for the whole batch. token: (B, 1) int32."""
+    x = params["embed"][token] * 1.0
+    pos = cache["len"]
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    has_attn = "k" in cache
+    eff = cache["k"].shape[2] if has_attn else 0
+    # rotating slot only for sliding-window caches; full caches write at pos
+    # (XLA clamps OOB starts — callers must size max_len for decode room)
+    widx = (pos % eff if cfg.sliding_window else pos) if has_attn else 0
+
+    def step(h, lp_and_cache):
+        lp, kc, vc, sc, ekc, evc = lp_and_cache
+        new_k, new_v, new_s = kc, vc, sc
+        if cfg.family in ("dense", "vlm", "moe", "encdec"):
+            hn = layers.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = layers.attn_proj(hn, lp["attn"], cfg)
+            q = layers.rope(q, positions, cfg.rope_theta)
+            k = layers.rope(k, positions, cfg.rope_theta)
+            new_k = jax.lax.dynamic_update_slice_in_dim(kc, k, widx, axis=1)
+            new_v = jax.lax.dynamic_update_slice_in_dim(vc, v, widx, axis=1)
+            clen = jnp.minimum(pos + 1, eff) * jnp.ones((h.shape[0],), jnp.int32)
+            o = layers.decode_attention(q, new_k, new_v, clen)
+            h = h + layers.attn_out(o, lp["attn"])
+            if cfg.family == "encdec":
+                hx = layers.rmsnorm(h, lp["lnx"], cfg.norm_eps)
+                qx = jnp.einsum("bsd,dhe->bshe", hx, lp["xattn"]["wq"])
+                enc_len = ekc.shape[1] * jnp.ones((h.shape[0],), jnp.int32)
+                ox = layers.decode_attention(qx, ekc, evc, enc_len)
+                h = h + jnp.einsum("bshe,hed->bsd", ox, lp["xattn"]["wo"])
+            hn2 = layers.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                h = h + moe_mod.moe_block(hn2, lp["moe"], cfg)
+            else:
+                h = h + layers.swiglu(hn2, lp["mlp"])
+        elif cfg.family == "ssm":
+            hn = layers.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            o, new_s = ssm_mod.ssm_decode_step(hn, lp["ssm"], cfg, sc)
+            h = h + o
+        elif cfg.family == "hybrid":
+            hn = layers.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = layers.attn_proj(hn, lp["attn"], cfg)
+            q = layers.rope(q, positions, cfg.rope_theta)
+            k = layers.rope(k, positions, cfg.rope_theta)
+            new_k = jax.lax.dynamic_update_slice_in_dim(kc, k, widx, axis=1)
+            new_v = jax.lax.dynamic_update_slice_in_dim(vc, v, widx, axis=1)
+            clen = jnp.minimum(pos + 1, eff) * jnp.ones((h.shape[0],), jnp.int32)
+            ao = layers.attn_out(
+                layers.decode_attention(q, new_k, new_v, clen), lp["attn"])
+            so, new_s = ssm_mod.ssm_decode_step(hn, lp["ssm"], cfg, sc)
+            h = h + 0.5 * (ao + so)
+            hn2 = layers.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            h = h + layers.swiglu(hn2, lp["mlp"])
+        return h, (new_k, new_v, new_s)
+
+    L = cfg.n_layers
+    dummy = jnp.zeros((L, 1, 1), _dt(cfg))
+    kc = cache.get("k", dummy)
+    vc = cache.get("v", dummy)
+    sc = cache.get("ssm", jnp.zeros((L, 1, 1, 1, 1), jnp.float32))
+    ekc = cache.get("ek", dummy)
+    evc = cache.get("ev", dummy)
+
+    xs_all = (params["blocks"], kc, vc, sc, ekc, evc)
+    if cfg.scan_layers:
+        h, (nk, nv, ns) = jax.lax.scan(lambda h, xs: step(h, xs), x, xs_all)
+    else:
+        h = x
+        outs = []
+        for i in range(cfg.n_layers):
+            h, o = step(h, jax.tree_util.tree_map(lambda p: p[i], xs_all))
+            outs.append(o)
+        nk, nv, ns = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *outs)
+    h = layers.rmsnorm(h, params["norm_f"], cfg.norm_eps)
+    logits = lm_head(params, h, cfg)
+    new_cache = dict(cache)
+    new_cache["len"] = cache["len"] + 1
+    if "k" in cache:
+        new_cache["k"], new_cache["v"] = nk, nv
+    if "ssm" in cache:
+        new_cache["ssm"] = ns
+    return logits, new_cache

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts block with capacity-based token dropping (EP-friendly).
+
+Dispatch uses the scatter/gather formulation: tokens claim a slot inside
+their expert's capacity buffer (cumsum position), are scattered into an
+(E, C, d) buffer — sharded expert-parallel on the "model" mesh axis — run
+through a per-expert SwiGLU einsum, and are gathered back weighted by the
+router gates.  Top-k routing with softmax-over-selected renormalization
+(Kimi-K2 / Llama-4 style).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _he
+from ..parallel.api import shard_act
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return dict(
+        router=_he(ks[0], (d, E), jnp.float32, d),  # router in fp32
+        w1=_he(ks[1], (E, d, f), dtype, d),
+        w3=_he(ks[2], (E, d, f), dtype, d),
+        w2=_he(ks[3], (E, f, d), dtype, f),
+    )
+
+
+def _num_groups(T: int, target: int = 1024) -> int:
+    """Largest group count <= target dividing T (power-of-two friendly)."""
+    g = 1
+    while g * 2 <= target and T % (g * 2) == 0:
+        g *= 2
+    return g
+
+
+def moe_block(x: jax.Array, p: Dict, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).
+
+    Grouped capacity dispatch: tokens are split into G groups, the
+    position-in-expert cumsum runs WITHIN each group, and the dispatch
+    buffer is (G, E, cap, d) sharded group->data (DP) and expert->model
+    (EP).  A single global cumsum would be sequential across data shards —
+    SPMD replicates it, costing data_axis x redundant FLOPs and terabytes
+    of HLO bytes (the kimi-k2 train_4k baseline; EXPERIMENTS.md §Perf it.1).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = _num_groups(T)
+    gs = T // G                                            # tokens per group
+    xt = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(gates_all, k)               # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(cfg.moe_capacity_factor * gs * k / E))
+    cap = max(4, -(-cap // 4) * 4)
+
+    # per-group sort-based ranking -> slot within (group, expert).
+    # (iteration 2: the one-hot cumsum materialized (G, gs*k, E) int32 —
+    # ~13 TB of HLO bytes per layer at kimi scale; a stable sort ranks
+    # tokens in O(gs*k log) with only (G, gs*k) intermediates.)
+    expert = idx.reshape(G, gs * k)
+    order = jnp.argsort(expert, axis=-1, stable=True)      # (G, gs*k)
+    sorted_ex = jnp.take_along_axis(expert, order, axis=-1)
+    # first position of each expert's run inside the sorted array
+    seg_start = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_ex)
+    pos_sorted = (jnp.arange(gs * k)[None, :]
+                  - jnp.take_along_axis(seg_start, sorted_ex, axis=-1))
+    inv = jnp.argsort(order, axis=-1)                      # inverse perm
+    slot_in_e = jnp.take_along_axis(pos_sorted, inv, axis=-1)
+    keep = slot_in_e < cap
+    slot = jnp.where(keep, expert * cap + slot_in_e, E * cap)
+
+    xin = jnp.repeat(xt, k, axis=0).reshape(G, gs * k, d)
+    masked = xin * keep[..., None].astype(x.dtype)
+    # NOTE §Perf it.3 (refuted): sharding the token-choice dim over the
+    # model axis here doubled collective bytes (extra resharding both ways);
+    # left data-sharded + model-replicated intentionally.
+
+    def scatter_group(sl, xi):
+        return jnp.zeros((E * cap + 1, d), x.dtype).at[sl].add(xi)
+
+    buf = jax.vmap(scatter_group)(slot, masked)[:, : E * cap]
+    buf = buf.reshape(G, E, cap, d)
+    # (G->data, E->model): expert-parallel with data-parallel capacity
+    buf = shard_act(buf, "batch", "experts", None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w1"]))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, p["w3"])
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    out_buf = shard_act(out_buf, "batch", "experts", None, None)
+
+    flat_out = out_buf.reshape(G, E * cap, d)
+    safe = jnp.minimum(slot, E * cap - 1)
+    picked = jnp.take_along_axis(flat_out, safe[..., None], axis=1)
+    picked = jnp.where(keep[..., None], picked, 0)
+    w = (gates.reshape(G, gs * k) * keep).astype(x.dtype)
+    y = jnp.sum((picked * w[..., None]).reshape(T, k, d).reshape(G * gs, k, d),
+                axis=1)
+    return y.reshape(B, S, d)

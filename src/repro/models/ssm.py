@@ -1,0 +1,156 @@
+"""Mamba2 SSD (state-space duality) block — chunked parallel scan.
+
+Minimal SSD algorithm (Dao & Gu 2024): within a chunk, the sequence mixing
+is a masked quadratic form (the "duality" with attention); across chunks a
+linear recurrence carries the (H, P, N) state with scalar-per-head decay.
+Decode is the O(1) recurrent update.  Pure jnp/lax — scan-friendly and
+shardable (heads on the "model" axis).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _he
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    di = d * cfg.ssm_expand
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return dict(
+        in_x=_he(ks[0], (d, di), dtype, d),
+        in_z=_he(ks[1], (d, di), dtype, d),
+        in_B=_he(ks[2], (d, N), dtype, d),
+        in_C=_he(ks[3], (d, N), dtype, d),
+        in_dt=_he(ks[4], (d, H), dtype, d),
+        out=_he(ks[5], (di, d), dtype, di),
+        A_log=jnp.zeros((H,), jnp.float32),
+        D=jnp.ones((H,), jnp.float32),
+        dt_bias=jnp.zeros((H,), jnp.float32),
+    )
+
+
+def _segsum(z):
+    """log-space cumulative decay matrix: L[i,j] = sum_{j<m<=i} z[m] (i>=j)."""
+    T = z.shape[-1]
+    cs = jnp.cumsum(z, axis=-1)
+    L = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((T, T), bool))
+    return jnp.where(mask, L, -jnp.inf)
+
+
+def ssd_scan(x, dt, B, C, A, prev_state=None, chunk: int = 256,
+             unroll: bool = False):
+    """Chunked SSD. x: (b,S,H,P), dt: (b,S,H), B/C: (b,S,N), A: (H,) < 0.
+
+    Returns (y (b,S,H,P), final_state (b,H,P,N)).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(b, nc, Q, H, P)
+    dtc = dt.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, N)
+    Cc = C.reshape(b, nc, Q, N)
+    dA = dtc * A  # (b,nc,Q,H) negative decays
+
+    # within-chunk (diagonal blocks): y_i += C_i . sum_j exp(seg) dt_j B_j x_j
+    Ls = _segsum(dA.transpose(0, 1, 3, 2))                 # (b,nc,H,Q,Q)
+    att = jnp.exp(Ls) * jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)[:, :, None]
+    y_diag = jnp.einsum("bchqs,bcsh,bcshp->bcqhp", att, dtc, xc)
+
+    # chunk states: contribution of each chunk to the carried state
+    dA_cum = jnp.cumsum(dA, axis=2)                        # (b,nc,Q,H)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,Q,H)
+    chunk_state = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                             Bc, dtc * decay_to_end, xc)   # (b,nc,H,P,N)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # (b,nc,H)
+
+    def carry_fn(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    h0 = prev_state if prev_state is not None else jnp.zeros((b, H, P, N),
+                                                             jnp.float32)
+    sts = chunk_state.transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    dcs = chunk_decay.transpose(1, 0, 2)
+    if unroll:  # probe mode: cross-chunk recurrence visible to cost_analysis
+        hs, hcur = [], h0
+        for i in range(nc):
+            hs.append(hcur)
+            hcur = hcur * dcs[i][..., None, None] + sts[i]
+        hT = hcur
+        h_before = jnp.stack(hs, axis=1)                   # (b,nc,H,P,N)
+    else:
+        hT, h_before = jax.lax.scan(carry_fn, h0, (sts, dcs))
+        h_before = h_before.transpose(1, 0, 2, 3, 4)       # (b,nc,H,P,N)
+
+    # cross-chunk: y_i += C_i . exp(cum dA_i) h_in
+    decay_in = jnp.exp(dA_cum)                             # (b,nc,Q,H)
+    y_cross = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc, decay_in, h_before.astype(x.dtype))
+    y = (y_diag + y_cross).reshape(b, nc * Q, H, P)[:, :S]
+    return y, hT
+
+
+def ssm_block(x, p: Dict, cfg: ModelConfig, prev_state=None,
+              return_state: bool = False):
+    """Full Mamba2 mixer. x: (B,S,d)."""
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xin = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["in_C"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["in_dt"]).astype(jnp.float32)
+        + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    b, S, di = xin.shape
+    xh = xin.reshape(b, S, H, P)
+    y, state = ssd_scan(xh, dt, Bm, Cm, A, prev_state, cfg.ssm_chunk,
+                        unroll=cfg.unroll_scans)
+    y = y + xh * p["D"][None, None, :, None]
+    y = (y.reshape(b, S, di) * jax.nn.silu(z)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"])
+    if return_state:
+        return out, state
+    return out
+
+
+def ssm_decode_step(x, p: Dict, cfg: ModelConfig, state):
+    """O(1) recurrent update. x: (B,1,d), state: (B,H,P,N)."""
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xin = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["in_B"])[:, 0]      # (B,N)
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["in_C"])[:, 0]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["in_dt"]).astype(jnp.float32)[:, 0]
+        + p["dt_bias"])                                     # (B,H)
+    A = -jnp.exp(p["A_log"])
+    b = x.shape[0]
+    xh = xin.reshape(b, H, P)
+    decay = jnp.exp(dt * A)                                 # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh.astype(jnp.float32),
+                     Bm.astype(jnp.float32))
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = (y.reshape(b, 1, H * P) * jax.nn.silu(z)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["out"]), state

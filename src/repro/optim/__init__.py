@@ -1,0 +1,6 @@
+from .adamw import adamw_init, adamw_update, TrainState, make_train_state
+from .adafactor import adafactor_init, adafactor_update
+from .schedule import cosine_schedule
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+           "TrainState", "make_train_state", "cosine_schedule"]

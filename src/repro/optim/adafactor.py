@@ -1,0 +1,56 @@
+"""Factored second-moment optimizer (Adafactor-style) for trillion-parameter
+configs: O(rows+cols) state instead of O(rows*cols)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p.shape):
+            return dict(r=jnp.zeros(p.shape[:-1], jnp.float32),
+                        c=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+        return dict(v=jnp.zeros(p.shape, jnp.float32))
+    return dict(stats=jax.tree_util.tree_map(
+        init, params, is_leaf=lambda x: hasattr(x, "shape")),
+        count=jnp.zeros((), jnp.int32))
+
+
+def adafactor_update(grads, opt, params, lr, *, decay=0.99, eps=1e-30,
+                     clip_norm=1.0, weight_decay=0.0):
+    from .adamw import global_norm
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = opt["count"] + 1
+
+    def upd(g, st, p):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + eps
+        if "r" in st:
+            r = decay * st["r"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            c = decay * st["c"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = (r[..., None] * c[..., None, :]
+                     / jnp.maximum(jnp.mean(r, axis=-1, keepdims=True)
+                                   [..., None], eps))
+            step = g / jnp.sqrt(jnp.maximum(denom, eps))
+            new_st = dict(r=r, c=c)
+        else:
+            v = decay * st["v"] + (1 - decay) * g2
+            step = g / jnp.sqrt(jnp.maximum(v, eps))
+            new_st = dict(v=v)
+        step = lr * step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), new_st
+
+    leaves_p, tdef = jax.tree_util.tree_flatten(params)
+    leaves_g = jax.tree_util.tree_leaves(grads)
+    is_stat = lambda x: isinstance(x, dict) and ("r" in x or "v" in x)
+    leaves_s = tdef.flatten_up_to(opt["stats"])
+    out = [upd(g, s, p) for g, s, p in zip(leaves_g, leaves_s, leaves_p)]
+    return (tdef.unflatten([o[0] for o in out]),
+            dict(stats=tdef.unflatten([o[1] for o in out]), count=count),
+            gnorm)

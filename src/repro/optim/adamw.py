@@ -1,0 +1,77 @@
+"""AdamW with global-norm clipping; optimizer-state dtype configurable
+(bf16 moments at trillion scale; see DESIGN.md §4)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return dict(m=jax.tree_util.tree_map(zeros, params),
+                v=jax.tree_util.tree_map(zeros, params),
+                count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree_util.tree_leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(grads, opt, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, clip_norm=1.0):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = opt["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m1 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v1 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        # clamp: a lossy-restored v can carry tiny negative error -> NaN sqrt
+        v1 = jnp.maximum(v1, 0.0)
+        step = lr * (m1 / c1) / (jnp.sqrt(v1 / c2) + eps)
+        step = step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), \
+            m1.astype(m.dtype), v1.astype(v.dtype)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt["m"])
+    flat_v = jax.tree_util.tree_leaves(opt["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, dict(m=new_m, v=new_v, count=count), gnorm
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def make_train_state(params, opt_kind: str = "adamw",
+                     opt_dtype=jnp.float32) -> TrainState:
+    from .adafactor import adafactor_init
+    if opt_kind == "adafactor":
+        opt = adafactor_init(params)
+    else:
+        opt = adamw_init(params, opt_dtype)
+    return TrainState(params=params, opt=opt, step=jnp.zeros((), jnp.int32))

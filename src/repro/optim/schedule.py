@@ -1,0 +1,13 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr=3e-4, warmup=100, total=10000,
+                    min_ratio=0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * (step + 1) / max(warmup, 1)  # step 0 must not be lr=0
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,88 @@
+"""Logical-axis sharding context.
+
+Models call ``shard_act(x, "batch", None, "heads", None)`` with *logical*
+axis names; a context installed by the launcher maps them to mesh axes with
+divisibility checks (falling back to replication — e.g. qwen2's 14 heads
+cannot tile a 16-way model axis, so its attention runs data-parallel while
+its FFN/vocab still use TP; see DESIGN.md §4).  Without a context the call
+is a no-op, so the same model code runs in CPU unit tests.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_STATE = threading.local()
+
+#: logical name -> mesh axis (or tuple of axes for the batch dimension)
+LOGICAL_TO_MESH = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),        # sequence sharding (KV caches, long-context)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "d_fsdp": ("data",),      # FSDP weight sharding
+    "d_tp": ("model",),       # embedding d: vocab-sharded gathers trip an
+                              # XLA:CPU SPMD crash on 3-axis meshes
+    "ssm_heads": ("model",),
+}
+
+
+def _mesh_axes(mesh: Mesh, want: Tuple[str, ...]) -> Tuple[str, ...]:
+    return tuple(a for a in want if a in mesh.axis_names)
+
+
+def resolve_axis(mesh: Mesh, logical: Optional[str], dim: int):
+    """Mesh axes for one tensor dim, or None if not divisible/unknown."""
+    if logical is None:
+        return None
+    axes = _mesh_axes(mesh, _logical_map(logical))
+    if not axes:
+        return None
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if dim % size != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+@contextmanager
+def sharding_ctx(mesh: Mesh, overrides: Optional[dict] = None):
+    """``overrides`` remaps logical names (e.g. {"batch": ("data",)} inside
+    a shard_map body where the "pod" axis is manual)."""
+    prev = getattr(_STATE, "mesh", None)
+    prev_ovr = getattr(_STATE, "overrides", None)
+    _STATE.mesh = mesh
+    _STATE.overrides = overrides
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+        _STATE.overrides = prev_ovr
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def _logical_map(name: str):
+    ovr = getattr(_STATE, "overrides", None)
+    if ovr and name in ovr:
+        return ovr[name]
+    return LOGICAL_TO_MESH[name]
+
+
+def shard_act(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = PartitionSpec(*[resolve_axis(mesh, l, d)
+                           for l, d in zip(logical, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

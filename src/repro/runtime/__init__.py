@@ -1,0 +1,3 @@
+from .driver import TrainDriver, DriverConfig, FailureInjector
+
+__all__ = ["TrainDriver", "DriverConfig", "FailureInjector"]

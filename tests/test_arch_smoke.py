@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + no NaNs (full configs are exercised only via
+the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from dataclasses import replace
+
+from repro.configs import ARCHS, get_config
+from repro.launch.steps import make_train_step
+from repro.models import model as M
+from repro.optim import make_train_state
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    batch = {"tokens": jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["prefix"] = jax.random.normal(
+            KEY, (B, cfg.n_prefix_embeds, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    h = M.forward(params, batch["tokens"][:, :-1], cfg,
+                  prefix_embeds=batch.get("prefix"),
+                  encoder_frames=batch.get("frames"))
+    extra = cfg.n_prefix_embeds if cfg.family == "vlm" else 0
+    assert h.shape == (2, 32 + extra, cfg.d_model)
+    assert bool(jnp.isfinite(h).all())
+    logits = M.lm_head(params, h[:, -1:], cfg)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, KEY)
+    state = make_train_state(params)
+    step = jax.jit(make_train_step(cfg))
+    state2, m = step(state, _batch(cfg))
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["loss"]) > 0
+    # params actually moved
+    delta = jax.tree_util.tree_reduce(
+        lambda a, x: a + float(jnp.abs(x).sum()),
+        jax.tree_util.tree_map(lambda a, b: a - b, state.params, state2.params),
+        0.0)
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.family == "moe":
+        cfg = replace(cfg, moe_capacity_factor=8.0)  # no token dropping
+    params = M.init_params(cfg, KEY)
+    B, S = 2, 32
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["encoder_frames"] = jax.random.normal(
+            KEY, (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        kw["prefix_embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_prefix_embeds, cfg.d_model))
+    total = S + cfg.n_prefix_embeds + 8
+    logits, cache = M.prefill(params, tokens, cfg, max_len=total,
+                              prefix_embeds=kw.get("prefix_embeds"),
+                              encoder_frames=kw.get("encoder_frames"))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    lg, cache = M.decode_step(params, cache, tok, cfg)
+    full = M.forward(params, jnp.concatenate([tokens, tok], 1), cfg, **kw)
+    lf = M.lm_head(params, full[:, -1:], cfg)[:, 0]
+    tol = 5e-4 if cfg.sliding_window else 1e-4
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(lf),
+                               atol=tol, rtol=1e-3)
+
+
+def test_param_count_sanity():
+    """Analytic param counts are within family-plausible ranges at full size."""
+    approx = {
+        "yi-6b": (5e9, 8e9),
+        "command-r-35b": (30e9, 42e9),
+        "qwen2-0.5b": (3e8, 7e8),
+        "smollm-360m": (2.5e8, 5e8),
+        "mamba2-370m": (2.5e8, 5e8),
+        "kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+        # assignment table: MoE in EVERY layer (real Maverick interleaves
+        # dense layers) -> analytic count lands at ~778B
+        "llama4-maverick-400b-a17b": (3e11, 9e11),
+        "internvl2-1b": (3e8, 9e8),
+        "hymba-1.5b": (1e9, 2.2e9),
+        "whisper-tiny": (2e7, 7e7),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e},{hi:.1e}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    assert cfg.active_param_count() < 0.1 * cfg.param_count()

@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.interp_quant import interp_quant, interp_quant_ref
+from repro.kernels.bitplane_pack import (bitplane_pack, bitplane_pack_ref,
+                                         unpack_planes_ref)
+from repro.core import negabinary as nbmod
+from repro.core import bitplane as bpmod
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("shape,s", [
+    ((8, 128), 1), ((8, 128), 4), ((16, 256), 1), ((16, 256), 8),
+    ((3, 96), 1),          # unaligned rows -> wrapper pads
+    ((8, 130), 1),         # odd width, boundary fallback at right edge
+    ((8, 129), 2),         # odd width, stride 2
+    ((40, 512), 16),
+])
+@pytest.mark.parametrize("interp", ["linear", "cubic"])
+def test_interp_quant_matches_ref(shape, s, interp, dtype):
+    if dtype == jnp.float64 and not jax.config.read("jax_enable_x64"):
+        pytest.skip("x64 disabled")
+    rng = np.random.default_rng(hash((shape, s, interp)) % 2 ** 31)
+    R, C = shape
+    if len(range(s, C, 2 * s)) == 0:
+        pytest.skip("no targets")
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    # xhat: known points only (even multiples of s carry values)
+    xh = jnp.asarray(rng.standard_normal(shape), dtype)
+    eb = 1e-3
+    q, recon = interp_quant(x, xh, s=s, eb=eb, interp=interp)
+    q_ref, recon_ref = interp_quant_ref(x, xh, s, eb, interp)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(recon_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_interp_quant_error_bound():
+    """Reconstruction at targets obeys |x - recon| <= eb."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((16, 256)), jnp.float32)
+    xh = jnp.asarray(rng.standard_normal((16, 256)), jnp.float32)
+    eb = 1e-2
+    q, recon = interp_quant(x, xh, s=2, eb=eb)
+    tgt = np.asarray(x)[:, 2::4]
+    assert np.abs(tgt - np.asarray(recon)).max() <= eb * (1 + 1e-5)
+
+
+@pytest.mark.parametrize("shape", [(8, 32), (8, 128), (16, 256), (5, 96),
+                                   (8, 131)])
+def test_bitplane_pack_matches_ref(shape):
+    rng = np.random.default_rng(shape[1])
+    q = rng.integers(-(1 << 20), 1 << 20, size=shape).astype(np.int32)
+    packed, n = bitplane_pack(q)
+    # oracle on the padded array the wrapper actually packed
+    R, C = shape
+    pr, pc = (-R) % 8, (-C) % 32
+    qp = np.pad(q, ((0, pr), (0, pc)))
+    ref = bitplane_pack_ref(jnp.asarray(qp))
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(ref))
+
+
+@pytest.mark.parametrize("keep", [0, 1, 5, 17, 32])
+def test_bitplane_pack_prefix_decodes_to_truncation(keep):
+    """Kernel planes decode (via oracle) to negabinary truncation — the same
+    invariant the CPU container relies on (§4.4)."""
+    rng = np.random.default_rng(keep)
+    q = rng.integers(-(1 << 24), 1 << 24, size=(8, 64)).astype(np.int32)
+    packed, _ = bitplane_pack(q)
+    got_nb = np.asarray(unpack_planes_ref(jnp.asarray(packed), keep))
+    want = nbmod.truncate(nbmod.to_negabinary(q.astype(np.int64).ravel()),
+                          32 - keep).reshape(8, 64)
+    np.testing.assert_array_equal(got_nb, want.astype(np.uint32))
+
+
+def test_bitplane_pack_agrees_with_cpu_container_bits():
+    """Plane k bit content matches the CPU pipeline's XOR-encoded plane k."""
+    rng = np.random.default_rng(3)
+    q = rng.integers(-(1 << 15), 1 << 15, size=(8, 32)).astype(np.int32)
+    packed, _ = bitplane_pack(q)
+    nb = nbmod.to_negabinary(q.astype(np.int64).ravel())
+    planes = bpmod.split_planes(nb, 32)
+    enc = bpmod.xor_encode(planes)
+    for k in (0, 3, 12, 31):
+        word = np.asarray(packed[k]).reshape(8, 1)
+        bits = ((word >> np.arange(31, -1, -1, dtype=np.uint32)) & 1).ravel()
+        np.testing.assert_array_equal(bits.astype(np.uint8), enc[k])

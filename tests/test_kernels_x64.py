@@ -1,0 +1,24 @@
+"""Pallas kernel f64 sweep (x64 enabled per-test via context manager —
+flipping the global flag would poison dtype expectations of the rest of
+the suite running in the same process)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.interp_quant import interp_quant, interp_quant_ref
+
+
+@pytest.mark.parametrize("shape,s", [((8, 128), 1), ((16, 256), 4),
+                                     ((8, 130), 1)])
+@pytest.mark.parametrize("interp", ["linear", "cubic"])
+def test_interp_quant_f64(shape, s, interp):
+    with jax.experimental.enable_x64():
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal(shape), jnp.float64)
+        xh = jnp.asarray(rng.standard_normal(shape), jnp.float64)
+        q, recon = interp_quant(x, xh, s=s, eb=1e-6, interp=interp)
+        q_ref, recon_ref = interp_quant_ref(x, xh, s, 1e-6, interp)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+        np.testing.assert_allclose(np.asarray(recon), np.asarray(recon_ref),
+                                   rtol=1e-12, atol=1e-12)

@@ -1,0 +1,147 @@
+"""Model math invariants: flash attention vs naive oracle, SSD vs direct
+recurrence, causal masking, GQA broadcasting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import decode_attention, flash_attention
+from repro.models.ssm import ssd_scan
+
+
+def naive_attention(q, k, v, causal=True, window=0):
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) / np.sqrt(D)
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qi >= ki
+    if window:
+        mask &= qi - ki < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+@pytest.mark.parametrize("S,H,KV,D,qc,kc", [
+    (64, 4, 2, 16, 16, 16),
+    (100, 6, 3, 8, 32, 48),     # ragged: S % chunk != 0
+    (128, 8, 8, 16, 128, 128),  # single tile (MHA)
+    (96, 4, 1, 8, 24, 96),      # MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 24), (False, 0)])
+def test_flash_matches_naive(S, H, KV, D, qc, kc, causal, window):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, S, KV, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          q_chunk=qc, kv_chunk=kc)
+    want = naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_grads_match_naive():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 48, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 48, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 48, 2, 8)), jnp.float32)
+
+    def f(fn):
+        return jax.grad(lambda a, b, c: jnp.sum(
+            fn(a, b, c) ** 2), argnums=(0, 1, 2))(q, k, v)
+
+    ga = f(lambda a, b, c: flash_attention(a, b, c, causal=True,
+                                           q_chunk=16, kv_chunk=16))
+    gb = f(lambda a, b, c: naive_attention(a, b, c, causal=True))
+    for x, y in zip(ga, gb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=5e-4, rtol=5e-4)
+
+
+def test_causality():
+    """Perturbing a future token must not change past outputs."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((1, 32, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 32, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 32, 2, 8)), jnp.float32)
+    base = flash_attention(q, k, v, causal=True, q_chunk=8, kv_chunk=8)
+    k2 = k.at[:, 20:].set(rng.standard_normal((1, 12, 2, 8)))
+    v2 = v.at[:, 20:].set(rng.standard_normal((1, 12, 2, 8)))
+    pert = flash_attention(q, k2, v2, causal=True, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(base[:, :20]),
+                               np.asarray(pert[:, :20]), atol=1e-6)
+    assert not np.allclose(np.asarray(base[:, 21:]), np.asarray(pert[:, 21:]))
+
+
+def test_decode_attention_matches_naive_last_position():
+    rng = np.random.default_rng(3)
+    S = 24
+    k = jnp.asarray(rng.standard_normal((2, S, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, S, 2, 8)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((2, 1, 4, 8)), jnp.float32)
+    # pad cache to 32, only S valid
+    kp = jnp.pad(k, ((0, 0), (0, 8), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 8), (0, 0), (0, 0)))
+    got = decode_attention(q, kp, vp, jnp.full((2,), S))
+    want = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------------ SSD
+
+def ssd_reference(x, dt, B, C, A):
+    """Direct O(S) recurrence: h_{t} = exp(dt_t A) h_{t-1} + dt_t B_t x_t."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    h = np.zeros((b, H, P, N))
+    ys = np.zeros((b, S, H, P))
+    x, dt, B, C = map(np.asarray, (x, dt, B, C))
+    A = np.asarray(A)
+    for t in range(S):
+        decay = np.exp(dt[:, t] * A)                       # (b,H)
+        upd = np.einsum("bh,bhp,bn->bhpn", dt[:, t], x[:, t], B[:, t])
+        h = h * decay[..., None, None] + upd
+        ys[:, t] = np.einsum("bn,bhpn->bhp", C[:, t], h)
+    return ys, h
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (40, 16), (16, 16), (33, 8)])
+def test_ssd_chunked_matches_recurrence(S, chunk):
+    rng = np.random.default_rng(4)
+    b, H, P, N = 2, 3, 4, 5
+    x = jnp.asarray(rng.standard_normal((b, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, S, H)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, S, N)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, S, N)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    y, h = ssd_scan(x, dt, B, C, A, chunk=chunk)
+    y_ref, h_ref = ssd_reference(x, dt, B, C, A)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), h_ref, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_state_carry_composes():
+    """scan(x1++x2) == scan(x2, prev_state=scan(x1).state)."""
+    rng = np.random.default_rng(5)
+    b, S, H, P, N = 1, 24, 2, 4, 3
+    x = jnp.asarray(rng.standard_normal((b, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, S, H)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, S, N)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, S, N)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    y_full, h_full = ssd_scan(x, dt, B, C, A, chunk=8)
+    y1, h1 = ssd_scan(x[:, :12], dt[:, :12], B[:, :12], C[:, :12], A, chunk=8)
+    y2, h2 = ssd_scan(x[:, 12:], dt[:, 12:], B[:, 12:], C[:, 12:], A,
+                      prev_state=h1, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_full[:, 12:]), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2),
+                               atol=1e-4, rtol=1e-4)

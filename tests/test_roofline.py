@@ -1,0 +1,57 @@
+"""Roofline extraction: HLO collective parser + term arithmetic."""
+import numpy as np
+
+from repro.launch.roofline import (Roofline, collective_bytes, _shape_bytes,
+                                   model_flops, PEAK_FLOPS, HBM_BW, LINK_BW)
+
+
+HLO_SNIPPET = """
+  %all-gather.1 = bf16[16,4096,448]{2,1,0} all-gather(bf16[1,4096,448]{2,1,0} %param.3), replica_groups={{0,1}}, dimensions={0}
+  %all-reduce.7 = f32[1024]{0} all-reduce(f32[1024]{0} %add.1), to_apply=%sum
+  %reduce-scatter.2 = (f32[8,128]{1,0}, f32[8,128]{1,0}) reduce-scatter(f32[16,128]{1,0} %p0, f32[16,128]{1,0} %p1), dimensions={0}
+  %collective-permute.1 = u32[64]{0} collective-permute(u32[64]{0} %x), source_target_pairs={{0,1}}
+  %dot.5 = f32[128,128]{1,0} dot(f32[128,64]{1,0} %a, f32[64,128]{1,0} %b)
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    got = collective_bytes(HLO_SNIPPET)
+    assert got["all-gather"] == 16 * 4096 * 448 * 2
+    assert got["all-reduce"] == 1024 * 4
+    assert got["reduce-scatter"] == 2 * 8 * 128 * 4
+    assert got["collective-permute"] == 64 * 4
+    assert "dot" not in got  # non-collectives ignored
+
+
+def test_shape_bytes_tuple():
+    assert _shape_bytes("(f32[2,3]{1,0}, bf16[4]{0})") == 2 * 3 * 4 + 4 * 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="train_4k", mesh="16x16", chips=256,
+                 hlo_flops=256 * PEAK_FLOPS,      # exactly 1s of compute
+                 hlo_bytes=256 * HBM_BW * 0.5,    # 0.5s of memory
+                 coll_bytes=256 * LINK_BW * 2.0,  # 2s of collectives
+                 coll_breakdown={}, model_flops=256 * PEAK_FLOPS * 0.5)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 0.5) < 1e-9
+    assert abs(r.t_collective - 2.0) < 1e-9
+    assert r.bottleneck == "collective"
+    assert abs(r.roofline_fraction - 0.25) < 1e-9  # 0.5s ideal / 2s worst
+    assert abs(r.useful_flops_ratio - 0.5) < 1e-9
+
+
+def test_model_flops_kinds():
+    from repro.configs import get_config, get_shape
+    cfg = get_config("yi-6b")
+    t = model_flops(cfg, get_shape("train_4k"))
+    p = model_flops(cfg, get_shape("prefill_32k"))
+    d = model_flops(cfg, get_shape("decode_32k"))
+    n = cfg.param_count()
+    assert abs(t - 6 * n * 4096 * 256) / t < 1e-6
+    assert abs(p - 2 * n * 32768 * 32) / p < 1e-6
+    assert abs(d - 2 * n * 128) / d < 1e-6
+    # MoE uses active params
+    moe = get_config("kimi-k2-1t-a32b")
+    tm = model_flops(moe, get_shape("train_4k"))
+    assert tm < 6 * moe.param_count() * 4096 * 256 * 0.2
