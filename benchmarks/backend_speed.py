@@ -1,0 +1,85 @@
+"""Compression backend throughput: numpy reference vs jax/Pallas kernels.
+
+Reports compress throughput for both backends on a >=2^20-element field
+(the acceptance smoke case), plus the chunked variant of the jax backend —
+chunking makes every slab share one jit cache entry, which is where the
+batched/vmapped encoding of the roadmap picks up.
+
+CPU caveat: off-TPU the Pallas kernels run in *interpret mode*, a
+correctness harness, so the jax numbers on CPU measure dispatch overhead,
+not kernel speed; parity of the emitted bytes is asserted regardless.  On
+TPU the same path compiles to Mosaic.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.backend_speed [--n 1048576] [--full]
+
+CI-smoke mode (default) runs one warm repetition per backend; --full adds
+a second field and best-of-3 timing.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from .common import csv_row, timed
+from repro.core import compress
+
+
+def _field(n: int) -> np.ndarray:
+    side = int(np.sqrt(n))
+    i, j = np.meshgrid(np.arange(side), np.arange(n // side), indexing="ij")
+    return np.sin(i * 0.01) * np.cos(j * 0.013) + 1e-3 * np.sin(i * j * 1e-4)
+
+
+def run(scale=None, n: int = 1 << 20, smoke: bool = True):
+    rows, checks = [], []
+    if n < 1 << 20:
+        raise SystemExit(f"--n must be >= {1 << 20} (2^20) elements, got {n}")
+    x = _field(n)
+    eb = 1e-5
+    repeat = 1 if smoke else 3
+    variants = [
+        ("numpy", dict(backend="numpy")),
+        ("jax", dict(backend="jax")),
+        ("jax_chunked", dict(backend="jax", chunk_elems=1 << 18)),
+    ]
+    bufs = {}
+    for name, kw in variants:
+        if name.startswith("jax"):
+            compress(x, eb, **kw)  # warm the jit caches out of the timing
+        buf, dt = timed(compress, x, eb, repeat=repeat, **kw)
+        bufs[name] = buf
+        mbps = x.nbytes / dt / 1e6
+        rows.append(csv_row(f"backend_speed/{x.size}el/{name}/compress",
+                            dt * 1e6, f"MBps={mbps:.1f};bytes={len(buf)}"))
+        print(rows[-1])
+    checks.append(("backend_parity_bytes", f"{x.size}el", "compress",
+                   bufs["numpy"] == bufs["jax"]))
+    if not smoke:
+        y = _field(1 << 22)
+        for name, kw in variants:
+            buf, dt = timed(compress, y, eb, repeat=1, **kw)
+            rows.append(csv_row(f"backend_speed/{y.size}el/{name}/compress",
+                                dt * 1e6,
+                                f"MBps={y.nbytes / dt / 1e6:.1f}"))
+            print(rows[-1])
+    return rows, checks
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=1 << 20,
+                    help="elements in the benchmark field (>= 2^20)")
+    ap.add_argument("--full", action="store_true",
+                    help="best-of-3 timing plus a 4M-element field")
+    args = ap.parse_args()
+    _, checks = run(n=args.n, smoke=not args.full)
+    for name, ds, op, ok in checks:
+        print(f"check {name}[{ds}/{op}]: {'ok' if ok else 'FAILED'}")
+    if not all(c[-1] for c in checks):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ def run(scale=None):
     from repro.compression.grad import compressed_psum
     from repro.launch.mesh import make_production_mesh
     from repro.launch.roofline import collective_bytes
+    from repro.parallel.compat import shard_map
 
     mesh = make_production_mesh(multi_pod=True)
     npods = mesh.shape["pod"]
@@ -39,9 +40,9 @@ def run(scale=None):
 
     out = []
     for name, fn in (("plain_f32", plain), ("ipcomp_bitplane", comp)):
-        f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("pod"),
-                                  out_specs=P("pod"), axis_names={"pod"},
-                                  check_vma=False))
+        f = jax.jit(shard_map(fn, mesh=mesh, in_specs=P("pod"),
+                              out_specs=P("pod"), axis_names={"pod"},
+                              check_vma=False))
         hlo = f.lower(g).compile().as_text()
         coll = collective_bytes(hlo)
         tot = sum(coll.values())

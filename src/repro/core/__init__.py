@@ -1,14 +1,21 @@
 """IPComp core: interpolation-based progressive error-bounded lossy compression.
 
 Public API:
-    compress(x, eb, interp)            -> archive bytes
+    compress(x, eb, interp, backend="numpy"|"jax"|"auto" (jax on TPU),
+             chunk_elems=None)         -> archive bytes (v1; v2 if chunked)
     decompress(buf)                    -> full-precision array
     retrieve(buf, error_bound=|max_bytes=|bitrate=) -> (array, RetrievalState)
     retrieve(reader, ..., state=state) -> incremental refinement (Algorithm 2)
+
+The "jax" backend runs the predict+quantize and bitplane-packing hot loops
+through the Pallas kernels (interpret mode on CPU) and emits archives
+byte-identical to the numpy reference; see ``jax_backend``.
 """
-from .ipcomp import compress, decompress, retrieve, open_archive, RetrievalState
+from .ipcomp import (compress, decompress, retrieve, open_archive,
+                     RetrievalState, ChunkedRetrievalState, chunk_bounds)
 from .interpolation import LINEAR, CUBIC
-from . import metrics
+from . import jax_backend, metrics
 
 __all__ = ["compress", "decompress", "retrieve", "open_archive",
-           "RetrievalState", "LINEAR", "CUBIC", "metrics"]
+           "RetrievalState", "ChunkedRetrievalState", "chunk_bounds",
+           "LINEAR", "CUBIC", "jax_backend", "metrics"]

@@ -86,6 +86,36 @@ def encode_level(nb: np.ndarray) -> Tuple[List[bytes], int]:
     return blobs, nbits
 
 
+def blobs_from_packed(packed: np.ndarray, n: int) -> Tuple[List[bytes], int]:
+    """Pre-packed XOR-coded plane words -> (blobs MSB-first, nbits).
+
+    ``packed`` is the (32, R, W) uint32 output of the ``bitplane_pack``
+    Pallas kernel *for 1-D input*: plane k = bit k of the XOR-encoded
+    negabinary word, each uint32 covering 32 consecutive elements with
+    element 0 at the MSB — the same bit order ``np.packbits`` emits.  Only
+    the first ``n`` elements are real; the 1-D wrapper appends its pad at
+    the END of the flat stream and pad words are all-zero (q=0 -> nb=0 ->
+    enc=0), so truncating the big-endian byte stream to ceil(n/8) bytes
+    reproduces ``compress_plane``'s output byte-for-byte.  (The wrapper's
+    2-D path pads columns mid-stream instead — callers must flatten first,
+    as ``jax_backend.encode_level`` does.)  Both backends therefore write
+    one archive format, and a mixed read path cannot exist.
+    """
+    occupied = [bool(packed[k].any()) for k in range(packed.shape[0])]
+    nbits = max((k + 1 for k, nz in enumerate(occupied) if nz), default=0)
+    if nbits == 0:
+        return [], 0
+    nbytes = (n + 7) // 8
+    blobs = []
+    for k in range(nbits - 1, -1, -1):
+        if not occupied[k]:
+            blobs.append(b"")  # all-zero plane: same convention as compress_plane
+            continue
+        raw = packed[k].astype(">u4").tobytes()[:nbytes]
+        blobs.append(zlib.compress(raw, ZLEVEL))
+    return blobs, nbits
+
+
 def decode_level(blobs: List[Optional[bytes]], nbits: int, n: int) -> np.ndarray:
     """Prefix of MSB-first blobs (None = not loaded) -> truncated negabinary."""
     planes: List[Optional[np.ndarray]] = [None] * nbits

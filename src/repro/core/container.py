@@ -1,10 +1,20 @@
 """IPComp archive container: random-access, independently decodable blocks.
 
-Layout:  magic "IPC1" | u32 header_len | header JSON | blob section.
+v1 layout:  magic "IPC1" | u32 header_len | header JSON | blob section.
 The header carries every per-level table the DP loader needs (plane sizes,
 truncation-loss tables, escape sizes), so planning a retrieval touches ONLY
 the header; the reader then fetches exactly the planned byte ranges —
 ``bytes_read`` is the retrieval-volume metric of Fig. 6/7.
+
+v2 (chunked) layout:  magic "IPC2" | u32 header_len | header JSON |
+concatenated v1 archives, one per fixed-size slab of the array (split along
+axis 0).  Chunks are compressed and decoded independently — the unit of
+batched/vmapped encoding and, later, of sharded compression — and each
+chunk's interior is still the v1 format, so every per-chunk read goes
+through the same ``ArchiveReader``.  The v2 header records only the slab
+boundaries and byte extents.  ``parse_meta``/``ArchiveReader`` keep
+accepting v1 archives unchanged; use ``open_reader`` to dispatch on the
+magic when the version is unknown.
 """
 from __future__ import annotations
 
@@ -17,6 +27,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 MAGIC = b"IPC1"
+MAGIC2 = b"IPC2"
 
 
 @dataclass
@@ -95,10 +106,14 @@ def write_archive(shape, dtype, eb, interp, L, anchors: np.ndarray,
     return prefix + b"".join(blobs)
 
 
-def parse_meta(buf: bytes) -> ArchiveMeta:
+def parse_meta(buf) -> ArchiveMeta:
+    """Parse a v1 header (accepts bytes or a zero-copy memoryview)."""
+    if buf[:4] == MAGIC2:
+        raise ValueError("chunked (v2) archive: use parse_chunked_meta / "
+                         "open_reader, or the top-level retrieve()")
     assert buf[:4] == MAGIC, "not an IPComp archive"
     (hlen,) = struct.unpack("<I", buf[4:8])
-    h = json.loads(buf[8:8 + hlen].decode())
+    h = json.loads(bytes(buf[8:8 + hlen]).decode())
     levels = [LevelMeta(**lv) for lv in h["levels"]]
     return ArchiveMeta(shape=h["shape"], dtype=h["dtype"], eb=h["eb"],
                        interp=h["interp"], L=h["L"],
@@ -140,3 +155,100 @@ class ArchiveReader:
     def escapes(self, level_idx: int) -> bytes:
         lv = self.meta.levels[level_idx]
         return self.read(lv.esc_offset, lv.esc_size, f"L{level_idx}E")
+
+
+# ------------------------------------------------------------- v2 (chunked)
+
+@dataclass
+class ChunkMeta:
+    start: int                 # slab [start, stop) along axis 0
+    stop: int
+    offset: int                # absolute byte offset of the chunk's archive
+    size: int                  # byte length of the chunk's archive
+
+
+@dataclass
+class ChunkedMeta:
+    shape: List[int]
+    dtype: str
+    eb: float
+    interp: str
+    chunks: List[ChunkMeta]
+    header_end: int
+    total_size: int
+
+    @property
+    def n_elements(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def write_chunked_archive(shape, dtype, eb, interp,
+                          bounds: List, chunk_bufs: List[bytes]) -> bytes:
+    """Frame independently compressed slab archives into one v2 container.
+
+    ``bounds[i] = (start, stop)`` is chunk i's row range along axis 0;
+    ``chunk_bufs[i]`` is its complete v1 archive.  The header deliberately
+    carries no record of the producing backend: numpy- and jax-written
+    archives are byte-identical, which the parity tests pin down.
+    """
+    sizes = [len(b) for b in chunk_bufs]
+    rel = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+
+    def render(base: int) -> bytes:
+        chunks = [dict(start=int(a), stop=int(b), offset=int(rel[i]) + base,
+                       size=sizes[i]) for i, (a, b) in enumerate(bounds)]
+        header = dict(version=2, shape=list(shape), dtype=str(dtype),
+                      eb=float(eb), interp=interp, chunks=chunks)
+        hj = json.dumps(header, separators=(",", ":")).encode()
+        return MAGIC2 + struct.pack("<I", len(hj)) + hj
+
+    base = 0
+    for _ in range(8):  # fixed-point on header length (offsets gain digits)
+        prefix = render(base)
+        if len(prefix) == base:
+            break
+        base = len(prefix)
+    return prefix + b"".join(chunk_bufs)
+
+
+def parse_chunked_meta(buf: bytes) -> ChunkedMeta:
+    assert buf[:4] == MAGIC2, "not a chunked (v2) IPComp archive"
+    (hlen,) = struct.unpack("<I", buf[4:8])
+    h = json.loads(buf[8:8 + hlen].decode())
+    chunks = [ChunkMeta(**c) for c in h["chunks"]]
+    return ChunkedMeta(shape=h["shape"], dtype=h["dtype"], eb=h["eb"],
+                       interp=h["interp"], chunks=chunks,
+                       header_end=8 + hlen, total_size=len(buf))
+
+
+class ChunkedArchiveReader:
+    """Per-chunk ``ArchiveReader``s sharing one retrieval-volume counter.
+
+    Sub-readers are created lazily and cached, so refinement re-reads of a
+    chunk hit the same fetched-range set and ``bytes_read`` stays the true
+    cumulative retrieval volume across progressive calls.
+    """
+
+    def __init__(self, buf: bytes):
+        self.buf = buf
+        self.meta = parse_chunked_meta(buf)
+        self._view = memoryview(buf)  # zero-copy chunk slicing
+        self._readers: Dict[int, ArchiveReader] = {}
+
+    def chunk_reader(self, i: int) -> ArchiveReader:
+        if i not in self._readers:
+            cm = self.meta.chunks[i]
+            self._readers[i] = ArchiveReader(
+                self._view[cm.offset: cm.offset + cm.size])
+        return self._readers[i]
+
+    @property
+    def bytes_read(self) -> int:
+        return sum(r.bytes_read for r in self._readers.values())
+
+
+def open_reader(buf: bytes):
+    """Version dispatch: v1 -> ArchiveReader, v2 -> ChunkedArchiveReader."""
+    if buf[:4] == MAGIC2:
+        return ChunkedArchiveReader(buf)
+    return ArchiveReader(buf)

@@ -5,11 +5,26 @@ Compression pipeline (Fig. 2):
     --negabinary--> nb_l --bitplanes + XOR predictive coding--> blobs
     --container--> archive bytes
 
+Two interchangeable compression backends produce this pipeline:
+``backend="numpy"`` (reference) and ``backend="jax"`` (Pallas kernels for
+the predict+quantize sweep and the bitplane packing; interpret mode on CPU,
+Mosaic on TPU — see ``jax_backend``).  Archives are byte-compatible: the
+decode path never needs to know which backend wrote them.
+
+``chunk_elems=N`` splits the array into independent slabs of ~N elements
+along axis 0 and frames the per-slab archives in a v2 container
+(``container.write_chunked_archive``).  Chunking bounds compression working
+memory, lets equal-shaped chunks share jit cache entries, and is the unit
+of future vmapped/sharded encoding; v1 (unchunked) archives remain the
+default and are always readable.
+
 Retrieval: the DP loader (§5) plans the minimum bitplane set for the
 requested error bound / bitrate; a single reconstruction pass produces the
 output (no multi-pass residual decompression).  ``refine`` implements
 Algorithm 2: it loads only the *additional* bitplanes and pushes a linear
-delta cascade on top of the previous reconstruction.
+delta cascade on top of the previous reconstruction.  For chunked archives
+every plan/refine step runs per chunk (a per-chunk L_inf bound implies the
+global one) and ``bytes_read`` aggregates across chunks.
 """
 from __future__ import annotations
 
@@ -19,47 +34,80 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from . import bitplane, container, interpolation, loader, negabinary, quantize
-from .container import ArchiveReader
+from . import (bitplane, container, interpolation, jax_backend, loader,
+               negabinary, quantize)
+from .container import ArchiveReader, ChunkedArchiveReader
 from .loader import LoadPlan
 
 
 # ----------------------------------------------------------------- compress
 
 def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
-             relative: bool = False) -> bytes:
+             relative: bool = False, backend: Optional[str] = "numpy",
+             chunk_elems: Optional[int] = None) -> bytes:
     """Compress ``x`` with point-wise error bound ``eb``.
 
     ``relative=True`` interprets eb as a fraction of the value range.
+    ``backend`` is "numpy" | "jax" | "auto"/None (jax on TPU where the
+    kernels compile, numpy elsewhere); both emit identical bytes.
+    ``chunk_elems`` switches to the chunked v2 container with
+    ~chunk_elems-sized independent slabs.
     """
     x = np.asarray(x)
     if relative:
         eb = eb * (float(x.max()) - float(x.min()) or 1.0)
     if eb <= 0:
         raise ValueError("error bound must be positive")
+    bk = jax_backend.resolve(backend)
+    if chunk_elems is None:
+        return _compress_single(x, eb, interp, bk)
+    bounds = chunk_bounds(x.shape, chunk_elems)
+    bufs = [_compress_single(x[a:b], eb, interp, bk) for a, b in bounds]
+    return container.write_chunked_archive(x.shape, x.dtype, eb, interp,
+                                           bounds, bufs)
+
+
+def chunk_bounds(shape, chunk_elems: int) -> List[Tuple[int, int]]:
+    """Split axis 0 into slabs of ~chunk_elems elements (>=1 row each)."""
+    if chunk_elems <= 0:
+        raise ValueError("chunk_elems must be positive")
+    row_elems = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+    rows = max(1, chunk_elems // max(row_elems, 1))
+    return [(a, min(a + rows, shape[0])) for a in range(0, shape[0], rows)]
+
+
+def _compress_single(x: np.ndarray, eb: float, interp: str,
+                     backend: str) -> bytes:
+    """One (chunk-sized) array -> one v1 archive, via the chosen backend."""
     shape, dtype = x.shape, x.dtype
     L = interpolation.num_levels(shape)
-    esc_records: List[List[Tuple[np.ndarray, np.ndarray]]] = [[] for _ in range(L)]
 
-    def quantizer(res: np.ndarray, tvals: np.ndarray):
-        q = quantize.quantize(res, eb)
-        esc = quantize.escape_mask(q)
-        recon = quantize.dequantize(q, eb)
-        if esc.any():
-            flat = np.flatnonzero(esc.ravel())
-            vals = tvals.ravel()[flat].astype(np.float64)  # absolute values
-            q.ravel()[flat] = 0
-            return q, recon, (flat, vals)
-        return q, recon, (np.zeros(0, np.int64), np.zeros(0, np.float64))
+    if backend == jax_backend.JAX:
+        _, qs, escs, anchors = jax_backend.decorrelate(
+            x.astype(np.float64), eb, interp)
+    else:
+        def quantizer(res: np.ndarray, tvals: np.ndarray):
+            q = quantize.quantize(res, eb)
+            esc = quantize.escape_mask(q)
+            recon = quantize.dequantize(q, eb)
+            if esc.any():
+                flat = np.flatnonzero(esc.ravel())
+                vals = tvals.ravel()[flat].astype(np.float64)  # absolute values
+                q.ravel()[flat] = 0
+                return q, recon, (flat, vals)
+            return q, recon, (np.zeros(0, np.int64), np.zeros(0, np.float64))
 
-    _, qs, escs, anchors = interpolation.decorrelate(
-        x.astype(np.float64), eb, interp, quantizer)
+        _, qs, escs, anchors = interpolation.decorrelate(
+            x.astype(np.float64), eb, interp, quantizer)
 
     level_blobs, level_meta, esc_blobs = [], [], []
     for li in range(L):
         q = qs[li]
         nb = negabinary.to_negabinary(q)
-        blobs, nbits = bitplane.encode_level(nb)
+        if backend == jax_backend.JAX:
+            blobs, nbits = jax_backend.encode_level(q)
+        else:
+            blobs, nbits = bitplane.encode_level(nb)
         delta = negabinary.truncation_loss_table(nb, nbits, eb)
         level_blobs.append(blobs)
         level_meta.append(dict(level=L - li, n=int(q.size), nbits=nbits,
@@ -105,8 +153,18 @@ class RetrievalState:
     bytes_read: int = 0
 
 
-def open_archive(buf: bytes) -> ArchiveReader:
-    return ArchiveReader(buf)
+@dataclass
+class ChunkedRetrievalState:
+    """Progressive state for a v2 archive: one RetrievalState per chunk."""
+    reader: ChunkedArchiveReader
+    chunk_states: List[Optional[RetrievalState]]
+    err_bound: float = float("inf")
+    bytes_read: int = 0
+
+
+def open_archive(buf: bytes):
+    """Reader for any archive version (v1 plain / v2 chunked)."""
+    return container.open_reader(buf)
 
 
 def _initial_state(reader: ArchiveReader) -> RetrievalState:
@@ -143,9 +201,16 @@ def retrieve(buf_or_reader, error_bound: Optional[float] = None,
     Exactly one of (error_bound, max_bytes, bitrate) selects the plan; None
     of them = full-precision.  Pass ``state`` from a previous call to refine
     incrementally (Algorithm 2) — only missing bitplanes are fetched.
+
+    Accepts v1 and v2 (chunked) archives / readers transparently.
     """
-    reader = buf_or_reader if isinstance(buf_or_reader, ArchiveReader) \
-        else ArchiveReader(buf_or_reader)
+    if isinstance(buf_or_reader, (ArchiveReader, ChunkedArchiveReader)):
+        reader = buf_or_reader
+    else:
+        reader = container.open_reader(buf_or_reader)
+    if isinstance(reader, ChunkedArchiveReader):
+        return _retrieve_chunked(reader, error_bound, max_bytes, bitrate,
+                                 propagation, state)
     m = reader.meta
     if bitrate is not None:
         max_bytes = int(bitrate * m.n_elements / 8)
@@ -193,6 +258,45 @@ def retrieve(buf_or_reader, error_bound: Optional[float] = None,
         for li, lv in enumerate(m.levels))
     state.bytes_read = reader.bytes_read
     out = state.xhat.astype(np.dtype(m.dtype))
+    return out, state
+
+
+def _retrieve_chunked(reader: ChunkedArchiveReader,
+                      error_bound: Optional[float],
+                      max_bytes: Optional[int],
+                      bitrate: Optional[float],
+                      propagation: str,
+                      state: Optional[ChunkedRetrievalState],
+                      ) -> Tuple[np.ndarray, ChunkedRetrievalState]:
+    """Per-chunk plan + reconstruct; the global bound is the chunk max.
+
+    Error mode passes ``error_bound`` straight through (each chunk holding
+    L_inf <= E makes the assembled array hold it).  Byte/bitrate budgets are
+    split across chunks proportionally to element count, which keeps the
+    loaded bit-per-point uniform — the same objective the v1 DP optimizes.
+    """
+    m = reader.meta
+    if state is None:
+        state = ChunkedRetrievalState(reader=reader,
+                                      chunk_states=[None] * len(m.chunks))
+    if bitrate is not None:
+        max_bytes = int(bitrate * m.n_elements / 8)
+    out = np.empty(m.shape, np.dtype(m.dtype))
+    errs = []
+    for i, cm in enumerate(m.chunks):
+        kw = {}
+        if error_bound is not None:
+            kw["error_bound"] = error_bound
+        elif max_bytes is not None:
+            sub_n = reader.chunk_reader(i).meta.n_elements
+            kw["max_bytes"] = int(max_bytes * sub_n / m.n_elements)
+        sub, st = retrieve(reader.chunk_reader(i), propagation=propagation,
+                           state=state.chunk_states[i], **kw)
+        state.chunk_states[i] = st
+        out[cm.start:cm.stop] = sub
+        errs.append(st.err_bound)
+    state.err_bound = max(errs)
+    state.bytes_read = reader.bytes_read
     return out, state
 
 

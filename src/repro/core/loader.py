@@ -18,6 +18,11 @@ budget, so the returned plan is always feasible (conservative).
 uses p^((l-1+1)*ndim_phases) — an upper bound that also covers within-level
 dimension-sequential amplification (see DESIGN.md §3); used by the
 adversarial property tests.
+
+Chunked (v2) archives run this planner per chunk: error mode passes the
+requested bound straight through (per-chunk L_inf <= E implies the global
+bound), byte/bitrate budgets are pre-split across chunks proportionally to
+element count (see ``ipcomp._retrieve_chunked``).
 """
 from __future__ import annotations
 

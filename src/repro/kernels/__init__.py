@@ -3,10 +3,15 @@
 Two kernels cover the profile of the paper's pipeline (everything else is
 metadata-sized):
 
-  interp_quant   — fused interpolation-predict + quantize + dequant-writeback
-                   for one dimension sweep (the O(n) inner loop of §4.1).
+  interp_quant   — fused interpolation-predict + quantize for one dimension
+                   sweep (the O(n) inner loop of §4.1); returns (q, pred) so
+                   the archive-canonical dequant-writeback stays in numpy.
   bitplane_pack  — negabinary conversion + 2-bit-prefix XOR predictive coding
                    + cross-lane bitplane packing (§4.4) in a single VMEM pass.
+
+Both codec kernels are wired into ``core.jax_backend`` and drive
+``compress(..., backend="jax")``; their blobs/bins are byte-identical to the
+numpy reference pipeline (enforced by tests/test_backend_parity.py).
   attention      — flash-attention (GQA) forward for the LM serving/training
                    stack: per-(batch, head, q-tile) programs stream kv tiles
                    with running-softmax state; O(S^2) never touches HBM.

@@ -3,14 +3,24 @@
 One (level, dim) sweep of §4.1 with the sweep axis laid out on lanes:
 for a row-block in VMEM, predict target columns (odd multiples of stride s)
 from neighbour columns at +-s / +-3s, quantize the residual against the
-original values, and emit both the int32 bins and the dequantized
-reconstruction — one HBM round-trip for what the CPU reference does in
-three passes (predict, quantize, writeback).
+original values, and emit both the int32 bins and the predictions — one
+HBM round-trip for what the CPU reference does in two gather-heavy passes
+(predict, quantize).  The dequantized writeback ``pred + 2*eb*q`` is left
+to the caller: emitting pred instead of recon keeps the kernel bit-exact
+against the numpy reference regardless of FMA contraction (see below).
 
 TPU adaptation (DESIGN.md §3): neighbour access uses *static strided
 slices* (lane-aligned, no gathers); boundary fallback masks are trace-time
 constants; blocks are (ROWS_B x C) so the whole sweep axis sits in VMEM —
 C up to ~16k f32 fits comfortably (8 x 16k x 4B = 512 KiB).
+
+Bit-exactness vs the numpy backend (backend parity tests): XLA freely
+contracts ``a*b + c`` into fma, which rounds differently from numpy's
+separate mul+add.  Every mul+add pair here is therefore written so that
+contraction cannot change the result: ``9*x`` is computed as ``8*x + x``
+(8*x is exact, so fma(8, x, x) == round(9x) == round(8x + x)), and the
+remaining adds have no adjacent multiply to fuse with.  The final quantize
+uses a divide, which XLA never contracts.
 """
 from __future__ import annotations
 
@@ -74,7 +84,7 @@ def _select_runs(parts_by_choice, choice: np.ndarray):
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
 
 
-def _kernel(x_ref, xh_ref, q_ref, recon_ref, *, s: int, eb: float,
+def _kernel(x_ref, xh_ref, q_ref, pred_ref, *, s: int, eb: float,
             interp: str, C: int, T: int):
     xh = xh_ref[...]
     x = x_ref[...]
@@ -84,20 +94,21 @@ def _kernel(x_ref, xh_ref, q_ref, recon_ref, *, s: int, eb: float,
     if interp == "linear":
         pred = _select_runs({1: lin, 0: l1}, r_ok.astype(np.int8))
     else:
-        cub = (-l3 + 9.0 * l1 + 9.0 * r1 - r3) * (1.0 / 16.0)
+        # 9*x spelled 8*x + x: fma-contraction-proof (8*x is exact), same
+        # association as the numpy reference ((-l3 + 9l1) + 9r1) - r3
+        cub = (-l3 + (8.0 * l1 + l1) + (8.0 * r1 + r1) - r3) * (1.0 / 16.0)
         choice = np.where(cubic_ok, 2, np.where(r_ok, 1, 0))
         pred = _select_runs({2: cub, 1: lin, 0: l1}, choice)
     tgt = x[:, s:s + 2 * s * T:2 * s]
     # divide (not multiply-by-reciprocal): bit-identical rounding vs the oracle
-    q = jnp.rint((tgt - pred) / (2.0 * eb)).astype(jnp.int32)
-    q_ref[...] = q
-    recon_ref[...] = (pred + q.astype(x.dtype) * (2.0 * eb)).astype(x.dtype)
+    q_ref[...] = jnp.rint((tgt - pred) / (2.0 * eb)).astype(jnp.int32)
+    pred_ref[...] = pred.astype(x.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("s", "eb", "interp", "interpret"))
 def interp_quant_pallas(x: jax.Array, xhat: jax.Array, *, s: int, eb: float,
                         interp: str = "cubic", interpret: bool = True):
-    """x, xhat: (R, C) with R % ROWS_B == 0. Returns (q (R,T) i32, recon (R,T))."""
+    """x, xhat: (R, C) with R % ROWS_B == 0. Returns (q (R,T) i32, pred (R,T))."""
     R, C = x.shape
     T = len(range(s, C, 2 * s))
     assert R % ROWS_B == 0 and T > 0

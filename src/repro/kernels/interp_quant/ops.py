@@ -16,8 +16,10 @@ def interp_quant(x, xhat, *, s: int, eb: float, interp: str = "cubic",
                  interpret: bool | None = None):
     """Fused phase sweep for arbitrary (R, C): pads rows to the block size.
 
-    Returns (q int32 (R, T), recon (R, T)) for targets at odd multiples of s
-    along the last axis.
+    Returns (q int32 (R, T), pred (R, T)) for targets at odd multiples of s
+    along the last axis; the dequantized writeback is ``pred + 2*eb*q``
+    (left to the caller so it can be computed with the archive-canonical
+    numpy rounding — see kernel.py on fma contraction).
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -28,6 +30,6 @@ def interp_quant(x, xhat, *, s: int, eb: float, interp: str = "cubic",
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
         xhat = jnp.pad(xhat, ((0, pad), (0, 0)))
-    q, recon = interp_quant_pallas(x, xhat, s=s, eb=eb, interp=interp,
-                                   interpret=interpret)
-    return q[:R], recon[:R]
+    q, pred = interp_quant_pallas(x, xhat, s=s, eb=eb, interp=interp,
+                                  interpret=interpret)
+    return q[:R], pred[:R]

@@ -3,7 +3,8 @@
 Mirrors repro.core.interpolation.predict_block for a sweep along the last
 axis with stride s: targets are odd multiples of s, neighbours at +-s/+-3s,
 cubic with linear/copy-left boundary fallback, then linear-scale
-quantization q=round(res/2eb) and reconstruction writeback pred + 2eb*q.
+quantization q=round(res/2eb).  Like the kernel, returns (q, pred); the
+dequantized writeback pred + 2eb*q belongs to the caller.
 """
 from __future__ import annotations
 
@@ -32,11 +33,10 @@ def predict_ref(xhat: jnp.ndarray, s: int, interp: str = "cubic") -> jnp.ndarray
 
 def interp_quant_ref(x: jnp.ndarray, xhat: jnp.ndarray, s: int, eb: float,
                      interp: str = "cubic"):
-    """Returns (q int32 targets, recon f32 targets) for the phase sweep."""
+    """Returns (q int32 targets, pred targets) for the phase sweep."""
     n = x.shape[-1]
     idx = jnp.arange(s, n, 2 * s)
     pred = predict_ref(xhat, s, interp)
     res = x[..., idx] - pred
     q = jnp.rint(res / (2.0 * eb)).astype(jnp.int32)
-    recon = pred + q.astype(x.dtype) * (2.0 * eb)
-    return q, recon
+    return q, pred.astype(x.dtype)

@@ -85,7 +85,7 @@ def make_train_step_compressed(cfg: ModelConfig, mesh, opt_kind="adamw",
                                lr_kwargs: Optional[dict] = None):
     """Train step with IPComp-compressed cross-pod gradient reduction.
 
-    The "pod" mesh axis is manual (jax.shard_map axis_names={"pod"}); data/
+    The "pod" mesh axis is manual (shard_map axis_names={"pod"}); data/
     model stay auto, so the per-pod loss+grad is ordinary pjit SPMD.  The
     cross-pod sync — the slow inter-pod links at 1000-node scale — runs the
     paper's pipeline: error-bounded quantize + occupied-bitplane truncation,
@@ -123,12 +123,13 @@ def make_train_step_compressed(cfg: ModelConfig, mesh, opt_kind="adamw",
             return new_state, dict(loss=loss, gnorm=gnorm, lr=lr)
 
     def train_step(state, batch):
+        from ..parallel.compat import shard_map
         rep = jax.tree_util.tree_map(lambda _: P(), state)
         bspec = jax.tree_util.tree_map(lambda _: P("pod"), batch)
-        return jax.shard_map(body, mesh=mesh, in_specs=(rep, bspec),
-                             out_specs=(rep, dict(loss=P(), gnorm=P(),
-                                                  lr=P())),
-                             axis_names={"pod"}, check_vma=False)(state, batch)
+        return shard_map(body, mesh=mesh, in_specs=(rep, bspec),
+                         out_specs=(rep, dict(loss=P(), gnorm=P(),
+                                              lr=P())),
+                         axis_names={"pod"}, check_vma=False)(state, batch)
 
     return train_step
 

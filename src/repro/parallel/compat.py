@@ -1,0 +1,43 @@
+"""Version-tolerant jax API shims for the parallel substrate.
+
+``shard_map`` moved twice across jax releases:
+
+  * old:  ``jax.experimental.shard_map.shard_map(f, mesh, in_specs,
+          out_specs, check_rep=...)``
+  * new:  ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=...,
+          axis_names=..., check_vma=...)``
+
+Call sites in this repo use the *new* keyword vocabulary (``axis_names``,
+``check_vma``); this wrapper translates to whatever the installed jax
+provides so the same code runs on both sides of the rename.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names: Optional[set] = None,
+              check_vma: bool = False):
+    """Map ``f`` over shards of ``mesh`` (new-API keywords on any jax)."""
+    if hasattr(jax, "shard_map"):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        try:
+            return jax.shard_map(f, check_vma=check_vma, **kw)
+        except TypeError:  # transitional releases: check_rep instead
+            return jax.shard_map(f, check_rep=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # legacy API is manual-by-default: axes NOT named manual must be passed
+    # via auto=, or e.g. steps.py's pod-manual train step would lose SPMD
+    # sharding over the data/model axes (every device recomputing the full
+    # per-pod step)
+    kw = {}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma), **kw)

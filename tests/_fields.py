@@ -1,0 +1,12 @@
+"""Shared synthetic-field generator for the codec test suites."""
+import numpy as np
+
+
+def smooth_field(shape, seed=0, noise=0.01):
+    rng = np.random.default_rng(seed)
+    grids = np.meshgrid(*[np.linspace(0, 3 * np.pi, s) for s in shape],
+                        indexing="ij")
+    x = np.ones(shape)
+    for i, g in enumerate(grids):
+        x = x * np.sin(g * (0.7 + 0.3 * i))
+    return x + noise * rng.standard_normal(shape)

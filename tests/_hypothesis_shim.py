@@ -1,0 +1,112 @@
+"""Tiny deterministic stand-in for ``hypothesis`` (used when it is absent).
+
+The tier-1 container does not ship hypothesis and nothing may be
+pip-installed into it, yet the codec invariants in ``test_core_codec.py``
+(and the backend-parity suite) are property tests.  This shim implements
+just the strategy surface those files use — ``integers``, ``floats``,
+``lists``, ``sampled_from`` — and a ``@given`` that replays a fixed number
+of seeded pseudo-random examples, biased toward the endpoints (where the
+codec's edge cases live).
+
+It is NOT hypothesis: no shrinking, no example database, no coverage
+feedback.  When real hypothesis is installed (e.g. in CI, see
+``requirements-dev.txt``), the ``try/except ImportError`` in the test files
+picks it instead and this module is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+from typing import Sequence
+
+import numpy as np
+
+DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def example(self, rng: np.random.Generator):  # pragma: no cover
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def example(self, rng):
+        if rng.random() < 0.2:  # endpoint bias
+            return int(rng.choice([self.lo, self.hi, 0 if
+                                   self.lo <= 0 <= self.hi else self.lo]))
+        return int(rng.integers(self.lo, self.hi, endpoint=True))
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def example(self, rng):
+        if rng.random() < 0.15:
+            return float(rng.choice([self.lo, self.hi]))
+        if self.lo > 0:  # log-uniform across positive ranges (eb-style args)
+            return float(np.exp(rng.uniform(np.log(self.lo), np.log(self.hi))))
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem: _Strategy, min_size: int = 0, max_size: int = 32):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def example(self, rng):
+        n = int(rng.integers(self.min_size, self.max_size, endpoint=True))
+        return [self.elem.example(rng) for _ in range(n)]
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options: Sequence):
+        self.options = list(options)
+
+    def example(self, rng):
+        return self.options[int(rng.integers(len(self.options)))]
+
+
+class strategies:  # namespace mirroring ``hypothesis.strategies``
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 32) -> _Strategy:
+        return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def sampled_from(options: Sequence) -> _Strategy:
+        return _SampledFrom(options)
+
+
+def given(*strats: _Strategy):
+    """Run the test once per generated example (seeded by the test name)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                fn(*args, *(s.example(rng) for s in strats), **kwargs)
+        # hide the strategy parameters from pytest's fixture resolution
+        # (inspect.signature follows __wrapped__ set by functools.wraps)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_EXAMPLES, **_ignored):
+    """Applied above @given: stamps the example count onto its wrapper."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -1,0 +1,137 @@
+"""Progressive invariants under the chunked (v2) container.
+
+Per-chunk error bounds, refine-only-reads-new-planes accounting, v1
+backward compatibility, and the chunk framing itself.
+"""
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro.core import (CUBIC, ChunkedRetrievalState, chunk_bounds, compress,
+                        decompress, metrics, open_archive, retrieve)
+from repro.core.container import (MAGIC, MAGIC2, ArchiveReader,
+                                  ChunkedArchiveReader, parse_meta)
+
+
+# ------------------------------------------------------------ framing
+
+def test_chunk_bounds_cover_axis0():
+    assert chunk_bounds((10,), 3) == [(0, 3), (3, 6), (6, 9), (9, 10)]
+    assert chunk_bounds((5, 7), 14) == [(0, 2), (2, 4), (4, 5)]
+    assert chunk_bounds((4, 100), 10) == [(0, 1), (1, 2), (2, 3), (3, 4)]
+    assert chunk_bounds((3,), 1000) == [(0, 3)]
+    with pytest.raises(ValueError):
+        chunk_bounds((10,), 0)
+
+
+def test_v2_magic_and_reader_dispatch():
+    x = smooth_field((64, 32))
+    v1 = compress(x, 1e-4)
+    v2 = compress(x, 1e-4, chunk_elems=512)
+    assert v1[:4] == MAGIC and v2[:4] == MAGIC2
+    assert isinstance(open_archive(v1), ArchiveReader)
+    r2 = open_archive(v2)
+    assert isinstance(r2, ChunkedArchiveReader)
+    assert len(r2.meta.chunks) == 4
+    # chunk interiors are complete v1 archives
+    cm = r2.meta.chunks[1]
+    sub = parse_meta(v2[cm.offset: cm.offset + cm.size])
+    assert sub.shape == [16, 32]
+    with pytest.raises(ValueError):
+        parse_meta(v2)  # v2 needs the chunked reader
+
+
+def test_v1_archive_roundtrips_through_new_reader():
+    """Old (unchunked) archives keep working end to end."""
+    x = smooth_field((48, 40))
+    buf = compress(x, 1e-5, CUBIC)          # v1 is still the default
+    assert buf[:4] == MAGIC
+    assert metrics.linf(x, decompress(buf)) <= 1e-5
+    r = open_archive(buf)
+    out, st = retrieve(r, error_bound=1e-2)
+    out, st = retrieve(r, error_bound=1e-4, state=st)
+    assert metrics.linf(x, out) <= 1e-4
+
+
+# ------------------------------------------------------- error bounds
+
+@pytest.mark.parametrize("shape,chunk", [((3000,), 700), ((96, 50), 1000),
+                                         ((24, 20, 18), 2000)])
+def test_chunked_roundtrip_and_error_mode(shape, chunk):
+    x = smooth_field(shape)
+    eb = 1e-5
+    buf = compress(x, eb, CUBIC, chunk_elems=chunk)
+    assert metrics.linf(x, decompress(buf)) <= eb
+    for E in (1e-1, 1e-3):
+        out, st = retrieve(buf, error_bound=E)
+        assert metrics.linf(x, out) <= E
+        assert st.err_bound <= E
+
+
+def test_error_bound_honored_per_chunk():
+    """Every chunk's planned bound (not just the global max-err) obeys E."""
+    x = smooth_field((90, 40), 5)
+    buf = compress(x, 1e-6, CUBIC, chunk_elems=1200)
+    out, st = retrieve(buf, error_bound=1e-3)
+    assert isinstance(st, ChunkedRetrievalState)
+    bounds = [cs.err_bound for cs in st.chunk_states]
+    assert all(b <= 1e-3 for b in bounds)
+    # and per-chunk reconstruction actually meets it
+    for cm, cs in zip(st.reader.meta.chunks, st.chunk_states):
+        sub = x[cm.start:cm.stop]
+        assert metrics.linf(sub, cs.xhat) <= 1e-3
+
+
+# ---------------------------------------------------- refine accounting
+
+def test_refine_never_rereads_loaded_planes():
+    """Progressive refinement to full precision reads exactly the bytes a
+    cold full retrieval would — cached plane fetches are not re-counted."""
+    x = smooth_field((80, 44), 2)
+    buf = compress(x, 1e-6, CUBIC, chunk_elems=900)
+    r = open_archive(buf)
+    st = None
+    prev = 0
+    for E in (1e-1, 1e-2, 1e-4):
+        out, st = retrieve(r, error_bound=E, state=st)
+        assert st.bytes_read >= prev
+        prev = st.bytes_read
+    # repeat at the same bound: no new bytes
+    out, st = retrieve(r, error_bound=1e-4, state=st)
+    assert st.bytes_read == prev
+    out, st = retrieve(r, state=st)         # finish to full precision
+    cold_out, cold_st = retrieve(open_archive(buf))
+    assert st.bytes_read == cold_st.bytes_read
+    # Algorithm 2's delta cascade accumulates float rounding vs scratch
+    # (same tolerance as test_refine_equals_scratch on v1 archives)
+    np.testing.assert_allclose(out, cold_out, atol=1e-12)
+
+
+def test_chunked_partial_retrieval_volume():
+    x = smooth_field((96, 48), 3)
+    buf = compress(x, 1e-7, CUBIC, chunk_elems=1024)
+    out, st = retrieve(buf, error_bound=1e-2)
+    assert 0 < st.bytes_read < len(buf)
+
+
+def test_chunked_bitrate_mode_budget_and_monotonicity():
+    x = smooth_field((64, 64), 4)
+    buf = compress(x, 1e-7, CUBIC, chunk_elems=1024)
+    errs = []
+    for bpp in (0.5, 1.0, 2.0, 4.0):
+        out, st = retrieve(buf, bitrate=bpp)
+        assert 8 * st.bytes_read / x.size <= bpp * 1.05 + 0.2
+        errs.append(metrics.linf(x, out))
+    assert errs[-1] <= errs[0]
+
+
+def test_chunked_backend_jax_progressive():
+    """The acceptance path: jax-compressed chunked archive, numpy decode."""
+    x = smooth_field((72, 36), 6)
+    buf = compress(x, 1e-6, CUBIC, backend="jax", chunk_elems=800)
+    r = open_archive(buf)
+    out, st = retrieve(r, error_bound=1e-2)
+    b1 = st.bytes_read
+    out, st = retrieve(r, error_bound=1e-5, state=st)
+    assert st.bytes_read > b1
+    assert metrics.linf(x, out) <= 1e-5

@@ -1,24 +1,19 @@
 """Core IPComp codec: round-trip, error-bound, and progressive invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container has no hypothesis; vendored fallback
+    from _hypothesis_shim import given, settings, strategies as st
+
+from _fields import smooth_field
 from repro.core import (CUBIC, LINEAR, compress, decompress, metrics,
                         open_archive, retrieve)
 from repro.core import negabinary as nb
 from repro.core import bitplane as bp
 from repro.core import loader
 from repro.core.container import parse_meta
-
-
-def smooth_field(shape, seed=0, noise=0.01):
-    rng = np.random.default_rng(seed)
-    grids = np.meshgrid(*[np.linspace(0, 3 * np.pi, s) for s in shape],
-                        indexing="ij")
-    x = np.ones(shape)
-    for i, g in enumerate(grids):
-        x = x * np.sin(g * (0.7 + 0.3 * i))
-    return x + noise * rng.standard_normal(shape)
 
 
 # ------------------------------------------------------------ negabinary

@@ -31,22 +31,24 @@ def test_interp_quant_matches_ref(shape, s, interp, dtype):
     # xhat: known points only (even multiples of s carry values)
     xh = jnp.asarray(rng.standard_normal(shape), dtype)
     eb = 1e-3
-    q, recon = interp_quant(x, xh, s=s, eb=eb, interp=interp)
-    q_ref, recon_ref = interp_quant_ref(x, xh, s, eb, interp)
+    q, pred = interp_quant(x, xh, s=s, eb=eb, interp=interp)
+    q_ref, pred_ref = interp_quant_ref(x, xh, s, eb, interp)
     np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
-    np.testing.assert_allclose(np.asarray(recon), np.asarray(recon_ref),
+    np.testing.assert_allclose(np.asarray(pred), np.asarray(pred_ref),
                                rtol=1e-6, atol=1e-6)
 
 
 def test_interp_quant_error_bound():
-    """Reconstruction at targets obeys |x - recon| <= eb."""
+    """Reconstruction pred + 2eb*q at targets obeys |x - recon| <= eb."""
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((16, 256)), jnp.float32)
     xh = jnp.asarray(rng.standard_normal((16, 256)), jnp.float32)
     eb = 1e-2
-    q, recon = interp_quant(x, xh, s=2, eb=eb)
+    q, pred = interp_quant(x, xh, s=2, eb=eb)
+    recon = np.asarray(pred, np.float64) + \
+        np.asarray(q, np.float64) * (2.0 * eb)
     tgt = np.asarray(x)[:, 2::4]
-    assert np.abs(tgt - np.asarray(recon)).max() <= eb * (1 + 1e-5)
+    assert np.abs(tgt - recon).max() <= eb * (1 + 1e-5)
 
 
 @pytest.mark.parametrize("shape", [(8, 32), (8, 128), (16, 256), (5, 96),

@@ -17,8 +17,8 @@ def test_interp_quant_f64(shape, s, interp):
         rng = np.random.default_rng(1)
         x = jnp.asarray(rng.standard_normal(shape), jnp.float64)
         xh = jnp.asarray(rng.standard_normal(shape), jnp.float64)
-        q, recon = interp_quant(x, xh, s=s, eb=1e-6, interp=interp)
-        q_ref, recon_ref = interp_quant_ref(x, xh, s, 1e-6, interp)
+        q, pred = interp_quant(x, xh, s=s, eb=1e-6, interp=interp)
+        q_ref, pred_ref = interp_quant_ref(x, xh, s, 1e-6, interp)
         np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
-        np.testing.assert_allclose(np.asarray(recon), np.asarray(recon_ref),
+        np.testing.assert_allclose(np.asarray(pred), np.asarray(pred_ref),
                                    rtol=1e-12, atol=1e-12)

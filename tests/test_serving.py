@@ -7,6 +7,9 @@ import pytest
 from repro.configs import get_config
 from repro.models import model as M
 
+# whole-module: multi-second decode loops, excluded from the CI fast lane
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

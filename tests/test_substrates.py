@@ -76,10 +76,11 @@ def test_compressed_psum_matches_psum():
     x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 64)),
                     jnp.float32)
 
-    f = jax.shard_map(lambda a: compressed_psum(a, "pod", keep_bits=16,
-                                                rel_eb=1e-5),
-                      mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
-                      axis_names={"pod"}, check_vma=False)
+    from repro.parallel.compat import shard_map
+    f = shard_map(lambda a: compressed_psum(a, "pod", keep_bits=16,
+                                            rel_eb=1e-5),
+                  mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
+                  axis_names={"pod"}, check_vma=False)
     got = f(x)
     # with one pod the compressed psum is just quantize/dequantize
     assert float(jnp.max(jnp.abs(got - x))) < 1e-3
@@ -94,6 +95,7 @@ def _tiny_state():
     return cfg, make_train_state(params)
 
 
+@pytest.mark.slow
 def test_checkpoint_roundtrip(tmp_path):
     cfg, state = _tiny_state()
     man = save_checkpoint(str(tmp_path), 5, state.params, rel_eb=1e-6)
@@ -133,6 +135,7 @@ def test_progressive_restore_reads_fewer_bytes(tmp_path):
 
 # ------------------------------------------------------------ driver / FT
 
+@pytest.mark.slow
 def test_driver_checkpoint_restart_after_failure(tmp_path):
     cfg, state = _tiny_state()
     step_fn = jax.jit(make_train_step(cfg))
@@ -148,6 +151,7 @@ def test_driver_checkpoint_restart_after_failure(tmp_path):
     assert np.isfinite(report["losses"]).all()
 
 
+@pytest.mark.slow
 def test_driver_loss_decreases(tmp_path):
     cfg, state = _tiny_state()
     step_fn = jax.jit(make_train_step(cfg))
