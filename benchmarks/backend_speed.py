@@ -1,29 +1,42 @@
-"""Compression backend throughput: numpy reference vs jax/Pallas kernels.
+"""Codec backend throughput: numpy reference vs jax/Pallas kernels.
 
-Reports compress throughput for both backends on a >=2^20-element field
-(the acceptance smoke case), plus the chunked variant of the jax backend —
-chunking makes every slab share one jit cache entry, which is where the
-batched/vmapped encoding of the roadmap picks up.
+Reports compress AND decode throughput for both backends on a >=2^20-element
+field (the acceptance smoke case), plus the chunked variant — chunking makes
+every slab share one jit cache entry, which is where the batched/vmapped
+encoding of the roadmap picks up.  Decode is measured as the two retrieval
+operations the paper optimizes (§5): a full-precision ``decompress`` and one
+incremental ``refine`` step (Algorithm 2's delta cascade) on top of a
+coarse first retrieval.
 
 CPU caveat: off-TPU the Pallas kernels run in *interpret mode*, a
 correctness harness, so the jax numbers on CPU measure dispatch overhead,
-not kernel speed; parity of the emitted bytes is asserted regardless.  On
-TPU the same path compiles to Mosaic.
+not kernel speed; parity of the emitted bytes (encode) and reconstructed
+bits (decode) is asserted regardless.  On TPU the same path compiles to
+Mosaic.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.backend_speed [--n 1048576] [--full]
+      [--json-out BENCH_decode.json]
 
 CI-smoke mode (default) runs one warm repetition per backend; --full adds
-a second field and best-of-3 timing.
+a second field and best-of-3 timing.  The decode measurements are written
+to ``BENCH_decode.json`` (uploaded as a CI artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import numpy as np
 
 from .common import csv_row, timed
-from repro.core import compress
+from repro.core import compress, decompress, open_archive, refine, retrieve
+
+JSON_OUT = "BENCH_decode.json"
+
+#: coarse-then-refine targets for the Algorithm 2 timing, relative to eb
+REFINE_COARSE = 1e3
+REFINE_FINE = 1e1
 
 
 def _field(n: int) -> np.ndarray:
@@ -32,8 +45,46 @@ def _field(n: int) -> np.ndarray:
     return np.sin(i * 0.01) * np.cos(j * 0.013) + 1e-3 * np.sin(i * j * 1e-4)
 
 
-def run(scale=None, n: int = 1 << 20, smoke: bool = True):
-    rows, checks = [], []
+def _decode_rows(x: np.ndarray, eb: float, buf: bytes, case: str,
+                 repeat: int, rows, records, outs):
+    """Measure full decompress + one refine step for both decode backends."""
+    for bk in ("numpy", "jax"):
+        if bk == "jax":
+            # warm every jit cache entry the timed calls will hit — incl.
+            # the refine ladder, whose plane prefixes are distinct static
+            # args of the unpack kernel (a cold refine would time tracing)
+            decompress(buf, backend=bk)
+            _, ws = retrieve(open_archive(buf),
+                             error_bound=REFINE_COARSE * eb, backend=bk)
+            refine(ws, error_bound=REFINE_FINE * eb, backend=bk)
+        out, dt = timed(decompress, buf, repeat=repeat, backend=bk)
+        outs.setdefault(case, {})[bk] = out
+        mbps = x.nbytes / dt / 1e6
+        rows.append(csv_row(f"backend_speed/{case}/{bk}/decompress",
+                            dt * 1e6, f"MBps={mbps:.1f}"))
+        print(rows[-1])
+        records.append(dict(case=case, backend=bk, op="decompress",
+                            seconds=dt, mbps=mbps, bytes=len(buf)))
+
+        # one refine step: coarse retrieval outside the clock, then time
+        # the incremental delta cascade to the tighter bound
+        reader = open_archive(buf)
+        _, st = retrieve(reader, error_bound=REFINE_COARSE * eb, backend=bk)
+        (_, st), dt = timed(refine, st, error_bound=REFINE_FINE * eb,
+                            repeat=1, backend=bk)
+        mbps = x.nbytes / dt / 1e6
+        rows.append(csv_row(f"backend_speed/{case}/{bk}/refine",
+                            dt * 1e6,
+                            f"MBps={mbps:.1f};bytes_read={st.bytes_read}"))
+        print(rows[-1])
+        records.append(dict(case=case, backend=bk, op="refine",
+                            seconds=dt, mbps=mbps,
+                            bytes_read=int(st.bytes_read)))
+
+
+def run(scale=None, n: int = 1 << 20, smoke: bool = True,
+        json_out: str = JSON_OUT):
+    rows, checks, records = [], [], []
     if n < 1 << 20:
         raise SystemExit(f"--n must be >= {1 << 20} (2^20) elements, got {n}")
     x = _field(n)
@@ -56,6 +107,17 @@ def run(scale=None, n: int = 1 << 20, smoke: bool = True):
         print(rows[-1])
     checks.append(("backend_parity_bytes", f"{x.size}el", "compress",
                    bufs["numpy"] == bufs["jax"]))
+
+    # decode direction: v1 archive and the chunked v2 archive
+    outs = {}
+    _decode_rows(x, eb, bufs["numpy"], f"{x.size}el_v1", repeat, rows,
+                 records, outs)
+    _decode_rows(x, eb, bufs["jax_chunked"], f"{x.size}el_v2", repeat, rows,
+                 records, outs)
+    for case, by_bk in outs.items():
+        checks.append(("decode_parity_bits", case, "decompress",
+                       bool(np.array_equal(by_bk["numpy"], by_bk["jax"]))))
+
     if not smoke:
         y = _field(1 << 22)
         for name, kw in variants:
@@ -64,6 +126,16 @@ def run(scale=None, n: int = 1 << 20, smoke: bool = True):
                                 dt * 1e6,
                                 f"MBps={y.nbytes / dt / 1e6:.1f}"))
             print(rows[-1])
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(dict(n=int(x.size), eb=eb,
+                           refine_bounds=[REFINE_COARSE * eb,
+                                          REFINE_FINE * eb],
+                           records=records,
+                           checks=[dict(name=c[0], case=c[1], op=c[2],
+                                        ok=bool(c[3])) for c in checks]),
+                      f, indent=2)
+        print(f"wrote {json_out} ({len(records)} decode records)")
     return rows, checks
 
 
@@ -73,8 +145,10 @@ def main():
                     help="elements in the benchmark field (>= 2^20)")
     ap.add_argument("--full", action="store_true",
                     help="best-of-3 timing plus a 4M-element field")
+    ap.add_argument("--json-out", default=JSON_OUT,
+                    help="decode-benchmark JSON artifact path ('' disables)")
     args = ap.parse_args()
-    _, checks = run(n=args.n, smoke=not args.full)
+    _, checks = run(n=args.n, smoke=not args.full, json_out=args.json_out)
     for name, ds, op, ok in checks:
         print(f"check {name}[{ds}/{op}]: {'ok' if ok else 'FAILED'}")
     if not all(c[-1] for c in checks):

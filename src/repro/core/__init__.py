@@ -3,19 +3,23 @@
 Public API:
     compress(x, eb, interp, backend="numpy"|"jax"|"auto" (jax on TPU),
              chunk_elems=None)         -> archive bytes (v1; v2 if chunked)
-    decompress(buf)                    -> full-precision array
-    retrieve(buf, error_bound=|max_bytes=|bitrate=) -> (array, RetrievalState)
+    decompress(buf, backend=...)       -> full-precision array
+    retrieve(buf, error_bound=|max_bytes=|bitrate=, backend=...)
+                                       -> (array, RetrievalState)
     retrieve(reader, ..., state=state) -> incremental refinement (Algorithm 2)
+    refine(state, error_bound=..., backend=...) -> same, as a first-class call
 
-The "jax" backend runs the predict+quantize and bitplane-packing hot loops
-through the Pallas kernels (interpret mode on CPU) and emits archives
-byte-identical to the numpy reference; see ``jax_backend``.
+Both directions are backend-pluggable (see ``pipeline.backends``): the
+"jax" backend runs the predict+quantize / predict+reconstruct sweeps and
+the bitplane pack/unpack through the Pallas kernels (interpret mode on
+CPU), emitting archives byte-identical — and reconstructions bit-identical
+— to the numpy reference.
 """
-from .ipcomp import (compress, decompress, retrieve, open_archive,
+from .ipcomp import (compress, decompress, retrieve, refine, open_archive,
                      RetrievalState, ChunkedRetrievalState, chunk_bounds)
 from .interpolation import LINEAR, CUBIC
-from . import jax_backend, metrics
+from . import jax_backend, metrics, pipeline
 
-__all__ = ["compress", "decompress", "retrieve", "open_archive",
+__all__ = ["compress", "decompress", "retrieve", "refine", "open_archive",
            "RetrievalState", "ChunkedRetrievalState", "chunk_bounds",
-           "LINEAR", "CUBIC", "jax_backend", "metrics"]
+           "LINEAR", "CUBIC", "jax_backend", "metrics", "pipeline"]

@@ -170,7 +170,8 @@ def decorrelate(x: np.ndarray, eb: float, interp: str,
 def reconstruct(shape: Sequence[int], interp: str, anchors: np.ndarray,
                 yhat_per_level: List[np.ndarray],
                 overrides: Optional[List[Tuple[np.ndarray, np.ndarray]]] = None,
-                out_dtype=np.float64) -> np.ndarray:
+                out_dtype=np.float64, block_fn: Optional[Callable] = None,
+                ) -> np.ndarray:
     """Decompression-side sweep (Algorithm 1 core).
 
     ``yhat_per_level[i]`` is the dequantized residual stream for level L-i.
@@ -180,6 +181,13 @@ def reconstruct(shape: Sequence[int], interp: str, anchors: np.ndarray,
     never change across refinements).  Aside from overrides, purely linear in
     (anchors, yhat): the same routine reconstructs incremental deltas by
     feeding zero anchors and residual *differences*.
+
+    ``block_fn(hv, ph, res)`` is the backend seam: given the phase view, the
+    Phase, and the flat residual slice, return the reconstructed target
+    block (pred + res) in original axis order as a writable C-order array.
+    None = the numpy reference (predict_block).  Traversal, per-level offset
+    accounting, and the override writeback stay here — shared by every
+    backend — so the semantics cannot drift between substrates.
     """
     L = num_levels(shape)
     xhat = np.zeros(shape, np.float64)
@@ -187,14 +195,18 @@ def reconstruct(shape: Sequence[int], interp: str, anchors: np.ndarray,
     offs = [0] * L
     for ph in iter_phases(shape, L):
         hv = xhat[ph.view]
-        pred = predict_block(hv, ph.dim, ph.targets, ph.stride, ph.n_dim, interp)
         li = L - ph.level
         lo = offs[li]
         res = yhat_per_level[li][lo: lo + ph.count]
         offs[li] += ph.count
-        tgt_shape = list(hv.shape)
-        tgt_shape[ph.dim] = ph.targets.size
-        block = pred + res.reshape(tgt_shape)
+        if block_fn is None:
+            pred = predict_block(hv, ph.dim, ph.targets, ph.stride,
+                                 ph.n_dim, interp)
+            tgt_shape = list(hv.shape)
+            tgt_shape[ph.dim] = ph.targets.size
+            block = pred + res.reshape(tgt_shape)
+        else:
+            block = block_fn(hv, ph, res)
         if overrides is not None:
             oidx, ovals = overrides[li]
             if oidx.size:

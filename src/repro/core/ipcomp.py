@@ -1,306 +1,46 @@
 """IPComp public API: compress / retrieve / refine (paper Algorithms 1 & 2).
 
+Compatibility shim: the implementation lives in the ``core/pipeline``
+package (``encode`` / ``decode`` / ``state`` / ``backends`` — see its
+docstring for the module map); this module re-exports the historical
+``core.ipcomp`` surface so existing imports keep working unchanged.
+
 Compression pipeline (Fig. 2):
   x --interpolation predictor--> residuals y_l --quantize--> q_l
     --negabinary--> nb_l --bitplanes + XOR predictive coding--> blobs
     --container--> archive bytes
 
-Two interchangeable compression backends produce this pipeline:
-``backend="numpy"`` (reference) and ``backend="jax"`` (Pallas kernels for
-the predict+quantize sweep and the bitplane packing; interpret mode on CPU,
-Mosaic on TPU — see ``jax_backend``).  Archives are byte-compatible: the
-decode path never needs to know which backend wrote them.
-
-``chunk_elems=N`` splits the array into independent slabs of ~N elements
-along axis 0 and frames the per-slab archives in a v2 container
-(``container.write_chunked_archive``).  Chunking bounds compression working
-memory, lets equal-shaped chunks share jit cache entries, and is the unit
-of future vmapped/sharded encoding; v1 (unchunked) archives remain the
-default and are always readable.
-
 Retrieval: the DP loader (§5) plans the minimum bitplane set for the
 requested error bound / bitrate; a single reconstruction pass produces the
-output (no multi-pass residual decompression).  ``refine`` implements
-Algorithm 2: it loads only the *additional* bitplanes and pushes a linear
-delta cascade on top of the previous reconstruction.  For chunked archives
-every plan/refine step runs per chunk (a per-chunk L_inf bound implies the
-global one) and ``bytes_read`` aggregates across chunks.
+output.  ``refine`` implements Algorithm 2: it loads only the *additional*
+bitplanes and pushes a linear delta cascade on top of the previous
+reconstruction.
+
+Both directions run on interchangeable backends (``backend="numpy"`` |
+``"jax"`` | ``"auto"``): the jax path routes the phase sweeps and bitplane
+coding through the Pallas kernel pairs (``interp_quant``/``interp_recon``,
+``bitplane_pack``/``bitplane_unpack``), emitting byte-identical archives
+and bit-identical reconstructions.  ``chunk_elems=N`` compresses to the
+chunked v2 container; retrieval accepts both versions transparently.
 """
 from __future__ import annotations
 
-import zlib
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
-
-import numpy as np
-
-from . import (bitplane, container, interpolation, jax_backend, loader,
-               negabinary, quantize)
-from .container import ArchiveReader, ChunkedArchiveReader
-from .loader import LoadPlan
+from .pipeline.backends import CodecBackend, get as get_backend
+from .pipeline.decode import (_retrieve_chunked, decompress, open_archive,
+                              refine, retrieve, split_budget)
+from .pipeline.encode import (_compress_single, _pack_escapes, chunk_bounds,
+                              compress)
+from .pipeline.state import (ChunkedRetrievalState, RetrievalState,
+                             _unpack_escapes, initial_state)
 
 
-# ----------------------------------------------------------------- compress
-
-def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
-             relative: bool = False, backend: Optional[str] = "numpy",
-             chunk_elems: Optional[int] = None) -> bytes:
-    """Compress ``x`` with point-wise error bound ``eb``.
-
-    ``relative=True`` interprets eb as a fraction of the value range.
-    ``backend`` is "numpy" | "jax" | "auto"/None (jax on TPU where the
-    kernels compile, numpy elsewhere); both emit identical bytes.
-    ``chunk_elems`` switches to the chunked v2 container with
-    ~chunk_elems-sized independent slabs.
-    """
-    x = np.asarray(x)
-    if relative:
-        eb = eb * (float(x.max()) - float(x.min()) or 1.0)
-    if eb <= 0:
-        raise ValueError("error bound must be positive")
-    bk = jax_backend.resolve(backend)
-    if chunk_elems is None:
-        return _compress_single(x, eb, interp, bk)
-    bounds = chunk_bounds(x.shape, chunk_elems)
-    bufs = [_compress_single(x[a:b], eb, interp, bk) for a, b in bounds]
-    return container.write_chunked_archive(x.shape, x.dtype, eb, interp,
-                                           bounds, bufs)
+def _initial_state(reader) -> RetrievalState:
+    """Historical one-arg helper: initial state via the numpy backend."""
+    return initial_state(reader, get_backend("numpy"))
 
 
-def chunk_bounds(shape, chunk_elems: int) -> List[Tuple[int, int]]:
-    """Split axis 0 into slabs of ~chunk_elems elements (>=1 row each)."""
-    if chunk_elems <= 0:
-        raise ValueError("chunk_elems must be positive")
-    row_elems = int(np.prod(shape[1:])) if len(shape) > 1 else 1
-    rows = max(1, chunk_elems // max(row_elems, 1))
-    return [(a, min(a + rows, shape[0])) for a in range(0, shape[0], rows)]
-
-
-def _compress_single(x: np.ndarray, eb: float, interp: str,
-                     backend: str) -> bytes:
-    """One (chunk-sized) array -> one v1 archive, via the chosen backend."""
-    shape, dtype = x.shape, x.dtype
-    L = interpolation.num_levels(shape)
-
-    if backend == jax_backend.JAX:
-        _, qs, escs, anchors = jax_backend.decorrelate(
-            x.astype(np.float64), eb, interp)
-    else:
-        def quantizer(res: np.ndarray, tvals: np.ndarray):
-            q = quantize.quantize(res, eb)
-            esc = quantize.escape_mask(q)
-            recon = quantize.dequantize(q, eb)
-            if esc.any():
-                flat = np.flatnonzero(esc.ravel())
-                vals = tvals.ravel()[flat].astype(np.float64)  # absolute values
-                q.ravel()[flat] = 0
-                return q, recon, (flat, vals)
-            return q, recon, (np.zeros(0, np.int64), np.zeros(0, np.float64))
-
-        _, qs, escs, anchors = interpolation.decorrelate(
-            x.astype(np.float64), eb, interp, quantizer)
-
-    level_blobs, level_meta, esc_blobs = [], [], []
-    for li in range(L):
-        q = qs[li]
-        nb = negabinary.to_negabinary(q)
-        if backend == jax_backend.JAX:
-            blobs, nbits = jax_backend.encode_level(q)
-        else:
-            blobs, nbits = bitplane.encode_level(nb)
-        delta = negabinary.truncation_loss_table(nb, nbits, eb)
-        level_blobs.append(blobs)
-        level_meta.append(dict(level=L - li, n=int(q.size), nbits=nbits,
-                               delta_table=delta.tolist()))
-        esc_blobs.append(_pack_escapes(escs[li]))
-    return container.write_archive(shape, dtype, eb, interp, L, anchors,
-                                   level_blobs, level_meta, esc_blobs)
-
-
-def _pack_escapes(phase_escs) -> bytes:
-    """Escape records (level-global flat idx, exact residuals) -> one blob."""
-    idx_parts = [i for i, v in phase_escs if i.size]
-    val_parts = [v for i, v in phase_escs if i.size]
-    if not idx_parts:
-        return b""
-    idx = np.concatenate(idx_parts).astype(np.int64)
-    val = np.concatenate(val_parts).astype(np.float64)
-    raw = np.int64(idx.size).tobytes() + idx.tobytes() + val.tobytes()
-    return zlib.compress(raw, 6)
-
-
-def _unpack_escapes(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
-    if not blob:
-        return np.zeros(0, np.int64), np.zeros(0, np.float64)
-    raw = zlib.decompress(blob)
-    n = int(np.frombuffer(raw[:8], np.int64)[0])
-    idx = np.frombuffer(raw[8:8 + 8 * n], np.int64)
-    val = np.frombuffer(raw[8 + 8 * n:], np.float64)
-    return idx, val
-
-
-# ----------------------------------------------------------------- retrieve
-
-@dataclass
-class RetrievalState:
-    """Progressive state carried between retrievals (Algorithm 2)."""
-    reader: ArchiveReader
-    planes_loaded: List[int]              # per level, MSB-first count
-    nb_partial: List[np.ndarray]          # truncated negabinary per level
-    esc_idx: List[np.ndarray]             # escape stream positions per level
-    xhat: np.ndarray                      # current reconstruction
-    err_bound: float
-    bytes_read: int = 0
-
-
-@dataclass
-class ChunkedRetrievalState:
-    """Progressive state for a v2 archive: one RetrievalState per chunk."""
-    reader: ChunkedArchiveReader
-    chunk_states: List[Optional[RetrievalState]]
-    err_bound: float = float("inf")
-    bytes_read: int = 0
-
-
-def open_archive(buf: bytes):
-    """Reader for any archive version (v1 plain / v2 chunked)."""
-    return container.open_reader(buf)
-
-
-def _initial_state(reader: ArchiveReader) -> RetrievalState:
-    """Coarsest approximation: anchors + escapes only, zero bitplanes."""
-    m = reader.meta
-    anchors = reader.anchors()
-    yhat, overrides = [], []
-    for li, lv in enumerate(m.levels):
-        yhat.append(np.zeros(lv.n, np.float64))
-        idx, val = _unpack_escapes(reader.escapes(li))
-        overrides.append((idx, val))
-    xhat = interpolation.reconstruct(m.shape, m.interp, anchors, yhat,
-                                     overrides=overrides)
-    full_err = m.eb + sum(
-        float(lv.delta_table[lv.nbits]) *
-        loader._prop_factor(m, lv.level, loader.SAFE)
-        for lv in m.levels)
-    return RetrievalState(reader=reader,
-                          planes_loaded=[0] * len(m.levels),
-                          nb_partial=[np.zeros(lv.n, np.uint32) for lv in m.levels],
-                          esc_idx=[o[0] for o in overrides],
-                          xhat=xhat, err_bound=full_err,
-                          bytes_read=reader.bytes_read)
-
-
-def retrieve(buf_or_reader, error_bound: Optional[float] = None,
-             max_bytes: Optional[int] = None,
-             bitrate: Optional[float] = None,
-             propagation: str = loader.SAFE,
-             state: Optional[RetrievalState] = None,
-             ) -> Tuple[np.ndarray, RetrievalState]:
-    """Single-pass progressive retrieval.
-
-    Exactly one of (error_bound, max_bytes, bitrate) selects the plan; None
-    of them = full-precision.  Pass ``state`` from a previous call to refine
-    incrementally (Algorithm 2) — only missing bitplanes are fetched.
-
-    Accepts v1 and v2 (chunked) archives / readers transparently.
-    """
-    if isinstance(buf_or_reader, (ArchiveReader, ChunkedArchiveReader)):
-        reader = buf_or_reader
-    else:
-        reader = container.open_reader(buf_or_reader)
-    if isinstance(reader, ChunkedArchiveReader):
-        return _retrieve_chunked(reader, error_bound, max_bytes, bitrate,
-                                 propagation, state)
-    m = reader.meta
-    if bitrate is not None:
-        max_bytes = int(bitrate * m.n_elements / 8)
-    if error_bound is not None:
-        plan = loader.plan_error_mode(m, error_bound, propagation)
-    elif max_bytes is not None:
-        plan = loader.plan_bitrate_mode(m, max_bytes, propagation)
-    else:
-        plan = loader.plan_full(m)
-
-    if state is None:
-        state = _initial_state(reader)
-    delta_y: List[np.ndarray] = []
-    any_new = False
-    for li, lv in enumerate(m.levels):
-        have = state.planes_loaded[li]
-        want = max(have, plan.keep_planes[li])  # refinement never drops planes
-        if want > have:
-            any_new = True
-            blobs: List[Optional[bytes]] = [None] * lv.nbits
-            # XOR decode needs planes k+1, k+2; re-decode the prefix from the
-            # already-fetched blobs (reader caches fetched ranges; re-reads of
-            # the same tag are not double-counted).
-            for i in range(want):
-                blobs[i] = reader.plane(li, i)
-            nb_new = bitplane.decode_level(blobs, lv.nbits, lv.n)
-            dq = negabinary.from_negabinary(nb_new) - \
-                negabinary.from_negabinary(state.nb_partial[li])
-            delta_y.append(dq.astype(np.float64) * 2.0 * m.eb)
-            state.nb_partial[li] = nb_new
-            state.planes_loaded[li] = want
-        else:
-            delta_y.append(np.zeros(lv.n, np.float64))
-    if any_new:
-        zero_anchors = np.zeros(m.anchors_shape, np.float64)
-        # escaped points are exact from the first pass: their delta is pinned 0
-        zero_ovr = [(idx, np.zeros(idx.size)) for idx in state.esc_idx]
-        delta = interpolation.reconstruct(m.shape, m.interp, zero_anchors,
-                                          delta_y, overrides=zero_ovr)
-        state.xhat = state.xhat + delta
-    # achieved bound: from the *union* of loaded planes
-    errs, _ = loader._level_cost_tables(m, propagation)
-    state.err_bound = m.eb + sum(
-        float(errs[li][lv.nbits - state.planes_loaded[li]])
-        for li, lv in enumerate(m.levels))
-    state.bytes_read = reader.bytes_read
-    out = state.xhat.astype(np.dtype(m.dtype))
-    return out, state
-
-
-def _retrieve_chunked(reader: ChunkedArchiveReader,
-                      error_bound: Optional[float],
-                      max_bytes: Optional[int],
-                      bitrate: Optional[float],
-                      propagation: str,
-                      state: Optional[ChunkedRetrievalState],
-                      ) -> Tuple[np.ndarray, ChunkedRetrievalState]:
-    """Per-chunk plan + reconstruct; the global bound is the chunk max.
-
-    Error mode passes ``error_bound`` straight through (each chunk holding
-    L_inf <= E makes the assembled array hold it).  Byte/bitrate budgets are
-    split across chunks proportionally to element count, which keeps the
-    loaded bit-per-point uniform — the same objective the v1 DP optimizes.
-    """
-    m = reader.meta
-    if state is None:
-        state = ChunkedRetrievalState(reader=reader,
-                                      chunk_states=[None] * len(m.chunks))
-    if bitrate is not None:
-        max_bytes = int(bitrate * m.n_elements / 8)
-    out = np.empty(m.shape, np.dtype(m.dtype))
-    errs = []
-    for i, cm in enumerate(m.chunks):
-        kw = {}
-        if error_bound is not None:
-            kw["error_bound"] = error_bound
-        elif max_bytes is not None:
-            sub_n = reader.chunk_reader(i).meta.n_elements
-            kw["max_bytes"] = int(max_bytes * sub_n / m.n_elements)
-        sub, st = retrieve(reader.chunk_reader(i), propagation=propagation,
-                           state=state.chunk_states[i], **kw)
-        state.chunk_states[i] = st
-        out[cm.start:cm.stop] = sub
-        errs.append(st.err_bound)
-    state.err_bound = max(errs)
-    state.bytes_read = reader.bytes_read
-    return out, state
-
-
-def decompress(buf: bytes) -> np.ndarray:
-    """Full-precision decompression (error <= eb everywhere)."""
-    out, _ = retrieve(buf)
-    return out
+__all__ = [
+    "compress", "chunk_bounds", "decompress", "retrieve", "refine",
+    "open_archive", "split_budget", "RetrievalState",
+    "ChunkedRetrievalState", "CodecBackend",
+]

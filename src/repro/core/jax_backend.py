@@ -1,14 +1,23 @@
-"""JAX/Pallas compression backend: the codec hot path on the accelerator.
+"""JAX/Pallas codec backend: both codec hot paths on the accelerator.
 
 ``compress(..., backend="jax")`` routes the two inner loops of the paper's
-pipeline through the Pallas TPU kernels instead of numpy:
+compression pipeline through the Pallas TPU kernels instead of numpy:
 
   * ``kernels.interp_quant``  — fused interpolation-predict + quantize for
     every (level, dim) phase sweep (§4.1–§4.2 in one VMEM pass);
   * ``kernels.bitplane_pack`` — negabinary + 2-bit-prefix XOR + bitplane
     packing collapsed to three integer ops per element (§4.4).
 
-Backend selection (see ``ipcomp.compress``):
+``retrieve``/``refine``/``decompress(..., backend="jax")`` route the decode
+direction — the operation progressive compression exists to make fast
+(Algorithms 1–2) — through the inverse kernel pair:
+
+  * ``kernels.interp_recon``  — fused interpolation-predict + add-residual
+    for every (level, dim) phase of the reconstruction sweep;
+  * ``kernels.bitplane_pack.bitplane_unpack`` — plane-word unpack +
+    closed-form XOR-undo + negabinary decode back to the int32 bins.
+
+Backend selection (see ``pipeline.backends``):
 
   * ``backend="numpy"``  — the pure-numpy reference pipeline (default on CPU);
   * ``backend="jax"``    — this module; on CPU the kernels run in Pallas
@@ -46,18 +55,16 @@ AUTO = "auto"
 
 
 def resolve(backend) -> str:
-    """Map a user-facing backend choice to "numpy" or "jax".
+    """Map a user-facing backend choice to a registered backend name.
 
-    "auto" picks jax only where the kernels actually compile (TPU); on
-    GPU/CPU they would run in interpret mode — valid for parity testing
-    (request it explicitly with backend="jax") but far slower than numpy.
+    Compatibility alias for ``pipeline.backends.resolve_name`` (the
+    registry owns selection now).  "auto" picks jax only where the kernels
+    actually compile (TPU); on GPU/CPU they would run in interpret mode —
+    valid for parity testing (request it explicitly with backend="jax")
+    but far slower than numpy.
     """
-    if backend in (None, AUTO):
-        import jax
-        return JAX if jax.default_backend() == "tpu" else NUMPY
-    if backend not in (NUMPY, JAX):
-        raise ValueError(f"unknown backend {backend!r}; use 'numpy'|'jax'|'auto'")
-    return backend
+    from .pipeline import backends
+    return backends.resolve_name(backend)
 
 
 def decorrelate(x: np.ndarray, eb: float, interp: str,
@@ -149,3 +156,84 @@ def encode_level(q: np.ndarray, interpret: bool | None = None,
     q1 = np.ascontiguousarray(q, np.int32).reshape(-1)
     packed, n = bitplane_pack(q1, interpret=interpret)
     return bitplane.blobs_from_packed(np.asarray(packed), int(n))
+
+
+# ----------------------------------------------------------------- decode
+
+def decode_level(blobs, nbits: int, n: int,
+                 interpret: bool | None = None) -> np.ndarray:
+    """Kernel-backed twin of ``bitplane.decode_level``.
+
+    Takes the same MSB-first blob prefix (None = not loaded) and returns the
+    same truncated negabinary words.  The host only unzlibs each loaded
+    plane into its packed word stream; the bit unpack, XOR-undo and
+    negabinary decode all happen in one ``bitplane_unpack`` kernel launch,
+    which emits the truncated word alongside the bins — the progressive
+    state stores exactly that word, so no host-side conversion remains.
+    """
+    import zlib
+
+    from ..kernels.bitplane_pack import bitplane_unpack
+
+    want = 0
+    for b in blobs:
+        if b is None:
+            break  # prefix property: once a plane is missing, rest are too
+        want = want + 1
+    if nbits == 0 or n == 0 or want == 0:
+        return np.zeros(n, np.uint32)
+    nw = (n + 31) // 32
+    words = np.zeros((32, nw), np.uint32)
+    for i in range(want):
+        blob = blobs[i]
+        if not blob:
+            continue  # all-zero encoded plane: b'' convention
+        raw = zlib.decompress(blob)  # np.packbits stream, element 0 at MSB
+        if len(raw) % 4:
+            raw += b"\0" * (4 - len(raw) % 4)
+        w = np.frombuffer(raw, ">u4")
+        words[nbits - 1 - i, : w.size] = w
+    _, nb = bitplane_unpack(words, n=n, low_zero=nbits - want,
+                            with_nb=True, interpret=interpret)
+    return np.asarray(nb, np.uint32)
+
+
+def reconstruct(shape, interp: str, anchors: np.ndarray,
+                yhat_per_level: List[np.ndarray],
+                overrides=None, out_dtype=np.float64,
+                interpret: bool | None = None) -> np.ndarray:
+    """Kernel-backed twin of ``interpolation.reconstruct`` (Algorithm 1).
+
+    Same routine, in fact: the traversal, offset accounting, and escape
+    override writeback run in ``interpolation.reconstruct`` itself — this
+    function only supplies the per-phase block primitive (the backend
+    seam), which moves the sweep axis onto lanes and runs the fused
+    predict+add-residual kernel.  Bit-exact with the numpy sweep: the
+    prediction code is shared with the encode kernel.
+    """
+    import jax
+
+    from ..kernels.interp_recon import interp_recon
+
+    def block_fn(hv, ph, res):
+        tgt_shape = list(hv.shape)
+        tgt_shape[ph.dim] = ph.targets.size
+        hm = np.ascontiguousarray(np.moveaxis(hv, ph.dim, -1))
+        rm = np.ascontiguousarray(np.moveaxis(
+            np.asarray(res, np.float64).reshape(tgt_shape), ph.dim, -1))
+        lead, C = hm.shape[:-1], hm.shape[-1]
+        R = int(np.prod(lead)) if lead else 1
+        out2 = interp_recon(hm.reshape(R, C), rm.reshape(R, -1),
+                            s=ph.stride, interp=interp, interpret=interpret)
+        T = out2.shape[1]
+        # order='C' copy: the override writeback addresses the block by
+        # flat index in original-axis C order
+        return np.array(np.moveaxis(
+            np.asarray(out2, np.float64).reshape(lead + (T,)), -1, ph.dim),
+            order="C")
+
+    with jax.experimental.enable_x64():
+        return interpolation.reconstruct(shape, interp, anchors,
+                                         yhat_per_level, overrides=overrides,
+                                         out_dtype=out_dtype,
+                                         block_fn=block_fn)

@@ -22,7 +22,8 @@ adversarial property tests.
 Chunked (v2) archives run this planner per chunk: error mode passes the
 requested bound straight through (per-chunk L_inf <= E implies the global
 bound), byte/bitrate budgets are pre-split across chunks proportionally to
-element count (see ``ipcomp._retrieve_chunked``).
+element count with largest-remainder rounding (see
+``pipeline.decode._retrieve_chunked`` / ``split_budget``).
 """
 from __future__ import annotations
 

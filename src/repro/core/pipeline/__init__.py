@@ -1,0 +1,39 @@
+"""IPComp codec pipeline: compress / retrieve / refine as an explicit package.
+
+What used to be one monolithic ``core/ipcomp.py`` is four modules with one
+seam — the backend registry — between the algorithm and the substrate that
+executes it:
+
+  ``backends.py``
+      :class:`CodecBackend` registry.  Bundles the four hot-path primitives
+      (decorrelate, encode_level, decode_level, reconstruct) per substrate;
+      ships "numpy" (reference) and "jax" (Pallas kernels: ``interp_quant``
+      / ``interp_recon`` / ``bitplane_pack`` / ``bitplane_unpack``).  All
+      primitives are bit-identical across backends.
+  ``encode.py``
+      ``compress`` (Fig. 2 pipeline) + ``chunk_bounds`` slab splitting for
+      the v2 container + the escape-channel packer.
+  ``decode.py``
+      ``retrieve`` / ``refine`` / ``decompress`` (§5, Algorithms 1–2):
+      DP-planned progressive loading, per-chunk dispatch for v2 archives,
+      largest-remainder byte-budget splitting (``split_budget``).
+  ``state.py``
+      :class:`RetrievalState` / :class:`ChunkedRetrievalState` and the
+      Algorithm 2 delta-cascade steps (``load_level_deltas``,
+      ``push_delta``, ``update_achieved_bound``, ``initial_state``).
+
+``core.ipcomp`` remains as a thin re-export of this package, so existing
+imports keep working unchanged.
+"""
+from .backends import AUTO, JAX, NUMPY, CodecBackend, get, names, register
+from .decode import (decompress, open_archive, refine, retrieve,
+                     split_budget)
+from .encode import chunk_bounds, compress
+from .state import ChunkedRetrievalState, RetrievalState
+
+__all__ = [
+    "AUTO", "JAX", "NUMPY", "CodecBackend", "get", "names", "register",
+    "compress", "chunk_bounds",
+    "retrieve", "refine", "decompress", "open_archive", "split_budget",
+    "RetrievalState", "ChunkedRetrievalState",
+]

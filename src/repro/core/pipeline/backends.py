@@ -1,0 +1,134 @@
+"""Codec backend registry: the numpy reference and the jax/Pallas kernels.
+
+Replaces the ad-hoc ``if bk == jax_backend.JAX:`` string checks that used to
+live inside ``ipcomp``: each :class:`CodecBackend` bundles the four hot-path
+primitives both directions of the codec need, ``encode.py`` / ``decode.py``
+call through the resolved backend object, and neither ever tests a backend
+name again.  Registering a third backend (a future GPU path, a vmapped
+chunk-batch path, ...) is one :func:`register` call — the pipeline code does
+not change.
+
+Primitive contracts (all bit-identical across backends — the parity test
+suites pin this down):
+
+  decorrelate(x_f64, eb, interp) -> (xhat, qs, escs, anchors)
+      compression-side sweep: per-level int64 bin streams + escape records
+      with level-global indices (see ``interpolation.decorrelate``).
+  encode_level(q_int64, nb_uint32) -> (blobs MSB-first, nbits)
+      negabinary + XOR-predictive bitplane packing of one level stream;
+      both representations of the same values are passed so each substrate
+      starts from whichever it prefers (numpy from the host-precomputed
+      negabinary words, the kernel from the raw bins it converts on-device)
+      without a redundant O(n) conversion.
+  decode_level(blobs, nbits, n) -> uint32 truncated negabinary
+      inverse of encode_level for a loaded MSB-first blob prefix
+      (None = not loaded; b'' = loaded, all-zero encoded plane).
+  reconstruct(shape, interp, anchors, yhat_per_level, overrides=, out_dtype=)
+      decompression-side sweep (Algorithm 1 core); linear in (anchors,
+      yhat), which Algorithm 2's zero-anchor delta cascade relies on.
+
+Selection: ``"numpy"`` | ``"jax"`` | ``"auto"``/None.  "auto" picks jax only
+where the kernels actually compile (TPU); on GPU/CPU they would run in the
+(slow) Pallas interpreter — valid for parity testing, so request it
+explicitly with ``backend="jax"`` rather than have "auto" silently emulate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from .. import bitplane, interpolation, jax_backend, negabinary, quantize
+# single source for the backend-name constants (the reverse import would be
+# circular: jax_backend.resolve delegates here function-locally)
+from ..jax_backend import AUTO, JAX, NUMPY
+
+
+@dataclass(frozen=True)
+class CodecBackend:
+    """The four codec primitives one execution substrate provides."""
+    name: str
+    decorrelate: Callable
+    encode_level: Callable
+    decode_level: Callable
+    reconstruct: Callable
+
+
+_REGISTRY: Dict[str, CodecBackend] = {}
+
+
+def register(backend: CodecBackend) -> CodecBackend:
+    """Add (or replace) a backend under ``backend.name``."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def resolve_name(choice) -> str:
+    """Map a user-facing backend choice to a registered backend name.
+
+    "auto"/None picks jax only where the kernels compile to native code
+    (TPU); everywhere else the numpy reference wins on speed.
+    """
+    if choice in (None, AUTO):
+        import jax
+        return JAX if jax.default_backend() == "tpu" else NUMPY
+    if choice not in _REGISTRY:
+        opts = "|".join(names() + [AUTO])
+        raise ValueError(f"unknown backend {choice!r}; use {opts}")
+    return choice
+
+
+def get(choice) -> CodecBackend:
+    """Resolve a backend choice ("numpy" | "jax" | "auto"/None) to its
+    registered :class:`CodecBackend`."""
+    return _REGISTRY[resolve_name(choice)]
+
+
+# ---------------------------------------------------------- numpy reference
+
+def _numpy_decorrelate(x: np.ndarray, eb: float, interp: str):
+    """Reference sweep: ``interpolation.decorrelate`` with the linear-scale
+    quantizer + lossless escape channel (paper §4.2)."""
+
+    def quantizer(res: np.ndarray, tvals: np.ndarray):
+        q = quantize.quantize(res, eb)
+        esc = quantize.escape_mask(q)
+        recon = quantize.dequantize(q, eb)
+        if esc.any():
+            flat = np.flatnonzero(esc.ravel())
+            vals = tvals.ravel()[flat].astype(np.float64)  # absolute values
+            q.ravel()[flat] = 0
+            return q, recon, (flat, vals)
+        return q, recon, (np.zeros(0, np.int64), np.zeros(0, np.float64))
+
+    return interpolation.decorrelate(x, eb, interp, quantizer)
+
+
+def _numpy_encode_level(q: np.ndarray, nb: np.ndarray) -> Tuple[List[bytes], int]:
+    return bitplane.encode_level(nb)
+
+
+def _jax_encode_level(q: np.ndarray, nb: np.ndarray) -> Tuple[List[bytes], int]:
+    return jax_backend.encode_level(q)
+
+
+register(CodecBackend(
+    name=NUMPY,
+    decorrelate=_numpy_decorrelate,
+    encode_level=_numpy_encode_level,
+    decode_level=bitplane.decode_level,
+    reconstruct=interpolation.reconstruct,
+))
+
+register(CodecBackend(
+    name=JAX,
+    decorrelate=jax_backend.decorrelate,
+    encode_level=_jax_encode_level,
+    decode_level=jax_backend.decode_level,
+    reconstruct=jax_backend.reconstruct,
+))

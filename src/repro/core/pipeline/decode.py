@@ -1,0 +1,174 @@
+"""Retrieval side of the codec pipeline (paper §5, Algorithms 1–2).
+
+The DP loader plans the minimum bitplane set for the requested error bound
+/ bitrate; a single reconstruction pass produces the output (no multi-pass
+residual decompression).  ``refine`` continues a previous retrieval: it
+loads only the *additional* bitplanes and pushes a linear delta cascade on
+top of the previous reconstruction (the state machinery lives in
+``pipeline.state``).
+
+Like the encode side, every hot step — plane decode and the reconstruction
+sweep — goes through the resolved :class:`~.backends.CodecBackend`, so
+``backend="jax"`` runs retrieval on the Pallas kernel pair
+(``interp_recon`` + ``bitplane_unpack``) with bit-identical output to the
+numpy reference; ``backend="auto"`` picks jax on TPU only.
+
+For chunked (v2) archives every plan/refine step runs per chunk (a
+per-chunk L_inf bound implies the global one) and ``bytes_read``
+aggregates across chunks.  Byte/bitrate budgets are split across chunks
+proportionally to element count by largest-remainder assignment
+(:func:`split_budget`), so the total allocated budget equals the request
+exactly — no silent remainder loss.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .. import container, loader
+from ..container import ArchiveReader, ChunkedArchiveReader
+from . import backends
+from .state import (ChunkedRetrievalState, RetrievalState, initial_state,
+                    load_level_deltas, push_delta, update_achieved_bound)
+
+
+def open_archive(buf: bytes):
+    """Reader for any archive version (v1 plain / v2 chunked)."""
+    return container.open_reader(buf)
+
+
+def retrieve(buf_or_reader, error_bound: Optional[float] = None,
+             max_bytes: Optional[int] = None,
+             bitrate: Optional[float] = None,
+             propagation: str = loader.SAFE,
+             state: Optional[RetrievalState] = None,
+             backend: Optional[str] = "numpy",
+             ) -> Tuple[np.ndarray, RetrievalState]:
+    """Single-pass progressive retrieval.
+
+    Exactly one of (error_bound, max_bytes, bitrate) selects the plan; None
+    of them = full-precision.  Pass ``state`` from a previous call to refine
+    incrementally (Algorithm 2) — only missing bitplanes are fetched.
+    ``backend`` selects the decode substrate ("numpy" | "jax" | "auto");
+    every backend reconstructs bit-identical arrays, and the state is
+    backend-agnostic, so successive calls may even switch backends.
+
+    Accepts v1 and v2 (chunked) archives / readers transparently.
+    """
+    if isinstance(buf_or_reader, (ArchiveReader, ChunkedArchiveReader)):
+        reader = buf_or_reader
+    else:
+        reader = container.open_reader(buf_or_reader)
+    if isinstance(reader, ChunkedArchiveReader):
+        return _retrieve_chunked(reader, error_bound, max_bytes, bitrate,
+                                 propagation, state, backend)
+    bk = backends.get(backend)
+    m = reader.meta
+    if bitrate is not None:
+        max_bytes = int(bitrate * m.n_elements / 8)
+    if error_bound is not None:
+        plan = loader.plan_error_mode(m, error_bound, propagation)
+    elif max_bytes is not None:
+        plan = loader.plan_bitrate_mode(m, max_bytes, propagation)
+    else:
+        plan = loader.plan_full(m)
+
+    if state is None:
+        state = initial_state(reader, bk)
+    delta_y, any_new = load_level_deltas(state, plan.keep_planes, bk)
+    if any_new:
+        push_delta(state, delta_y, bk)
+    update_achieved_bound(state, propagation)
+    out = state.xhat.astype(np.dtype(m.dtype))
+    return out, state
+
+
+def refine(state, error_bound: Optional[float] = None,
+           max_bytes: Optional[int] = None,
+           bitrate: Optional[float] = None,
+           propagation: str = loader.SAFE,
+           backend: Optional[str] = "numpy",
+           ) -> Tuple[np.ndarray, RetrievalState]:
+    """Algorithm 2 as a first-class call: continue a previous retrieval.
+
+    ``refine(state, error_bound=E)`` is ``retrieve(state.reader, ...,
+    state=state)`` — only the bitplanes the tighter target adds are fetched
+    and pushed through the delta cascade.  Works on v1 and chunked states.
+    """
+    return retrieve(state.reader, error_bound=error_bound,
+                    max_bytes=max_bytes, bitrate=bitrate,
+                    propagation=propagation, state=state, backend=backend)
+
+
+def decompress(buf: bytes, backend: Optional[str] = "numpy") -> np.ndarray:
+    """Full-precision decompression (error <= eb everywhere)."""
+    out, _ = retrieve(buf, backend=backend)
+    return out
+
+
+def split_budget(total: int, weights: Sequence[int]) -> List[int]:
+    """Largest-remainder proportional split: non-negative ints that sum to
+    exactly ``total``.
+
+    Floor-dividing each share (the old behaviour) silently dropped up to
+    ``len(weights) - 1`` bytes of budget; here every chunk gets
+    ``floor(total * w / W)`` and the leftover units go to the largest
+    fractional remainders first (ties: first chunk wins, deterministic).
+    """
+    w = np.asarray(weights, np.float64)
+    if w.size == 0:
+        return []
+    quota = total * (w / w.sum())
+    base = np.floor(quota).astype(np.int64)
+    short = int(total - base.sum())
+    if short > 0:
+        order = np.argsort(base - quota, kind="stable")  # most-short first
+        base[order[:short]] += 1
+    return [int(b) for b in base]
+
+
+def _retrieve_chunked(reader: ChunkedArchiveReader,
+                      error_bound: Optional[float],
+                      max_bytes: Optional[int],
+                      bitrate: Optional[float],
+                      propagation: str,
+                      state: Optional[ChunkedRetrievalState],
+                      backend: Optional[str] = "numpy",
+                      ) -> Tuple[np.ndarray, ChunkedRetrievalState]:
+    """Per-chunk plan + reconstruct; the global bound is the chunk max.
+
+    Error mode passes ``error_bound`` straight through (each chunk holding
+    L_inf <= E makes the assembled array hold it).  Byte/bitrate budgets
+    are split across chunks proportionally to element count — keeping the
+    loaded bit-per-point uniform, the same objective the v1 DP optimizes —
+    with the integer remainder distributed largest-fraction-first so the
+    chunk budgets sum to exactly ``max_bytes``.
+    """
+    m = reader.meta
+    if state is None:
+        state = ChunkedRetrievalState(reader=reader,
+                                      chunk_states=[None] * len(m.chunks))
+    if bitrate is not None:
+        max_bytes = int(bitrate * m.n_elements / 8)
+    budgets = None
+    if error_bound is None and max_bytes is not None:
+        sub_ns = [reader.chunk_reader(i).meta.n_elements
+                  for i in range(len(m.chunks))]
+        budgets = split_budget(max_bytes, sub_ns)
+    out = np.empty(m.shape, np.dtype(m.dtype))
+    errs = []
+    for i, cm in enumerate(m.chunks):
+        kw = {}
+        if error_bound is not None:
+            kw["error_bound"] = error_bound
+        elif budgets is not None:
+            kw["max_bytes"] = budgets[i]
+        sub, st = retrieve(reader.chunk_reader(i), propagation=propagation,
+                           state=state.chunk_states[i], backend=backend, **kw)
+        state.chunk_states[i] = st
+        out[cm.start:cm.stop] = sub
+        errs.append(st.err_bound)
+    state.err_bound = max(errs)
+    state.bytes_read = reader.bytes_read
+    return out, state

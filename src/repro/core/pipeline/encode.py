@@ -1,0 +1,100 @@
+"""Compression side of the codec pipeline (paper Fig. 2, left to right).
+
+  x --interpolation predictor--> residuals y_l --quantize--> q_l
+    --negabinary--> nb_l --bitplanes + XOR predictive coding--> blobs
+    --container--> archive bytes
+
+The per-phase sweep and the per-level packing both go through the resolved
+:class:`~.backends.CodecBackend` (numpy reference or Pallas kernels);
+archives are byte-compatible, so the decode path never needs to know which
+backend wrote them.
+
+``chunk_elems=N`` splits the array into independent slabs of ~N elements
+along axis 0 and frames the per-slab archives in a v2 container
+(``container.write_chunked_archive``).  Chunking bounds compression working
+memory, lets equal-shaped chunks share jit cache entries, and is the unit
+of future vmapped/sharded encoding; v1 (unchunked) archives remain the
+default and are always readable.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .. import container, interpolation, negabinary
+from . import backends
+
+
+def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
+             relative: bool = False, backend: Optional[str] = "numpy",
+             chunk_elems: Optional[int] = None) -> bytes:
+    """Compress ``x`` with point-wise error bound ``eb``.
+
+    ``relative=True`` interprets eb as a fraction of the value range.
+    ``backend`` is "numpy" | "jax" | "auto"/None (jax on TPU where the
+    kernels compile, numpy elsewhere); both emit identical bytes.
+    ``chunk_elems`` switches to the chunked v2 container with
+    ~chunk_elems-sized independent slabs.
+    """
+    x = np.asarray(x)
+    if relative:
+        eb = eb * (float(x.max()) - float(x.min()) or 1.0)
+    if eb <= 0:
+        raise ValueError("error bound must be positive")
+    bk = backends.get(backend)
+    if chunk_elems is None:
+        return _compress_single(x, eb, interp, bk)
+    bounds = chunk_bounds(x.shape, chunk_elems)
+    bufs = [_compress_single(x[a:b], eb, interp, bk) for a, b in bounds]
+    return container.write_chunked_archive(x.shape, x.dtype, eb, interp,
+                                           bounds, bufs)
+
+
+def chunk_bounds(shape, chunk_elems: int) -> List[Tuple[int, int]]:
+    """Split axis 0 into slabs of ~chunk_elems elements (>=1 row each)."""
+    if chunk_elems <= 0:
+        raise ValueError("chunk_elems must be positive")
+    if len(shape) == 0:
+        raise ValueError("chunked compression needs at least one axis; "
+                         "got a 0-d array")
+    if int(np.prod(shape)) == 0:
+        raise ValueError("cannot chunk an empty array of shape "
+                         f"{tuple(shape)}")
+    row_elems = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+    rows = max(1, chunk_elems // max(row_elems, 1))
+    return [(a, min(a + rows, shape[0])) for a in range(0, shape[0], rows)]
+
+
+def _compress_single(x: np.ndarray, eb: float, interp: str,
+                     bk: backends.CodecBackend) -> bytes:
+    """One (chunk-sized) array -> one v1 archive, via the chosen backend."""
+    shape, dtype = x.shape, x.dtype
+    L = interpolation.num_levels(shape)
+    _, qs, escs, anchors = bk.decorrelate(x.astype(np.float64), eb, interp)
+
+    level_blobs, level_meta, esc_blobs = [], [], []
+    for li in range(L):
+        q = qs[li]
+        nb = negabinary.to_negabinary(q)
+        blobs, nbits = bk.encode_level(q, nb)
+        delta = negabinary.truncation_loss_table(nb, nbits, eb)
+        level_blobs.append(blobs)
+        level_meta.append(dict(level=L - li, n=int(q.size), nbits=nbits,
+                               delta_table=delta.tolist()))
+        esc_blobs.append(_pack_escapes(escs[li]))
+    return container.write_archive(shape, dtype, eb, interp, L, anchors,
+                                   level_blobs, level_meta, esc_blobs)
+
+
+def _pack_escapes(phase_escs) -> bytes:
+    """Escape records (level-global flat idx, exact residuals) -> one blob."""
+    idx_parts = [i for i, v in phase_escs if i.size]
+    val_parts = [v for i, v in phase_escs if i.size]
+    if not idx_parts:
+        return b""
+    idx = np.concatenate(idx_parts).astype(np.int64)
+    val = np.concatenate(val_parts).astype(np.float64)
+    raw = np.int64(idx.size).tobytes() + idx.tobytes() + val.tobytes()
+    return zlib.compress(raw, 6)

@@ -1,0 +1,145 @@
+"""Progressive retrieval state + Algorithm 2's delta-cascade logic.
+
+A :class:`RetrievalState` carries everything a later ``retrieve``/``refine``
+call needs to load *only* the missing bitplanes and push a linear delta on
+top of the previous reconstruction instead of decoding from scratch:
+
+  * ``planes_loaded`` / ``nb_partial`` — per level, how many MSB-first
+    planes are in and the truncated negabinary stream they decode to
+    (backend-agnostic: uint32 words, whichever backend produced them);
+  * ``esc_idx`` — escape stream positions, whose deltas are pinned to zero
+    (escaped points are exact from the very first pass);
+  * ``xhat`` — the current reconstruction the next delta lands on.
+
+The cascade itself (:func:`load_level_deltas` + :func:`push_delta`) is the
+paper's Algorithm 2: residual *differences* are reconstructed through the
+same interpolation sweep with zero anchors — valid because the sweep is
+linear in (anchors, residuals) — and added to ``xhat``.  Both steps take
+the resolved :class:`~.backends.CodecBackend`, so refinement runs on the
+Pallas kernels exactly like a cold retrieval.
+
+:class:`ChunkedRetrievalState` is the v2-archive twin: one per-chunk state
+plus aggregated accounting.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .. import loader, negabinary
+from ..container import ArchiveReader, ChunkedArchiveReader
+from .backends import CodecBackend
+
+
+@dataclass
+class RetrievalState:
+    """Progressive state carried between retrievals (Algorithm 2)."""
+    reader: ArchiveReader
+    planes_loaded: List[int]              # per level, MSB-first count
+    nb_partial: List[np.ndarray]          # truncated negabinary per level
+    esc_idx: List[np.ndarray]             # escape stream positions per level
+    xhat: np.ndarray                      # current reconstruction
+    err_bound: float
+    bytes_read: int = 0
+
+
+@dataclass
+class ChunkedRetrievalState:
+    """Progressive state for a v2 archive: one RetrievalState per chunk."""
+    reader: ChunkedArchiveReader
+    chunk_states: List[Optional[RetrievalState]]
+    err_bound: float = float("inf")
+    bytes_read: int = 0
+
+
+def _unpack_escapes(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of ``encode._pack_escapes``: blob -> (flat idx, exact values)."""
+    if not blob:
+        return np.zeros(0, np.int64), np.zeros(0, np.float64)
+    raw = zlib.decompress(blob)
+    n = int(np.frombuffer(raw[:8], np.int64)[0])
+    idx = np.frombuffer(raw[8:8 + 8 * n], np.int64)
+    val = np.frombuffer(raw[8 + 8 * n:], np.float64)
+    return idx, val
+
+
+def initial_state(reader: ArchiveReader, bk: CodecBackend) -> RetrievalState:
+    """Coarsest approximation: anchors + escapes only, zero bitplanes."""
+    m = reader.meta
+    anchors = reader.anchors()
+    yhat, overrides = [], []
+    for li, lv in enumerate(m.levels):
+        yhat.append(np.zeros(lv.n, np.float64))
+        idx, val = _unpack_escapes(reader.escapes(li))
+        overrides.append((idx, val))
+    xhat = bk.reconstruct(m.shape, m.interp, anchors, yhat,
+                          overrides=overrides)
+    full_err = m.eb + sum(
+        float(lv.delta_table[lv.nbits]) *
+        loader._prop_factor(m, lv.level, loader.SAFE)
+        for lv in m.levels)
+    return RetrievalState(reader=reader,
+                          planes_loaded=[0] * len(m.levels),
+                          nb_partial=[np.zeros(lv.n, np.uint32) for lv in m.levels],
+                          esc_idx=[o[0] for o in overrides],
+                          xhat=xhat, err_bound=full_err,
+                          bytes_read=reader.bytes_read)
+
+
+def load_level_deltas(state: RetrievalState, keep_planes: List[int],
+                      bk: CodecBackend) -> Tuple[List[np.ndarray], bool]:
+    """Fetch + decode the planes the plan adds; return residual deltas.
+
+    Per level: refinement never drops planes, so the target is
+    ``max(have, plan)``.  XOR decode needs planes k+1, k+2, so the prefix is
+    re-decoded from the already-fetched blobs (the reader caches fetched
+    ranges; re-reads of the same tag are not double-counted).  The returned
+    stream is the *difference* of dequantized residuals — the input of the
+    zero-anchor cascade in :func:`push_delta`.
+    """
+    m = state.reader.meta
+    delta_y: List[np.ndarray] = []
+    any_new = False
+    for li, lv in enumerate(m.levels):
+        have = state.planes_loaded[li]
+        want = max(have, keep_planes[li])
+        if want > have:
+            any_new = True
+            blobs: List[Optional[bytes]] = [None] * lv.nbits
+            for i in range(want):
+                blobs[i] = state.reader.plane(li, i)
+            nb_new = bk.decode_level(blobs, lv.nbits, lv.n)
+            dq = negabinary.from_negabinary(nb_new) - \
+                negabinary.from_negabinary(state.nb_partial[li])
+            delta_y.append(dq.astype(np.float64) * 2.0 * m.eb)
+            state.nb_partial[li] = nb_new
+            state.planes_loaded[li] = want
+        else:
+            delta_y.append(np.zeros(lv.n, np.float64))
+    return delta_y, any_new
+
+
+def push_delta(state: RetrievalState, delta_y: List[np.ndarray],
+               bk: CodecBackend) -> None:
+    """Algorithm 2 core: reconstruct the residual deltas through the sweep
+    with zero anchors (linearity) and add onto the previous ``xhat``.
+    Escaped points are exact from the first pass: their delta is pinned 0."""
+    m = state.reader.meta
+    zero_anchors = np.zeros(m.anchors_shape, np.float64)
+    zero_ovr = [(idx, np.zeros(idx.size)) for idx in state.esc_idx]
+    delta = bk.reconstruct(m.shape, m.interp, zero_anchors, delta_y,
+                           overrides=zero_ovr)
+    state.xhat = state.xhat + delta
+
+
+def update_achieved_bound(state: RetrievalState, propagation: str) -> None:
+    """Recompute the guaranteed bound from the *union* of loaded planes."""
+    m = state.reader.meta
+    errs, _ = loader._level_cost_tables(m, propagation)
+    state.err_bound = m.eb + sum(
+        float(errs[li][lv.nbits - state.planes_loaded[li]])
+        for li, lv in enumerate(m.levels))
+    state.bytes_read = state.reader.bytes_read

@@ -1,20 +1,31 @@
 """Pallas TPU kernels for IPComp's compute hot spots.
 
-Two kernels cover the profile of the paper's pipeline (everything else is
-metadata-sized):
+Two kernel *pairs* cover the profile of the paper's pipeline — one per
+codec direction (everything else is metadata-sized):
 
-  interp_quant   — fused interpolation-predict + quantize for one dimension
-                   sweep (the O(n) inner loop of §4.1); returns (q, pred) so
-                   the archive-canonical dequant-writeback stays in numpy.
-  bitplane_pack  — negabinary conversion + 2-bit-prefix XOR predictive coding
-                   + cross-lane bitplane packing (§4.4) in a single VMEM pass.
+  interp_quant    — fused interpolation-predict + quantize for one dimension
+                    sweep (the O(n) inner loop of §4.1); returns (q, pred) so
+                    the archive-canonical dequant-writeback stays in numpy.
+  interp_recon    — its exact inverse: fused predict + add-residual for one
+                    reconstruction sweep (the hot loop of retrieval,
+                    Algorithms 1–2); shares the prediction code with
+                    interp_quant so both directions are bit-identical.
+  bitplane_pack   — negabinary conversion + 2-bit-prefix XOR predictive
+                    coding + cross-lane bitplane packing (§4.4) in a single
+                    VMEM pass (three integer ops per element).
+  bitplane_unpack — the inverse: plane-word unpack + closed-form XOR-undo
+                    ((1+x+x^2)^-1 over GF(2) = 22 shift/XORs) + negabinary
+                    decode back to int32 bins.
 
-Both codec kernels are wired into ``core.jax_backend`` and drive
-``compress(..., backend="jax")``; their blobs/bins are byte-identical to the
-numpy reference pipeline (enforced by tests/test_backend_parity.py).
-  attention      — flash-attention (GQA) forward for the LM serving/training
-                   stack: per-(batch, head, q-tile) programs stream kv tiles
-                   with running-softmax state; O(S^2) never touches HBM.
+All four are wired into ``core.jax_backend`` behind the
+``core.pipeline.backends`` registry and drive ``compress`` / ``retrieve`` /
+``refine`` / ``decompress`` with ``backend="jax"``; blobs, bins, and
+reconstructions are byte/bit-identical to the numpy reference pipeline
+(enforced by tests/test_backend_parity.py and tests/test_decode_parity.py).
+
+  attention       — flash-attention (GQA) forward for the LM serving/training
+                    stack: per-(batch, head, q-tile) programs stream kv tiles
+                    with running-softmax state; O(S^2) never touches HBM.
 
 Each kernel ships with ops.py (jit'd public wrapper, interpret-mode switch)
 and ref.py (pure-jnp oracle used by the allclose test sweeps).  The container

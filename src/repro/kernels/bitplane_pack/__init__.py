@@ -1,4 +1,5 @@
-from .ops import bitplane_pack
-from .ref import bitplane_pack_ref, unpack_planes_ref
+from .ops import bitplane_pack, bitplane_unpack
+from .ref import bitplane_pack_ref, bitplane_unpack_ref, unpack_planes_ref
 
-__all__ = ["bitplane_pack", "bitplane_pack_ref", "unpack_planes_ref"]
+__all__ = ["bitplane_pack", "bitplane_unpack", "bitplane_pack_ref",
+           "bitplane_unpack_ref", "unpack_planes_ref"]

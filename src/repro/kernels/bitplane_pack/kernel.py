@@ -9,6 +9,13 @@ per element, then bit-transposes lanes into packed uint32 plane words
 (32 lanes -> one word per plane, MSB-first within the word).
 
 Block layout: (ROWS_B, LANES) int32 in VMEM; output (32, ROWS_B, LANES/32).
+
+The decode direction (``bitplane_unpack_pallas``) is the exact inverse with
+the same collapsed-word trick: unpacked plane bits are OR-merged back into
+the encoded word, the XOR recurrence is undone by its closed-form inverse
+(1+x+x^2)^-1 = sum_k x^{3k}(1+x) over GF(2) — 22 shift/XORs instead of the
+host's 32-step sequential MSB-down recurrence — and the negabinary word is
+decoded back to the int32 quantization bin.
 """
 from __future__ import annotations
 
@@ -39,6 +46,64 @@ def _kernel(q_ref, out_ref, *, C: int):
     for k in range(32):
         bits = (g >> jnp.uint32(k)) & jnp.uint32(1)
         out_ref[k, :, :] = jnp.sum(bits << shift, axis=-1, dtype=jnp.uint32)
+
+
+def _unpack_kernel(p_ref, q_ref, nb_ref, *, W: int, low_zero: int):
+    R = q_ref.shape[0]
+    # planes -> XOR-encoded word: bit k of element (r, w*32 + j) is bit
+    # (31 - j) of word p[k, r, w] (lane 0 = MSB, np.packbits order)
+    j = jax.lax.broadcasted_iota(jnp.uint32, (R, W, GROUP), dimension=2)
+    shift = jnp.uint32(GROUP - 1) - j
+    enc = jnp.zeros((R, W, GROUP), jnp.uint32)
+    for k in range(32):
+        w = p_ref[k, :, :].reshape(R, W, 1)
+        enc = enc | (((w >> shift) & jnp.uint32(1)) << jnp.uint32(k))
+    enc = enc.reshape(R, W * GROUP)
+    # XOR-undo: enc = nb ^ (nb>>1) ^ (nb>>2) is multiplication by P(x) =
+    # 1 + x + x^2 over GF(2) (x = shift-right-by-one, nilpotent at x^32);
+    # P^-1 = (1+x)/(1+x^3) = sum_k x^{3k} (1 + x), a closed form that
+    # replaces the host's sequential MSB-down recurrence with 22 shift/XORs
+    nb = jnp.zeros_like(enc)
+    for k3 in range(0, 32, 3):
+        t = enc >> jnp.uint32(k3)
+        nb = nb ^ t
+        if k3 + 1 < 32:
+            nb = nb ^ (t >> jnp.uint32(1))
+    # a loaded prefix of planes means low negabinary digits are absent:
+    # the recurrence below the cutoff would free-run on zero input, so
+    # mask — this IS the truncation the progressive format defines (§4.4)
+    if low_zero > 0:
+        nb = nb & jnp.uint32((0xFFFFFFFF << low_zero) & 0xFFFFFFFF)
+    # negabinary decode (§4.4.2): x = (nb ^ M) - M, modular in uint32; the
+    # truncated word itself is emitted too — it is the canonical progressive
+    # state (decode_level's contract), already in register here
+    nb_ref[...] = nb
+    u = (nb ^ NEG_M) - NEG_M
+    q_ref[...] = jax.lax.bitcast_convert_type(u, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("low_zero", "interpret"))
+def bitplane_unpack_pallas(planes: jax.Array, *, low_zero: int = 0,
+                           interpret: bool = True):
+    """planes: (32, R, W) uint32 packed plane words (the ``bitplane_pack``
+    layout; unloaded planes all-zero).  Returns (q, nb), both (R, W*32):
+    the int32 bins after XOR-undo + negabinary decode, and the truncated
+    negabinary words themselves, with the ``low_zero`` least-significant
+    digits masked to zero (the progressive truncation of a plane prefix).
+    """
+    P, R, W = planes.shape
+    assert P == 32 and R % ROWS_B == 0
+    grid = (R // ROWS_B,)
+    bspec_out = pl.BlockSpec((ROWS_B, W * GROUP), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_unpack_kernel, W=W, low_zero=low_zero),
+        grid=grid,
+        in_specs=[pl.BlockSpec((32, ROWS_B, W), lambda i: (0, i, 0))],
+        out_specs=[bspec_out, bspec_out],
+        out_shape=[jax.ShapeDtypeStruct((R, W * GROUP), jnp.int32),
+                   jax.ShapeDtypeStruct((R, W * GROUP), jnp.uint32)],
+        interpret=interpret,
+    )(planes)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

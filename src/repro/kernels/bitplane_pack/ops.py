@@ -1,10 +1,15 @@
-"""Public jit'd wrapper for the bitplane packing kernel."""
+"""Public jit'd wrappers for the bitplane packing / unpacking kernels."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .kernel import GROUP, ROWS_B, bitplane_pack_pallas
+from .kernel import (GROUP, ROWS_B, bitplane_pack_pallas,
+                     bitplane_unpack_pallas)
+
+# words per row fed to the unpack kernel: 128 lanes of uint32 = 4096
+# elements per row, matching the 1-D pack wrapper's C = 128 * GROUP
+_UNPACK_W = 128
 
 
 def bitplane_pack(q, *, interpret: bool | None = None):
@@ -29,3 +34,35 @@ def bitplane_pack(q, *, interpret: bool | None = None):
         q = jnp.pad(q, ((0, pr), (0, pc)))
     packed = bitplane_pack_pallas(q, interpret=interpret)
     return packed, n
+
+
+def bitplane_unpack(plane_words, n: int, *, low_zero: int = 0,
+                    with_nb: bool = False,
+                    interpret: bool | None = None):
+    """(32, NW) uint32 per-plane word streams -> (n,) int32 bins.
+
+    ``plane_words[k]`` is plane k's packed words (32 consecutive elements
+    per word, element 0 at the MSB — the flat stream ``bitplane_pack``
+    emits and the archive stores); absent planes are all-zero rows.
+    ``low_zero`` masks that many least-significant negabinary digits, i.e.
+    decodes the truncation defined by a loaded MSB-first plane prefix.
+    ``with_nb=True`` returns (q, nb): the kernel holds the truncated
+    negabinary word anyway, and the progressive state stores it — handing
+    it out saves the caller an exactly-cancelling host re-encode.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pw = jnp.asarray(plane_words, jnp.uint32)
+    P, NW = pw.shape
+    assert P == 32, "expect one row per negabinary digit"
+    need = -(-max(n, 1) // (GROUP * _UNPACK_W))  # rows of _UNPACK_W words
+    R = -(-need // ROWS_B) * ROWS_B
+    pad = R * _UNPACK_W - NW
+    if pad:
+        pw = jnp.pad(pw, ((0, 0), (0, pad)))
+    pw = pw.reshape(32, R, _UNPACK_W)
+    q, nb = bitplane_unpack_pallas(pw, low_zero=low_zero,
+                                   interpret=interpret)
+    if with_nb:
+        return q.reshape(-1)[:n], nb.reshape(-1)[:n]
+    return q.reshape(-1)[:n]

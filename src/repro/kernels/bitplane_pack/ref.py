@@ -1,6 +1,7 @@
-"""Pure-jnp oracle for the bitplane packing kernel."""
+"""Pure-jnp oracles for the bitplane packing / unpacking kernels."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -21,6 +22,15 @@ def bitplane_pack_ref(q: jnp.ndarray) -> jnp.ndarray:
         bits = (g >> jnp.uint32(k)) & jnp.uint32(1)
         planes.append(jnp.sum(bits * w, axis=-1, dtype=jnp.uint32))
     return jnp.stack(planes)
+
+
+def bitplane_unpack_ref(packed, n_keep_msb: int) -> jnp.ndarray:
+    """Oracle for the unpack kernel: top ``n_keep_msb`` planes -> int32 bins
+    (sequential XOR recurrence + negabinary decode, vs the kernel's
+    closed-form inverse)."""
+    nb = unpack_planes_ref(packed, n_keep_msb)
+    u = (nb ^ jnp.uint32(NEG_M)) - jnp.uint32(NEG_M)
+    return jax.lax.bitcast_convert_type(u, jnp.int32)
 
 
 def unpack_planes_ref(packed, n_keep_msb: int) -> jnp.ndarray:

@@ -84,21 +84,28 @@ def _select_runs(parts_by_choice, choice: np.ndarray):
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
 
 
-def _kernel(x_ref, xh_ref, q_ref, pred_ref, *, s: int, eb: float,
-            interp: str, C: int, T: int):
-    xh = xh_ref[...]
-    x = x_ref[...]
+def _predict(xh, *, s: int, interp: str, C: int, T: int):
+    """Phase-sweep prediction for target columns, shared by the encode
+    (interp_quant) and decode (interp_recon) kernels — one definition so the
+    fma-contraction-proof spelling below stays bit-identical on both sides.
+    """
     l3, l1, r1, r3 = _neighbors(xh, s, C, T)
     lin = 0.5 * (l1 + r1)
     cubic_ok, r_ok = _masks(s, C, T)
     if interp == "linear":
-        pred = _select_runs({1: lin, 0: l1}, r_ok.astype(np.int8))
-    else:
-        # 9*x spelled 8*x + x: fma-contraction-proof (8*x is exact), same
-        # association as the numpy reference ((-l3 + 9l1) + 9r1) - r3
-        cub = (-l3 + (8.0 * l1 + l1) + (8.0 * r1 + r1) - r3) * (1.0 / 16.0)
-        choice = np.where(cubic_ok, 2, np.where(r_ok, 1, 0))
-        pred = _select_runs({2: cub, 1: lin, 0: l1}, choice)
+        return _select_runs({1: lin, 0: l1}, r_ok.astype(np.int8))
+    # 9*x spelled 8*x + x: fma-contraction-proof (8*x is exact), same
+    # association as the numpy reference ((-l3 + 9l1) + 9r1) - r3
+    cub = (-l3 + (8.0 * l1 + l1) + (8.0 * r1 + r1) - r3) * (1.0 / 16.0)
+    choice = np.where(cubic_ok, 2, np.where(r_ok, 1, 0))
+    return _select_runs({2: cub, 1: lin, 0: l1}, choice)
+
+
+def _kernel(x_ref, xh_ref, q_ref, pred_ref, *, s: int, eb: float,
+            interp: str, C: int, T: int):
+    xh = xh_ref[...]
+    x = x_ref[...]
+    pred = _predict(xh, s=s, interp=interp, C=C, T=T)
     tgt = x[:, s:s + 2 * s * T:2 * s]
     # divide (not multiply-by-reciprocal): bit-identical rounding vs the oracle
     q_ref[...] = jnp.rint((tgt - pred) / (2.0 * eb)).astype(jnp.int32)

@@ -1,0 +1,4 @@
+from .ops import interp_recon
+from .ref import interp_recon_ref
+
+__all__ = ["interp_recon", "interp_recon_ref"]

@@ -1,0 +1,58 @@
+"""Fused interpolation-predict + add-residual Pallas TPU kernel (decode).
+
+The exact inverse of ``interp_quant``'s phase sweep: for a row-block in
+VMEM, predict target columns (odd multiples of stride s) from neighbour
+columns of the partially reconstructed surface at +-s / +-3s, then add the
+dequantized residual — one HBM round-trip for what the CPU reference does
+in two gather-heavy passes (predict, add).  This is the hot loop of
+retrieval (paper Algorithms 1–2): every (level, dim) phase of
+``interpolation.reconstruct`` maps to one launch.
+
+Bit-exactness vs the numpy decoder: the prediction reuses the encode
+kernel's ``_predict`` verbatim (fma-contraction-proof spelling — see
+``interp_quant.kernel``), and the residual arrives already dequantized
+(f64) so the final ``pred + res`` is a bare add with no adjacent multiply
+for XLA to contract.  The escape-override writeback (exact values at
+escaped points) is left to the caller: it is a scatter of host-resident
+records, and overwriting after the kernel keeps the kernel oblivious to
+the escape channel — same division of labour as the encode path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..interp_quant.kernel import ROWS_B, _predict
+
+
+def _kernel(xh_ref, res_ref, out_ref, *, s: int, interp: str, C: int, T: int):
+    xh = xh_ref[...]
+    res = res_ref[...]
+    pred = _predict(xh, s=s, interp=interp, C=C, T=T)
+    # bare add: numpy computes pred and res separately then adds, and there
+    # is no multiply adjacent to this add, so contraction cannot occur
+    out_ref[...] = (pred + res).astype(xh.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interp", "interpret"))
+def interp_recon_pallas(xhat: jax.Array, res: jax.Array, *, s: int,
+                        interp: str = "cubic", interpret: bool = True):
+    """xhat: (R, C), res: (R, T) with R % ROWS_B == 0.  Returns recon (R, T):
+    ``pred + res`` at target columns (odd multiples of s)."""
+    R, C = xhat.shape
+    T = len(range(s, C, 2 * s))
+    assert R % ROWS_B == 0 and T > 0 and res.shape == (R, T)
+    grid = (R // ROWS_B,)
+    kern = functools.partial(_kernel, s=s, interp=interp, C=C, T=T)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS_B, C), lambda i: (i, 0)),
+                  pl.BlockSpec((ROWS_B, T), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROWS_B, T), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, T), xhat.dtype),
+        interpret=interpret,
+    )(xhat, res)

@@ -1,0 +1,35 @@
+"""Public jit'd wrapper for the fused interpolate+add-residual kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ROWS_B, interp_recon_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interp_recon(xhat, res, *, s: int, interp: str = "cubic",
+                 interpret: bool | None = None):
+    """Fused decode phase sweep for arbitrary (R, C): pads rows to the block.
+
+    ``xhat`` (R, C) is the partially reconstructed surface (even multiples of
+    s already known), ``res`` (R, T) the dequantized residuals for the target
+    columns (odd multiples of s).  Returns recon (R, T) = pred + res; the
+    caller scatters it back into the sweep view (and applies any escape
+    overrides) — the exact inverse of ``interp_quant``'s contract.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    xhat = jnp.asarray(xhat)
+    res = jnp.asarray(res, xhat.dtype)
+    R, C = xhat.shape
+    pad = (-R) % ROWS_B
+    if pad:
+        xhat = jnp.pad(xhat, ((0, pad), (0, 0)))
+        res = jnp.pad(res, ((0, pad), (0, 0)))
+    out = interp_recon_pallas(xhat, res, s=s, interp=interp,
+                              interpret=interpret)
+    return out[:R]

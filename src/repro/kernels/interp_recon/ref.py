@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused interpolate+add-residual decode sweep.
+
+Mirrors ``repro.core.interpolation.predict_block`` + the ``pred + res``
+writeback of ``interpolation.reconstruct`` for a sweep along the last axis
+with stride s; shares ``predict_ref`` with the encode oracle so the two
+directions stay inverses by construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..interp_quant.ref import predict_ref
+
+
+def interp_recon_ref(xhat: jnp.ndarray, res: jnp.ndarray, s: int,
+                     interp: str = "cubic") -> jnp.ndarray:
+    """Returns recon targets (R, T) = predict(xhat) + res."""
+    pred = predict_ref(xhat, s, interp)
+    return (pred + res).astype(xhat.dtype)

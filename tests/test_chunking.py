@@ -11,6 +11,7 @@ from repro.core import (CUBIC, ChunkedRetrievalState, chunk_bounds, compress,
                         decompress, metrics, open_archive, retrieve)
 from repro.core.container import (MAGIC, MAGIC2, ArchiveReader,
                                   ChunkedArchiveReader, parse_meta)
+from repro.core.pipeline import split_budget
 
 
 # ------------------------------------------------------------ framing
@@ -22,6 +23,60 @@ def test_chunk_bounds_cover_axis0():
     assert chunk_bounds((3,), 1000) == [(0, 3)]
     with pytest.raises(ValueError):
         chunk_bounds((10,), 0)
+
+
+def test_chunk_bounds_rejects_0d_and_empty():
+    """0-d / empty inputs fail with a clear ValueError, not IndexError."""
+    with pytest.raises(ValueError, match="0-d"):
+        chunk_bounds((), 4)
+    with pytest.raises(ValueError, match="empty"):
+        chunk_bounds((0,), 4)
+    with pytest.raises(ValueError, match="empty"):
+        chunk_bounds((5, 0, 3), 4)
+    with pytest.raises(ValueError, match="0-d"):
+        compress(np.float64(1.5), 1e-3, chunk_elems=4)
+    with pytest.raises(ValueError, match="empty"):
+        compress(np.zeros((0, 8)), 1e-3, chunk_elems=4)
+
+
+# ------------------------------------------------------- budget splitting
+
+def test_split_budget_sums_exactly():
+    """Regression for the floor-division remainder loss: every allocation
+    sums to precisely the requested total."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        k = int(rng.integers(1, 12))
+        weights = rng.integers(1, 10 ** 6, k).tolist()
+        total = int(rng.integers(0, 10 ** 7))
+        parts = split_budget(total, weights)
+        assert len(parts) == k
+        assert sum(parts) == total
+        assert all(p >= 0 for p in parts)
+
+
+def test_split_budget_proportional_and_deterministic():
+    assert split_budget(1000, [1, 1]) == [500, 500]
+    assert split_budget(7, [1, 1, 1]) == [3, 2, 2]      # remainder ties: first
+    assert split_budget(0, [3, 5]) == [0, 0]
+    assert split_budget(10, []) == []
+    # floor would give [0, 0, 0] and drop everything
+    assert sum(split_budget(2, [10 ** 9, 10 ** 9, 10 ** 9])) == 2
+
+
+def test_chunked_max_bytes_budget_fully_allocated():
+    """End to end: per-chunk budgets of a v2 bitrate retrieval cover the
+    whole request (the old floor split dropped len(chunks)-1 bytes)."""
+    x = smooth_field((10, 101), 8)   # 1010 elements: 3 chunks of 404/404/202
+    buf = compress(x, 1e-6, CUBIC, chunk_elems=404)
+    r = open_archive(buf)
+    sub_ns = [r.chunk_reader(i).meta.n_elements
+              for i in range(len(r.meta.chunks))]
+    for total in (1001, 997, 64):
+        parts = split_budget(total, sub_ns)
+        assert sum(parts) == total
+    out, st = retrieve(buf, max_bytes=3000)
+    assert metrics.linf(x, out) < 1e-1
 
 
 def test_v2_magic_and_reader_dispatch():
