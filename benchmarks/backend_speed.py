@@ -1,26 +1,34 @@
 """Codec backend throughput: numpy reference vs jax/Pallas kernels.
 
 Reports compress AND decode throughput for both backends on a >=2^20-element
-field (the acceptance smoke case), plus the chunked variant — chunking makes
-every slab share one jit cache entry, which is where the batched/vmapped
-encoding of the roadmap picks up.  Decode is measured as the two retrieval
-operations the paper optimizes (§5): a full-precision ``decompress`` and one
-incremental ``refine`` step (Algorithm 2's delta cascade) on top of a
-coarse first retrieval.
+field (the acceptance smoke case), plus the chunked variant in BOTH
+execution modes — the per-chunk loop and the batched shape-group engine
+(``batch_chunks``), whose ``jax.vmap``-ed dispatches are the roadmap's
+equal-shape chunk batching.  Kernel dispatch counts for both modes come
+from ``repro.kernels.dispatch``, so the batched-vs-looped launch-count
+reduction is a recorded, trendable number, not a claim.  Decode is measured
+as the two retrieval operations the paper optimizes (§5): a full-precision
+``decompress`` and one incremental ``refine`` step (Algorithm 2's delta
+cascade) on top of a coarse first retrieval.
 
 CPU caveat: off-TPU the Pallas kernels run in *interpret mode*, a
 correctness harness, so the jax numbers on CPU measure dispatch overhead,
 not kernel speed; parity of the emitted bytes (encode) and reconstructed
 bits (decode) is asserted regardless.  On TPU the same path compiles to
-Mosaic.
+Mosaic.  That cuts both ways for the chunk-batch entry: the vmapped
+interpreter can make *batched wall-clock slower on CPU* even as launches
+collapse — off-TPU the dispatch counts are the trendable metric, the MB/s
+columns become meaningful on real hardware.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.backend_speed [--n 1048576] [--full]
-      [--json-out BENCH_decode.json]
+      [--json-out BENCH_decode.json] [--json-out-compress BENCH_compress.json]
 
 CI-smoke mode (default) runs one warm repetition per backend; --full adds
 a second field and best-of-3 timing.  The decode measurements are written
-to ``BENCH_decode.json`` (uploaded as a CI artifact).
+to ``BENCH_decode.json`` and the compress measurements (including the
+chunk-batch speed entry) to ``BENCH_compress.json`` (both uploaded as CI
+artifacts).
 """
 from __future__ import annotations
 
@@ -30,13 +38,19 @@ import json
 import numpy as np
 
 from .common import csv_row, timed
-from repro.core import compress, decompress, open_archive, refine, retrieve
+from repro.core import (chunk_bounds, compress, decompress, open_archive,
+                        refine, retrieve)
+from repro.kernels import dispatch
 
 JSON_OUT = "BENCH_decode.json"
+JSON_OUT_COMPRESS = "BENCH_compress.json"
 
 #: coarse-then-refine targets for the Algorithm 2 timing, relative to eb
 REFINE_COARSE = 1e3
 REFINE_FINE = 1e1
+
+#: chunk size for the chunk-batch entries (16 chunks on the 2^20 field)
+CHUNK_ELEMS = 1 << 16
 
 
 def _field(n: int) -> np.ndarray:
@@ -82,9 +96,57 @@ def _decode_rows(x: np.ndarray, eb: float, buf: bytes, case: str,
                             bytes_read=int(st.bytes_read)))
 
 
+def _chunk_batch_rows(x: np.ndarray, eb: float, rows, checks,
+                      comp_records, dec_records):
+    """The chunk-batch speed entry: batched vs looped dispatch counts and
+    MB/s for both codec directions on a CHUNK_ELEMS-slabbed archive."""
+    n_chunks = len(chunk_bounds(x.shape, CHUNK_ELEMS))
+    bufs = {}
+    for mode, flag in (("looped", False), ("batched", True)):
+        compress(x, eb, backend="jax", chunk_elems=CHUNK_ELEMS,
+                 batch_chunks=flag)  # warm jit caches out of the timing
+        with dispatch.measure() as d:
+            bufs[mode], dt = timed(compress, x, eb, repeat=1, backend="jax",
+                                   chunk_elems=CHUNK_ELEMS,
+                                   batch_chunks=flag)
+        mbps = x.nbytes / dt / 1e6
+        nd = sum(d.values())
+        rows.append(csv_row(f"backend_speed/chunk_batch/{mode}/compress",
+                            dt * 1e6,
+                            f"MBps={mbps:.1f};dispatches={nd}"))
+        print(rows[-1])
+        comp_records.append(dict(case="chunk_batch", mode=mode,
+                                 op="compress", seconds=dt, mbps=mbps,
+                                 chunks=n_chunks, dispatches=nd,
+                                 dispatches_by_kernel=d))
+
+        retrieve(open_archive(bufs[mode]), error_bound=REFINE_COARSE * eb,
+                 backend="jax", batch_chunks=flag)  # warm
+        with dispatch.measure() as d:
+            reader = open_archive(bufs[mode])
+            (_, st), dt = timed(retrieve, reader,
+                                error_bound=REFINE_COARSE * eb, repeat=1,
+                                backend="jax", batch_chunks=flag)
+        mbps = x.nbytes / dt / 1e6
+        nd = sum(d.values())
+        rows.append(csv_row(f"backend_speed/chunk_batch/{mode}/retrieve",
+                            dt * 1e6,
+                            f"MBps={mbps:.1f};dispatches={nd}"))
+        print(rows[-1])
+        dec_records.append(dict(case="chunk_batch", mode=mode, op="retrieve",
+                                seconds=dt, mbps=mbps, chunks=n_chunks,
+                                dispatches=nd, dispatches_by_kernel=d))
+    checks.append(("chunk_batch_parity_bytes", "chunked", "compress",
+                   bufs["looped"] == bufs["batched"]))
+    loop_d = sum(comp_records[-2]["dispatches_by_kernel"].values())
+    bat_d = sum(comp_records[-1]["dispatches_by_kernel"].values())
+    checks.append(("chunk_batch_fewer_dispatches", "chunked", "compress",
+                   bat_d < loop_d))
+
+
 def run(scale=None, n: int = 1 << 20, smoke: bool = True,
-        json_out: str = JSON_OUT):
-    rows, checks, records = [], [], []
+        json_out: str = JSON_OUT, json_out_compress: str = JSON_OUT_COMPRESS):
+    rows, checks, records, comp_records = [], [], [], []
     if n < 1 << 20:
         raise SystemExit(f"--n must be >= {1 << 20} (2^20) elements, got {n}")
     x = _field(n)
@@ -105,6 +167,9 @@ def run(scale=None, n: int = 1 << 20, smoke: bool = True,
         rows.append(csv_row(f"backend_speed/{x.size}el/{name}/compress",
                             dt * 1e6, f"MBps={mbps:.1f};bytes={len(buf)}"))
         print(rows[-1])
+        comp_records.append(dict(case=f"{x.size}el", variant=name,
+                                 op="compress", seconds=dt, mbps=mbps,
+                                 bytes=len(buf)))
     checks.append(("backend_parity_bytes", f"{x.size}el", "compress",
                    bufs["numpy"] == bufs["jax"]))
 
@@ -118,6 +183,9 @@ def run(scale=None, n: int = 1 << 20, smoke: bool = True,
         checks.append(("decode_parity_bits", case, "decompress",
                        bool(np.array_equal(by_bk["numpy"], by_bk["jax"]))))
 
+    # chunk-batch speed entry: batched vs looped dispatch counts + MB/s
+    _chunk_batch_rows(x, eb, rows, checks, comp_records, records)
+
     if not smoke:
         y = _field(1 << 22)
         for name, kw in variants:
@@ -126,16 +194,30 @@ def run(scale=None, n: int = 1 << 20, smoke: bool = True,
                                 dt * 1e6,
                                 f"MBps={y.nbytes / dt / 1e6:.1f}"))
             print(rows[-1])
+    # each artifact carries only the checks about the ops it records, so a
+    # per-file "all ok" read is unambiguous about which direction failed
+    def _check_dicts(ops):
+        return [dict(name=c[0], case=c[1], op=c[2], ok=bool(c[3]))
+                for c in checks if c[2] in ops]
+
     if json_out:
         with open(json_out, "w") as f:
             json.dump(dict(n=int(x.size), eb=eb,
                            refine_bounds=[REFINE_COARSE * eb,
                                           REFINE_FINE * eb],
                            records=records,
-                           checks=[dict(name=c[0], case=c[1], op=c[2],
-                                        ok=bool(c[3])) for c in checks]),
+                           checks=_check_dicts(("decompress", "retrieve"))),
                       f, indent=2)
         print(f"wrote {json_out} ({len(records)} decode records)")
+    if json_out_compress:
+        with open(json_out_compress, "w") as f:
+            json.dump(dict(n=int(x.size), eb=eb,
+                           chunk_elems=CHUNK_ELEMS,
+                           records=comp_records,
+                           checks=_check_dicts(("compress",))),
+                      f, indent=2)
+        print(f"wrote {json_out_compress} ({len(comp_records)} compress "
+              "records)")
     return rows, checks
 
 
@@ -147,8 +229,12 @@ def main():
                     help="best-of-3 timing plus a 4M-element field")
     ap.add_argument("--json-out", default=JSON_OUT,
                     help="decode-benchmark JSON artifact path ('' disables)")
+    ap.add_argument("--json-out-compress", default=JSON_OUT_COMPRESS,
+                    help="compress-benchmark JSON artifact path "
+                         "('' disables)")
     args = ap.parse_args()
-    _, checks = run(n=args.n, smoke=not args.full, json_out=args.json_out)
+    _, checks = run(n=args.n, smoke=not args.full, json_out=args.json_out,
+                    json_out_compress=args.json_out_compress)
     for name, ds, op, ok in checks:
         print(f"check {name}[{ds}/{op}]: {'ok' if ok else 'FAILED'}")
     if not all(c[-1] for c in checks):

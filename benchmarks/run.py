@@ -4,6 +4,12 @@ Prints ``name,us_per_call,derived`` CSV; claim-checks are summarized at the
 end (a failed claim check is a regression against the paper's comparisons,
 not a crash).
 
+The ``backend_speed`` module (in the default set) also writes the
+trendable JSON artifacts ``BENCH_compress.json`` and ``BENCH_decode.json``
+to the working directory — run from the repo root so CI picks them up.
+``BENCH_compress.json`` carries the chunk-batch speed entry: batched vs
+looped kernel dispatch counts and MB/s for the vmapped shape-group engine.
+
   PYTHONPATH=src python -m benchmarks.run [--scale 0.15] [--only fig5,...]
 """
 from __future__ import annotations

@@ -13,7 +13,10 @@ Both directions are backend-pluggable (see ``pipeline.backends``): the
 "jax" backend runs the predict+quantize / predict+reconstruct sweeps and
 the bitplane pack/unpack through the Pallas kernels (interpret mode on
 CPU), emitting archives byte-identical — and reconstructions bit-identical
-— to the numpy reference.
+— to the numpy reference.  Chunked (v2) archives are scheduled in
+equal-shape groups and, where the backend ships batched primitives, each
+group runs through ``jax.vmap``-ed kernel launches (``batch_chunks=``
+opts out; bytes/bits never change).
 """
 from .ipcomp import (compress, decompress, retrieve, refine, open_archive,
                      RetrievalState, ChunkedRetrievalState, chunk_bounds)

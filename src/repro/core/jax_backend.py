@@ -40,6 +40,12 @@ full-precision requantization that flags outliers beyond ``quantize.QMAX``
 pass over the phase — no second prediction sweep.  The writeback
 ``pred + 2*eb*q`` is also done host-side in numpy: it is the archive's
 canonical rounding, shared verbatim with the numpy backend.
+
+Every primitive also has a ``*_batch`` twin over stacks of equal-shaped
+chunk problems (the unit the v2 shape-group scheduler feeds): the stack
+runs through the ``jax.vmap``-ed kernel entry points, so B chunks cost ONE
+dispatch per phase / per level instead of B, with per-chunk outputs
+bit-identical to B scalar calls.
 """
 from __future__ import annotations
 
@@ -138,6 +144,80 @@ def decorrelate(x: np.ndarray, eb: float, interp: str,
             escs, anchors)
 
 
+def decorrelate_batch(xs: np.ndarray, eb: float, interp: str,
+                      interpret: bool | None = None) -> List[Tuple]:
+    """Batched twin of :func:`decorrelate` over stacked equal-shape chunks.
+
+    ``xs`` is (B, *chunk_shape); returns a list of B per-chunk
+    ``(xhat, qs, escs, anchors)`` tuples whose contents are bit-identical
+    to B independent :func:`decorrelate` calls — the batch axis is purely
+    an execution detail.  Every (level, dim) phase costs ONE vmapped
+    kernel dispatch for the whole stack instead of B (the launch-count
+    bottleneck cuSZ-i identifies for multi-level interpolation on GPUs);
+    the host-side escape requantization runs vectorized over the batch,
+    with per-chunk record extraction only.
+    """
+    import jax
+
+    from ..kernels.interp_quant import interp_quant_batch
+
+    B = xs.shape[0]
+    shape = xs.shape[1:]
+    L = interpolation.num_levels(shape)
+    xhat = np.zeros_like(xs, dtype=np.float64)
+    anc = (slice(None),) + interpolation.anchor_slices(shape, L)
+    anchors = np.array(xs[anc], np.float64, copy=True)
+    xhat[anc] = anchors
+
+    qs: List[List[List[np.ndarray]]] = [[[] for _ in range(L)] for _ in range(B)]
+    escs: List[List[List[Tuple]]] = [[[] for _ in range(L)] for _ in range(B)]
+    offsets = [0] * L
+    with jax.experimental.enable_x64():
+        for ph in interpolation.iter_phases(shape, L):
+            ax = ph.dim + 1  # phase axis shifted by the leading batch axis
+            xv = xs[(slice(None),) + ph.view]
+            hv = xhat[(slice(None),) + ph.view]
+            xm = np.ascontiguousarray(np.moveaxis(xv, ax, -1))
+            hm = np.ascontiguousarray(np.moveaxis(hv, ax, -1))
+            lead, C = xm.shape[1:-1], xm.shape[-1]
+            R = int(np.prod(lead)) if lead else 1
+            q3, pred3 = interp_quant_batch(xm.reshape(B, R, C),
+                                           hm.reshape(B, R, C),
+                                           s=ph.stride, eb=eb, interp=interp,
+                                           interpret=interpret)
+            T = q3.shape[-1]
+            # order='C' copies: see decorrelate() — escape zeroing below
+            # must write through, device buffers arrive read-only
+            q = np.array(np.moveaxis(
+                np.asarray(q3).reshape((B,) + lead + (T,)), -1, ax),
+                np.int64, order="C")
+            pred = np.array(np.moveaxis(
+                np.asarray(pred3, np.float64).reshape((B,) + lead + (T,)),
+                -1, ax), order="C")
+            tvals = np.take(xv, ph.targets, axis=ax).astype(np.float64)
+            block = pred + quantize.dequantize(q, eb)
+            qf = quantize.quantize(tvals - pred, eb)
+            esc = quantize.escape_mask(qf)
+            li = L - ph.level
+            for b in range(B):
+                if esc[b].any():
+                    flat = np.flatnonzero(esc[b].ravel())
+                    vals = tvals[b].ravel()[flat]
+                    q[b][esc[b]] = 0
+                    block[b][esc[b]] = vals  # exact overwrite, no cancellation
+                else:
+                    flat = np.zeros(0, np.int64)
+                    vals = np.zeros(0, np.float64)
+                qs[b][li].append(q[b].ravel())
+                escs[b][li].append((flat + offsets[li], vals))
+            interpolation._assign(hv, ax, ph.targets, block)
+            offsets[li] += int(q[0].size)
+    return [(xhat[b],
+             [np.concatenate(v) if v else np.zeros(0, np.int64)
+              for v in qs[b]],
+             escs[b], anchors[b]) for b in range(B)]
+
+
 def encode_level(q: np.ndarray, interpret: bool | None = None,
                  ) -> Tuple[List[bytes], int]:
     """Kernel-backed twin of ``bitplane.encode_level`` (takes q, not nb).
@@ -158,7 +238,61 @@ def encode_level(q: np.ndarray, interpret: bool | None = None,
     return bitplane.blobs_from_packed(np.asarray(packed), int(n))
 
 
+def encode_level_batch(q2: np.ndarray, interpret: bool | None = None,
+                       ) -> List[Tuple[List[bytes], int]]:
+    """Batched twin of :func:`encode_level`: (B, n) stacked level streams.
+
+    One vmapped pack launch covers the whole stack; the host then truncates
+    and zlibs each chunk's planes independently (per-chunk ``nbits`` and
+    blobs), so every returned ``(blobs, nbits)`` is byte-identical to an
+    unbatched :func:`encode_level` call on that row.
+    """
+    B, n = q2.shape
+    if n == 0:
+        return [([], 0) for _ in range(B)]
+    from ..kernels.bitplane_pack import bitplane_pack_batch
+
+    q2i = np.ascontiguousarray(q2, np.int32)
+    packed, n_valid = bitplane_pack_batch(q2i, interpret=interpret)
+    packed = np.asarray(packed)
+    return [bitplane.blobs_from_packed(packed[b], int(n_valid))
+            for b in range(B)]
+
+
 # ----------------------------------------------------------------- decode
+
+def _loaded_prefix(blobs) -> int:
+    """Length of the loaded MSB-first plane prefix (None = not loaded)."""
+    want = 0
+    for blob in blobs:
+        if blob is None:
+            break  # prefix property: once a plane is missing, rest are too
+        want += 1
+    return want
+
+
+def _fill_plane_words(words: np.ndarray, blobs, want: int,
+                      nbits: int) -> None:
+    """Unzlib a loaded blob prefix into the unpack kernel's word rows.
+
+    ``words`` is one stream's (32, nw) destination; row k holds negabinary
+    digit k's packed words (32 consecutive elements per word, element 0 at
+    the MSB — the ``np.packbits`` stream the archive stores).  Shared by
+    the scalar and batched decoders so the b'' convention and padding
+    cannot drift between them.
+    """
+    import zlib
+
+    for i in range(want):
+        blob = blobs[i]
+        if not blob:
+            continue  # all-zero encoded plane: b'' convention
+        raw = zlib.decompress(blob)  # np.packbits stream, element 0 at MSB
+        if len(raw) % 4:
+            raw += b"\0" * (4 - len(raw) % 4)
+        w = np.frombuffer(raw, ">u4")
+        words[nbits - 1 - i, : w.size] = w
+
 
 def decode_level(blobs, nbits: int, n: int,
                  interpret: bool | None = None) -> np.ndarray:
@@ -171,31 +305,47 @@ def decode_level(blobs, nbits: int, n: int,
     which emits the truncated word alongside the bins — the progressive
     state stores exactly that word, so no host-side conversion remains.
     """
-    import zlib
-
     from ..kernels.bitplane_pack import bitplane_unpack
 
-    want = 0
-    for b in blobs:
-        if b is None:
-            break  # prefix property: once a plane is missing, rest are too
-        want = want + 1
+    want = _loaded_prefix(blobs)
     if nbits == 0 or n == 0 or want == 0:
         return np.zeros(n, np.uint32)
-    nw = (n + 31) // 32
-    words = np.zeros((32, nw), np.uint32)
-    for i in range(want):
-        blob = blobs[i]
-        if not blob:
-            continue  # all-zero encoded plane: b'' convention
-        raw = zlib.decompress(blob)  # np.packbits stream, element 0 at MSB
-        if len(raw) % 4:
-            raw += b"\0" * (4 - len(raw) % 4)
-        w = np.frombuffer(raw, ">u4")
-        words[nbits - 1 - i, : w.size] = w
+    words = np.zeros((32, (n + 31) // 32), np.uint32)
+    _fill_plane_words(words, blobs, want, nbits)
     _, nb = bitplane_unpack(words, n=n, low_zero=nbits - want,
                             with_nb=True, interpret=interpret)
     return np.asarray(nb, np.uint32)
+
+
+def decode_level_batch(blob_lists, nbits: int, n: int,
+                       interpret: bool | None = None) -> List[np.ndarray]:
+    """Batched twin of :func:`decode_level` for equal-(nbits, prefix) groups.
+
+    ``blob_lists`` holds B chunks' MSB-first blob prefixes, all with the
+    same ``nbits`` and the same loaded-prefix length (the scheduler groups
+    by exactly that key, since ``low_zero`` is a static kernel argument;
+    mixed prefixes raise ValueError — decoding them with one low_zero
+    would silently corrupt the shorter streams).  One vmapped unpack
+    launch decodes every stream; each returned truncated negabinary array
+    is bit-identical to an unbatched call.
+    """
+    from ..kernels.bitplane_pack import bitplane_unpack_batch
+
+    B = len(blob_lists)
+    wants = [_loaded_prefix(blobs) for blobs in blob_lists]
+    want = wants[0]
+    if any(w != want for w in wants):
+        raise ValueError("batched decode_level needs equal loaded-plane "
+                         f"prefixes; got {sorted(set(wants))}")
+    if nbits == 0 or n == 0 or want == 0:
+        return [np.zeros(n, np.uint32) for _ in range(B)]
+    words = np.zeros((B, 32, (n + 31) // 32), np.uint32)
+    for b, blobs in enumerate(blob_lists):
+        _fill_plane_words(words[b], blobs, want, nbits)
+    _, nb = bitplane_unpack_batch(words, n=n, low_zero=nbits - want,
+                                  with_nb=True, interpret=interpret)
+    nb = np.asarray(nb, np.uint32)
+    return [nb[b] for b in range(B)]
 
 
 def reconstruct(shape, interp: str, anchors: np.ndarray,
@@ -237,3 +387,47 @@ def reconstruct(shape, interp: str, anchors: np.ndarray,
                                          yhat_per_level, overrides=overrides,
                                          out_dtype=out_dtype,
                                          block_fn=block_fn)
+
+
+def reconstruct_batch(shape, interp: str, anchors: np.ndarray,
+                      yhat_per_level: List[np.ndarray],
+                      overrides=None, out_dtype=np.float64,
+                      interpret: bool | None = None) -> np.ndarray:
+    """Batched twin of :func:`reconstruct` over B equal-``shape`` items.
+
+    Same seam as the scalar path: traversal, offset accounting, and the
+    per-item escape writeback run in ``interpolation.reconstruct_batch``;
+    this function only supplies the batched per-phase block primitive —
+    one vmapped ``interp_recon`` launch per phase for the whole stack.
+    Per-item outputs are bit-identical to B scalar :func:`reconstruct`
+    calls (the vmapped kernel computes each batch element exactly like a
+    lone call).
+    """
+    import jax
+
+    from ..kernels.interp_recon import interp_recon_batch
+
+    def block_fn(hv, ph, res):
+        B = hv.shape[0]
+        ax = ph.dim + 1
+        tgt_shape = list(hv.shape)
+        tgt_shape[ax] = ph.targets.size
+        hm = np.ascontiguousarray(np.moveaxis(hv, ax, -1))
+        rm = np.ascontiguousarray(np.moveaxis(
+            np.asarray(res, np.float64).reshape(tgt_shape), ax, -1))
+        lead, C = hm.shape[1:-1], hm.shape[-1]
+        R = int(np.prod(lead)) if lead else 1
+        out3 = interp_recon_batch(hm.reshape(B, R, C), rm.reshape(B, R, -1),
+                                  s=ph.stride, interp=interp,
+                                  interpret=interpret)
+        T = out3.shape[-1]
+        # order='C' copy: the override writeback addresses each item's
+        # block by flat index in original-axis C order
+        return np.array(np.moveaxis(
+            np.asarray(out3, np.float64).reshape((B,) + lead + (T,)),
+            -1, ax), order="C")
+
+    with jax.experimental.enable_x64():
+        return interpolation.reconstruct_batch(
+            shape, interp, anchors, yhat_per_level, overrides=overrides,
+            out_dtype=out_dtype, block_fn=block_fn)

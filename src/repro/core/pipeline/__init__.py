@@ -15,8 +15,10 @@ executes it:
       the v2 container + the escape-channel packer.
   ``decode.py``
       ``retrieve`` / ``refine`` / ``decompress`` (§5, Algorithms 1–2):
-      DP-planned progressive loading, per-chunk dispatch for v2 archives,
-      largest-remainder byte-budget splitting (``split_budget``).
+      DP-planned progressive loading, shape-group scheduled (batched where
+      the backend supports it) per-chunk dispatch for v2 archives,
+      largest-remainder byte-budget splitting (``split_budget``; refines
+      split only the unspent remainder via ``refine_budgets``).
   ``state.py``
       :class:`RetrievalState` / :class:`ChunkedRetrievalState` and the
       Algorithm 2 delta-cascade steps (``load_level_deltas``,
@@ -26,14 +28,15 @@ executes it:
 imports keep working unchanged.
 """
 from .backends import AUTO, JAX, NUMPY, CodecBackend, get, names, register
-from .decode import (decompress, open_archive, refine, retrieve,
-                     split_budget)
-from .encode import chunk_bounds, compress
+from .decode import (decompress, open_archive, refine, refine_budgets,
+                     retrieve, split_budget)
+from .encode import chunk_bounds, compress, shape_groups
 from .state import ChunkedRetrievalState, RetrievalState
 
 __all__ = [
     "AUTO", "JAX", "NUMPY", "CodecBackend", "get", "names", "register",
-    "compress", "chunk_bounds",
+    "compress", "chunk_bounds", "shape_groups",
     "retrieve", "refine", "decompress", "open_archive", "split_budget",
+    "refine_budgets",
     "RetrievalState", "ChunkedRetrievalState",
 ]

@@ -27,6 +27,25 @@ suites pin this down):
       decompression-side sweep (Algorithm 1 core); linear in (anchors,
       yhat), which Algorithm 2's zero-anchor delta cascade relies on.
 
+Each primitive may also ship an OPTIONAL batched twin (``*_batch``) that
+processes a stack of equal-shaped chunk problems in one kernel dispatch —
+the unit the v2 chunk scheduler feeds (see ``encode``/``decode`` shape-group
+scheduling):
+
+  decorrelate_batch(xs_f64 (B, *shape), eb, interp) -> B-list of the
+      scalar tuples;
+  encode_level_batch(q2 (B, n), nb2 (B, n)) -> B-list of (blobs, nbits);
+  decode_level_batch(B blob-prefix lists w/ equal nbits AND equal loaded
+      prefix, nbits, n) -> B-list of truncated negabinary arrays;
+  reconstruct_batch(shape, interp, anchors (B, ...), yhat [(B, n_l)],
+      overrides=per-item list, out_dtype=) -> (B, *shape).
+
+``None`` slots mean "no batched form": the pipeline falls back to a
+per-chunk loop over the scalar primitive, so the numpy reference needs no
+batch code and third-party backends can adopt batching incrementally.
+Batched results must be bit-identical to the loop — the batch axis is an
+execution detail, never a format change.
+
 Selection: ``"numpy"`` | ``"jax"`` | ``"auto"``/None.  "auto" picks jax only
 where the kernels actually compile (TPU); on GPU/CPU they would run in the
 (slow) Pallas interpreter — valid for parity testing, so request it
@@ -35,7 +54,7 @@ explicitly with ``backend="jax"`` rather than have "auto" silently emulate.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -47,12 +66,28 @@ from ..jax_backend import AUTO, JAX, NUMPY
 
 @dataclass(frozen=True)
 class CodecBackend:
-    """The four codec primitives one execution substrate provides."""
+    """The four codec primitives one execution substrate provides, plus
+    optional batched twins over stacks of equal-shaped chunk problems
+    (None = the pipeline loops the scalar primitive per chunk)."""
     name: str
     decorrelate: Callable
     encode_level: Callable
     decode_level: Callable
     reconstruct: Callable
+    decorrelate_batch: Optional[Callable] = None
+    encode_level_batch: Optional[Callable] = None
+    decode_level_batch: Optional[Callable] = None
+    reconstruct_batch: Optional[Callable] = None
+
+    @property
+    def batches_encode(self) -> bool:
+        return (self.decorrelate_batch is not None
+                and self.encode_level_batch is not None)
+
+    @property
+    def batches_decode(self) -> bool:
+        return (self.decode_level_batch is not None
+                and self.reconstruct_batch is not None)
 
 
 _REGISTRY: Dict[str, CodecBackend] = {}
@@ -117,12 +152,18 @@ def _jax_encode_level(q: np.ndarray, nb: np.ndarray) -> Tuple[List[bytes], int]:
     return jax_backend.encode_level(q)
 
 
+def _jax_encode_level_batch(q2: np.ndarray, nb2: np.ndarray,
+                            ) -> List[Tuple[List[bytes], int]]:
+    return jax_backend.encode_level_batch(q2)
+
+
 register(CodecBackend(
     name=NUMPY,
     decorrelate=_numpy_decorrelate,
     encode_level=_numpy_encode_level,
     decode_level=bitplane.decode_level,
     reconstruct=interpolation.reconstruct,
+    # no batch slots: the reference stays a per-chunk loop by construction
 ))
 
 register(CodecBackend(
@@ -131,4 +172,8 @@ register(CodecBackend(
     encode_level=_jax_encode_level,
     decode_level=jax_backend.decode_level,
     reconstruct=jax_backend.reconstruct,
+    decorrelate_batch=jax_backend.decorrelate_batch,
+    encode_level_batch=_jax_encode_level_batch,
+    decode_level_batch=jax_backend.decode_level_batch,
+    reconstruct_batch=jax_backend.reconstruct_batch,
 ))

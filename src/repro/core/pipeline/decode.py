@@ -18,7 +18,19 @@ per-chunk L_inf bound implies the global one) and ``bytes_read``
 aggregates across chunks.  Byte/bitrate budgets are split across chunks
 proportionally to element count by largest-remainder assignment
 (:func:`split_budget`), so the total allocated budget equals the request
-exactly — no silent remainder loss.
+exactly — no silent remainder loss; on a refine, each chunk first keeps
+the bytes it already read and only the *remaining* budget is split
+(:func:`refine_budgets`), so no chunk is starved for having consumed its
+share earlier.
+
+Execution over the chunk grid is scheduled in equal-shape groups: when the
+backend ships batched primitives (``decode_level_batch`` /
+``reconstruct_batch``), each group's plane decodes and reconstruction
+sweeps run as ONE vmapped kernel dispatch per phase / per (level, prefix)
+key instead of one per chunk — per-chunk plans, states and byte accounting
+are untouched, and ``refine`` still loads only each chunk's missing planes
+(``batch_chunks=False`` forces the per-chunk loop; outputs are
+bit-identical either way).
 """
 from __future__ import annotations
 
@@ -29,13 +41,28 @@ import numpy as np
 from .. import container, loader
 from ..container import ArchiveReader, ChunkedArchiveReader
 from . import backends
+from .encode import shape_groups
 from .state import (ChunkedRetrievalState, RetrievalState, initial_state,
-                    load_level_deltas, push_delta, update_achieved_bound)
+                    initial_state_batch, load_level_deltas,
+                    load_level_deltas_batch, push_delta, push_delta_batch,
+                    update_achieved_bound)
 
 
 def open_archive(buf: bytes):
     """Reader for any archive version (v1 plain / v2 chunked)."""
     return container.open_reader(buf)
+
+
+def _check_one_target(error_bound, max_bytes, bitrate) -> None:
+    """The docstring contract is "exactly one of" — silently preferring
+    ``error_bound`` when several are passed hid caller bugs, so
+    over-specification is now a :class:`ValueError` (v1 and chunked)."""
+    given = [name for name, v in (("error_bound", error_bound),
+                                  ("max_bytes", max_bytes),
+                                  ("bitrate", bitrate)) if v is not None]
+    if len(given) > 1:
+        raise ValueError("pass at most one of error_bound/max_bytes/bitrate "
+                         f"(got {', '.join(given)})")
 
 
 def retrieve(buf_or_reader, error_bound: Optional[float] = None,
@@ -44,25 +71,31 @@ def retrieve(buf_or_reader, error_bound: Optional[float] = None,
              propagation: str = loader.SAFE,
              state: Optional[RetrievalState] = None,
              backend: Optional[str] = "numpy",
+             batch_chunks: Optional[bool] = None,
              ) -> Tuple[np.ndarray, RetrievalState]:
     """Single-pass progressive retrieval.
 
-    Exactly one of (error_bound, max_bytes, bitrate) selects the plan; None
-    of them = full-precision.  Pass ``state`` from a previous call to refine
-    incrementally (Algorithm 2) — only missing bitplanes are fetched.
-    ``backend`` selects the decode substrate ("numpy" | "jax" | "auto");
-    every backend reconstructs bit-identical arrays, and the state is
-    backend-agnostic, so successive calls may even switch backends.
+    Exactly one of (error_bound, max_bytes, bitrate) selects the plan
+    (passing several raises ValueError); None of them = full-precision.
+    Pass ``state`` from a previous call to refine incrementally
+    (Algorithm 2) — only missing bitplanes are fetched.  ``backend``
+    selects the decode substrate ("numpy" | "jax" | "auto"); every backend
+    reconstructs bit-identical arrays, and the state is backend-agnostic,
+    so successive calls may even switch backends.
 
-    Accepts v1 and v2 (chunked) archives / readers transparently.
+    Accepts v1 and v2 (chunked) archives / readers transparently; for v2,
+    ``batch_chunks`` controls equal-shape chunk batching (None/True =
+    batch when the backend has batched primitives, False = per-chunk
+    loop), which never changes the reconstruction bits.
     """
+    _check_one_target(error_bound, max_bytes, bitrate)
     if isinstance(buf_or_reader, (ArchiveReader, ChunkedArchiveReader)):
         reader = buf_or_reader
     else:
         reader = container.open_reader(buf_or_reader)
     if isinstance(reader, ChunkedArchiveReader):
         return _retrieve_chunked(reader, error_bound, max_bytes, bitrate,
-                                 propagation, state, backend)
+                                 propagation, state, backend, batch_chunks)
     bk = backends.get(backend)
     m = reader.meta
     if bitrate is not None:
@@ -89,16 +122,19 @@ def refine(state, error_bound: Optional[float] = None,
            bitrate: Optional[float] = None,
            propagation: str = loader.SAFE,
            backend: Optional[str] = "numpy",
+           batch_chunks: Optional[bool] = None,
            ) -> Tuple[np.ndarray, RetrievalState]:
     """Algorithm 2 as a first-class call: continue a previous retrieval.
 
     ``refine(state, error_bound=E)`` is ``retrieve(state.reader, ...,
     state=state)`` — only the bitplanes the tighter target adds are fetched
-    and pushed through the delta cascade.  Works on v1 and chunked states.
+    and pushed through the delta cascade.  Works on v1 and chunked states;
+    at most one of (error_bound, max_bytes, bitrate) may be given.
     """
     return retrieve(state.reader, error_bound=error_bound,
                     max_bytes=max_bytes, bitrate=bitrate,
-                    propagation=propagation, state=state, backend=backend)
+                    propagation=propagation, state=state, backend=backend,
+                    batch_chunks=batch_chunks)
 
 
 def decompress(buf: bytes, backend: Optional[str] = "numpy") -> np.ndarray:
@@ -115,10 +151,22 @@ def split_budget(total: int, weights: Sequence[int]) -> List[int]:
     ``len(weights) - 1`` bytes of budget; here every chunk gets
     ``floor(total * w / W)`` and the leftover units go to the largest
     fractional remainders first (ties: first chunk wins, deterministic).
+
+    ``total`` must be non-negative and ``weights`` non-negative with a
+    positive sum (a zero-sum vector used to produce NaN quotas and a crash
+    deep inside ``np.floor(...).astype`` — now a clear ValueError).
     """
+    if total < 0:
+        raise ValueError(f"budget total must be non-negative, got {total}")
     w = np.asarray(weights, np.float64)
     if w.size == 0:
         return []
+    if (w < 0).any():
+        raise ValueError("budget weights must be non-negative, got "
+                         f"{list(weights)}")
+    if w.sum() == 0:
+        raise ValueError("budget weights must have a positive sum; got "
+                         "all-zero weights")
     quota = total * (w / w.sum())
     base = np.floor(quota).astype(np.int64)
     short = int(total - base.sum())
@@ -128,6 +176,27 @@ def split_budget(total: int, weights: Sequence[int]) -> List[int]:
     return [int(b) for b in base]
 
 
+def refine_budgets(total: int, weights: Sequence[int],
+                   spent: Sequence[int]) -> List[int]:
+    """Cumulative per-chunk byte budgets for a refine step.
+
+    Each chunk keeps the bytes it already read (``spent``, from its
+    progressive state) and only the *remaining* budget is split
+    proportionally — re-splitting the full total from scratch (the old
+    behaviour) handed a chunk that had already consumed more than its
+    proportional share a from-scratch plan below its loaded prefix, i.e.
+    a silent no-op, starving it of further planes while the request still
+    had budget to give.  With no prior spending this reduces exactly to
+    :func:`split_budget`.
+    """
+    spent = [int(s) for s in spent]
+    used = sum(spent)
+    if total - used <= 0:
+        return spent  # budget exhausted: every plan stays at what's loaded
+    return [s + extra
+            for s, extra in zip(spent, split_budget(total - used, weights))]
+
+
 def _retrieve_chunked(reader: ChunkedArchiveReader,
                       error_bound: Optional[float],
                       max_bytes: Optional[int],
@@ -135,17 +204,24 @@ def _retrieve_chunked(reader: ChunkedArchiveReader,
                       propagation: str,
                       state: Optional[ChunkedRetrievalState],
                       backend: Optional[str] = "numpy",
+                      batch_chunks: Optional[bool] = None,
                       ) -> Tuple[np.ndarray, ChunkedRetrievalState]:
-    """Per-chunk plan + reconstruct; the global bound is the chunk max.
+    """Shape-group scheduled per-chunk plan + reconstruct; the global bound
+    is the chunk max.
 
     Error mode passes ``error_bound`` straight through (each chunk holding
     L_inf <= E makes the assembled array hold it).  Byte/bitrate budgets
     are split across chunks proportionally to element count — keeping the
     loaded bit-per-point uniform, the same objective the v1 DP optimizes —
     with the integer remainder distributed largest-fraction-first so the
-    chunk budgets sum to exactly ``max_bytes``.
+    chunk budgets sum to exactly ``max_bytes``; refines split only the
+    budget not already spent (:func:`refine_budgets`).  Equal-shape groups
+    run batched when the backend supports it (one kernel dispatch per
+    phase for the whole group); singleton groups and batch-less backends
+    take the per-chunk path.  Both paths produce bit-identical states.
     """
     m = reader.meta
+    bk = backends.get(backend)
     if state is None:
         state = ChunkedRetrievalState(reader=reader,
                                       chunk_states=[None] * len(m.chunks))
@@ -155,20 +231,69 @@ def _retrieve_chunked(reader: ChunkedArchiveReader,
     if error_bound is None and max_bytes is not None:
         sub_ns = [reader.chunk_reader(i).meta.n_elements
                   for i in range(len(m.chunks))]
-        budgets = split_budget(max_bytes, sub_ns)
+        spent = [cs.bytes_read if cs is not None else 0
+                 for cs in state.chunk_states]
+        budgets = refine_budgets(max_bytes, sub_ns, spent)
+    use_batch = batch_chunks is not False and bk.batches_decode
+    for idxs in shape_groups([cm.stop - cm.start for cm in m.chunks]):
+        if use_batch and len(idxs) > 1:
+            _retrieve_group(reader, idxs, error_bound, budgets, propagation,
+                            state, bk)
+        else:
+            for i in idxs:
+                kw = {}
+                if error_bound is not None:
+                    kw["error_bound"] = error_bound
+                elif budgets is not None:
+                    kw["max_bytes"] = budgets[i]
+                _, st = retrieve(reader.chunk_reader(i),
+                                 propagation=propagation,
+                                 state=state.chunk_states[i],
+                                 backend=backend, **kw)
+                state.chunk_states[i] = st
     out = np.empty(m.shape, np.dtype(m.dtype))
-    errs = []
     for i, cm in enumerate(m.chunks):
-        kw = {}
-        if error_bound is not None:
-            kw["error_bound"] = error_bound
-        elif budgets is not None:
-            kw["max_bytes"] = budgets[i]
-        sub, st = retrieve(reader.chunk_reader(i), propagation=propagation,
-                           state=state.chunk_states[i], backend=backend, **kw)
-        state.chunk_states[i] = st
-        out[cm.start:cm.stop] = sub
-        errs.append(st.err_bound)
-    state.err_bound = max(errs)
+        out[cm.start:cm.stop] = \
+            state.chunk_states[i].xhat.astype(np.dtype(m.dtype))
+    state.err_bound = max(cs.err_bound for cs in state.chunk_states)
     state.bytes_read = reader.bytes_read
     return out, state
+
+
+def _retrieve_group(reader: ChunkedArchiveReader, idxs: List[int],
+                    error_bound: Optional[float],
+                    budgets: Optional[List[int]], propagation: str,
+                    state: ChunkedRetrievalState,
+                    bk: backends.CodecBackend) -> None:
+    """One equal-shape chunk group through the batched retrieval steps.
+
+    Mirrors the scalar ``retrieve`` body per chunk — plan (host DP, each
+    chunk's own tables), initial state if fresh, delta load, delta push,
+    achieved-bound update — with the reconstructions and plane decodes
+    stacked across the group.  Per-chunk states and reader accounting come
+    out identical to the loop; only the dispatch count changes.
+    """
+    subs = [reader.chunk_reader(i) for i in idxs]
+    keeps = []
+    for i, sub in zip(idxs, subs):
+        sm = sub.meta
+        if error_bound is not None:
+            plan = loader.plan_error_mode(sm, error_bound, propagation)
+        elif budgets is not None:
+            plan = loader.plan_bitrate_mode(sm, budgets[i], propagation)
+        else:
+            plan = loader.plan_full(sm)
+        keeps.append(plan.keep_planes)
+    fresh = [p for p, i in enumerate(idxs) if state.chunk_states[i] is None]
+    if fresh:
+        sts = initial_state_batch([subs[p] for p in fresh], bk)
+        for p, st in zip(fresh, sts):
+            state.chunk_states[idxs[p]] = st
+    group_states = [state.chunk_states[i] for i in idxs]
+    delta_ys, any_new = load_level_deltas_batch(group_states, keeps, bk)
+    live = [p for p, new in enumerate(any_new) if new]
+    if live:
+        push_delta_batch([group_states[p] for p in live],
+                         [delta_ys[p] for p in live], bk)
+    for st in group_states:
+        update_achieved_bound(st, propagation)

@@ -12,14 +12,22 @@ backend wrote them.
 ``chunk_elems=N`` splits the array into independent slabs of ~N elements
 along axis 0 and frames the per-slab archives in a v2 container
 (``container.write_chunked_archive``).  Chunking bounds compression working
-memory, lets equal-shaped chunks share jit cache entries, and is the unit
-of future vmapped/sharded encoding; v1 (unchunked) archives remain the
-default and are always readable.
+memory and is the unit of batched execution: chunks are scheduled in
+*shape groups* (every interior slab has the same shape; only the ragged
+tail differs), and when the backend ships batched primitives
+(``decorrelate_batch`` / ``encode_level_batch``), each group runs the
+whole stack through ONE vmapped kernel dispatch per (level, dim) phase and
+one per level for the bitplane pack — instead of one per chunk each.
+Groups are capped at ``MAX_BATCH_CHUNKS`` chunks per stack, so batching
+keeps the memory bound chunking exists to provide.  Archives are
+byte-identical either way (``batch_chunks=False`` forces the per-chunk
+loop; the parity tests pin the equivalence).  v1 (unchunked) archives
+remain the default and are always readable.
 """
 from __future__ import annotations
 
 import zlib
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,14 +37,18 @@ from . import backends
 
 def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
              relative: bool = False, backend: Optional[str] = "numpy",
-             chunk_elems: Optional[int] = None) -> bytes:
+             chunk_elems: Optional[int] = None,
+             batch_chunks: Optional[bool] = None) -> bytes:
     """Compress ``x`` with point-wise error bound ``eb``.
 
     ``relative=True`` interprets eb as a fraction of the value range.
     ``backend`` is "numpy" | "jax" | "auto"/None (jax on TPU where the
     kernels compile, numpy elsewhere); both emit identical bytes.
     ``chunk_elems`` switches to the chunked v2 container with
-    ~chunk_elems-sized independent slabs.
+    ~chunk_elems-sized independent slabs.  ``batch_chunks`` controls the
+    equal-shape chunk batching (None/True = batch when the backend has
+    batched primitives, False = always loop per chunk); the archive bytes
+    do not depend on the choice.
     """
     x = np.asarray(x)
     if relative:
@@ -47,7 +59,17 @@ def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
     if chunk_elems is None:
         return _compress_single(x, eb, interp, bk)
     bounds = chunk_bounds(x.shape, chunk_elems)
-    bufs = [_compress_single(x[a:b], eb, interp, bk) for a, b in bounds]
+    use_batch = batch_chunks is not False and bk.batches_encode
+    bufs: List[Optional[bytes]] = [None] * len(bounds)
+    for idxs in shape_groups([b - a for a, b in bounds]):
+        if use_batch and len(idxs) > 1:
+            xs = np.stack([x[bounds[i][0]: bounds[i][1]] for i in idxs])
+            for i, buf in zip(idxs, _compress_batch(xs, eb, interp, bk)):
+                bufs[i] = buf
+        else:
+            for i in idxs:
+                a, b = bounds[i]
+                bufs[i] = _compress_single(x[a:b], eb, interp, bk)
     return container.write_chunked_archive(x.shape, x.dtype, eb, interp,
                                            bounds, bufs)
 
@@ -65,6 +87,37 @@ def chunk_bounds(shape, chunk_elems: int) -> List[Tuple[int, int]]:
     row_elems = int(np.prod(shape[1:])) if len(shape) > 1 else 1
     rows = max(1, chunk_elems // max(row_elems, 1))
     return [(a, min(a + rows, shape[0])) for a in range(0, shape[0], rows)]
+
+
+#: chunks stacked per batched dispatch.  Chunking exists to bound codec
+#: working memory, and a batch materializes its whole group as one array —
+#: so groups are split into runs of at most this many chunks: memory stays
+#: O(MAX_BATCH_CHUNKS x chunk), while the dispatch count still drops by up
+#: to that factor.
+MAX_BATCH_CHUNKS = 16
+
+
+def shape_groups(row_counts: Sequence[int],
+                 max_group: Optional[int] = MAX_BATCH_CHUNKS,
+                 ) -> List[List[int]]:
+    """Chunk indices grouped by identical row count (= identical slab shape).
+
+    ``chunk_bounds`` makes every interior slab the same height, so this is
+    typically one big group plus a singleton ragged tail; grouping by the
+    actual count keeps the scheduler correct for any bounds list.  Groups
+    larger than ``max_group`` are split into consecutive runs so a batched
+    executor never stacks more than that many chunks at once (None = no
+    cap).  Groups keep first-occurrence order and indices stay ascending,
+    so iteration order — and thus every side effect, e.g. reader byte
+    accounting — is deterministic.
+    """
+    groups: dict = {}
+    for i, rc in enumerate(row_counts):
+        groups.setdefault(rc, []).append(i)
+    if max_group is None:
+        return list(groups.values())
+    return [g[a: a + max_group] for g in groups.values()
+            for a in range(0, len(g), max_group)]
 
 
 def _compress_single(x: np.ndarray, eb: float, interp: str,
@@ -86,6 +139,40 @@ def _compress_single(x: np.ndarray, eb: float, interp: str,
         esc_blobs.append(_pack_escapes(escs[li]))
     return container.write_archive(shape, dtype, eb, interp, L, anchors,
                                    level_blobs, level_meta, esc_blobs)
+
+
+def _compress_batch(xs: np.ndarray, eb: float, interp: str,
+                    bk: backends.CodecBackend) -> List[bytes]:
+    """B equal-shape chunks (stacked on axis 0) -> B v1 archives.
+
+    Exactly ``_compress_single`` per chunk, but the sweep and the per-level
+    pack each run ONCE for the whole stack through the backend's batched
+    primitives.  Per-chunk metadata (nbits, delta tables, escapes) is still
+    derived from that chunk's own streams, so the archives are
+    byte-identical to the per-chunk loop.
+    """
+    B = xs.shape[0]
+    shape, dtype = xs.shape[1:], xs.dtype
+    L = interpolation.num_levels(shape)
+    results = bk.decorrelate_batch(xs.astype(np.float64), eb, interp)
+
+    blobs_pc: List[List[List[bytes]]] = [[] for _ in range(B)]
+    meta_pc: List[List[dict]] = [[] for _ in range(B)]
+    escb_pc: List[List[bytes]] = [[] for _ in range(B)]
+    for li in range(L):
+        q2 = np.stack([results[b][1][li] for b in range(B)])
+        nb2 = negabinary.to_negabinary(q2)
+        enc = bk.encode_level_batch(q2, nb2)
+        for b in range(B):
+            blobs, nbits = enc[b]
+            delta = negabinary.truncation_loss_table(nb2[b], nbits, eb)
+            blobs_pc[b].append(blobs)
+            meta_pc[b].append(dict(level=L - li, n=int(q2.shape[1]),
+                                   nbits=nbits, delta_table=delta.tolist()))
+            escb_pc[b].append(_pack_escapes(results[b][2][li]))
+    return [container.write_archive(shape, dtype, eb, interp, L,
+                                    results[b][3], blobs_pc[b], meta_pc[b],
+                                    escb_pc[b]) for b in range(B)]
 
 
 def _pack_escapes(phase_escs) -> bytes:

@@ -143,3 +143,121 @@ def update_achieved_bound(state: RetrievalState, propagation: str) -> None:
         float(errs[li][lv.nbits - state.planes_loaded[li]])
         for li, lv in enumerate(m.levels))
     state.bytes_read = state.reader.bytes_read
+
+
+# ------------------------------------------------- batched (chunk groups)
+#
+# The three steps above, over a GROUP of equal-shape chunks at once: the
+# scheduler in ``decode._retrieve_group`` stacks the per-chunk inputs and
+# the backend's ``*_batch`` primitives run one kernel dispatch per phase /
+# per (level, prefix) group instead of one per chunk.  Everything that is
+# per-chunk accounting — reader fetches, planes_loaded, nb_partial,
+# err_bound — is still computed per chunk, so the resulting states are
+# indistinguishable from the per-chunk loop (bit-identical xhat included;
+# the batch axis is an execution detail).  Backends without batched slots
+# fall back to the scalar loop transparently.
+
+def initial_state_batch(readers: List[ArchiveReader],
+                        bk: CodecBackend) -> List[RetrievalState]:
+    """Coarsest approximation for B equal-shape chunks: one batched
+    reconstruct builds every initial ``xhat``."""
+    if bk.reconstruct_batch is None or len(readers) == 1:
+        return [initial_state(r, bk) for r in readers]
+    m0 = readers[0].meta
+    anchors = np.stack([r.anchors() for r in readers])
+    yhat = [np.zeros((len(readers), lv.n), np.float64) for lv in m0.levels]
+    overrides = [[_unpack_escapes(r.escapes(li))
+                  for li in range(len(r.meta.levels))] for r in readers]
+    xhat = bk.reconstruct_batch(m0.shape, m0.interp, anchors, yhat,
+                                overrides=overrides)
+    states = []
+    for b, r in enumerate(readers):
+        m = r.meta
+        full_err = m.eb + sum(
+            float(lv.delta_table[lv.nbits]) *
+            loader._prop_factor(m, lv.level, loader.SAFE)
+            for lv in m.levels)
+        states.append(RetrievalState(
+            reader=r, planes_loaded=[0] * len(m.levels),
+            nb_partial=[np.zeros(lv.n, np.uint32) for lv in m.levels],
+            esc_idx=[o[0] for o in overrides[b]],
+            xhat=xhat[b], err_bound=full_err, bytes_read=r.bytes_read))
+    return states
+
+
+def load_level_deltas_batch(states: List[RetrievalState],
+                            keep_planes_list: List[List[int]],
+                            bk: CodecBackend,
+                            ) -> Tuple[List[List[np.ndarray]], List[bool]]:
+    """Batched :func:`load_level_deltas` over B equal-shape chunk states.
+
+    Plane fetches stay per chunk (each chunk's reader counts its own
+    bytes), but the decode itself is grouped by (nbits, loaded-prefix) —
+    the static configuration of the unpack kernel — and each group runs as
+    one batched ``decode_level`` dispatch.  Returns per-chunk delta streams
+    and per-chunk any-new flags, exactly like B scalar calls.
+    """
+    m0 = states[0].reader.meta
+    B = len(states)
+    delta_ys: List[List[Optional[np.ndarray]]] = \
+        [[None] * len(m0.levels) for _ in range(B)]
+    any_new = [False] * B
+    for li, lv0 in enumerate(m0.levels):
+        jobs: List[Tuple[int, int]] = []     # (chunk pos, want)
+        for b, st in enumerate(states):
+            have = st.planes_loaded[li]
+            want = max(have, keep_planes_list[b][li])
+            if want > have:
+                jobs.append((b, want))
+            else:
+                delta_ys[b][li] = np.zeros(lv0.n, np.float64)
+        groups: dict = {}                    # (nbits, want) -> [chunk pos]
+        for b, want in jobs:
+            key = (states[b].reader.meta.levels[li].nbits, want)
+            groups.setdefault(key, []).append(b)
+        for (nbits, want), bs in groups.items():
+            blob_lists = []
+            for b in bs:
+                st = states[b]
+                blobs: List[Optional[bytes]] = [None] * nbits
+                for i in range(want):
+                    blobs[i] = st.reader.plane(li, i)
+                blob_lists.append(blobs)
+            if bk.decode_level_batch is not None and len(bs) > 1:
+                nbs = bk.decode_level_batch(blob_lists, nbits, lv0.n)
+            else:
+                nbs = [bk.decode_level(bl, nbits, lv0.n)
+                       for bl in blob_lists]
+            for b, nb_new in zip(bs, nbs):
+                st = states[b]
+                dq = negabinary.from_negabinary(nb_new) - \
+                    negabinary.from_negabinary(st.nb_partial[li])
+                delta_ys[b][li] = dq.astype(np.float64) * \
+                    2.0 * st.reader.meta.eb
+                st.nb_partial[li] = nb_new
+                st.planes_loaded[li] = want
+                any_new[b] = True
+    return delta_ys, any_new
+
+
+def push_delta_batch(states: List[RetrievalState],
+                     delta_ys: List[List[np.ndarray]],
+                     bk: CodecBackend) -> None:
+    """Batched :func:`push_delta`: one zero-anchor cascade reconstructs
+    every chunk's delta in a single stack (escape deltas pinned 0 per
+    chunk, as in the scalar path)."""
+    if bk.reconstruct_batch is None or len(states) == 1:
+        for st, dy in zip(states, delta_ys):
+            push_delta(st, dy, bk)
+        return
+    m0 = states[0].reader.meta
+    B = len(states)
+    zero_anchors = np.zeros((B,) + tuple(m0.anchors_shape), np.float64)
+    yhat = [np.stack([delta_ys[b][li] for b in range(B)])
+            for li in range(len(m0.levels))]
+    overrides = [[(idx, np.zeros(idx.size)) for idx in st.esc_idx]
+                 for st in states]
+    delta = bk.reconstruct_batch(m0.shape, m0.interp, zero_anchors, yhat,
+                                 overrides=overrides)
+    for b, st in enumerate(states):
+        st.xhat = st.xhat + delta[b]

@@ -22,6 +22,11 @@ All four are wired into ``core.jax_backend`` behind the
 ``refine`` / ``decompress`` with ``backend="jax"``; blobs, bins, and
 reconstructions are byte/bit-identical to the numpy reference pipeline
 (enforced by tests/test_backend_parity.py and tests/test_decode_parity.py).
+Each wrapper also ships a ``jax.vmap``-ed ``*_batch`` entry point over
+stacks of equal-shaped problems — the chunk-batch engine's unit: B chunks,
+one launch — and every launch is counted by ``kernels.dispatch`` (the
+batched-vs-looped reduction is asserted in tests and recorded by
+``benchmarks/backend_speed.py``).
 
   attention       — flash-attention (GQA) forward for the LM serving/training
                     stack: per-(batch, head, q-tile) programs stream kv tiles

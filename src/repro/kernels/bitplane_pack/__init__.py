@@ -1,5 +1,7 @@
-from .ops import bitplane_pack, bitplane_unpack
+from .ops import (bitplane_pack, bitplane_pack_batch, bitplane_unpack,
+                  bitplane_unpack_batch)
 from .ref import bitplane_pack_ref, bitplane_unpack_ref, unpack_planes_ref
 
-__all__ = ["bitplane_pack", "bitplane_unpack", "bitplane_pack_ref",
+__all__ = ["bitplane_pack", "bitplane_pack_batch", "bitplane_unpack",
+           "bitplane_unpack_batch", "bitplane_pack_ref",
            "bitplane_unpack_ref", "unpack_planes_ref"]

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .. import dispatch
 from .kernel import (GROUP, ROWS_B, bitplane_pack_pallas,
                      bitplane_unpack_pallas)
 
@@ -32,7 +33,31 @@ def bitplane_pack(q, *, interpret: bool | None = None):
     pr, pc = (-R) % ROWS_B, (-C) % GROUP
     if pr or pc:
         q = jnp.pad(q, ((0, pr), (0, pc)))
+    dispatch.record("bitplane_pack")
     packed = bitplane_pack_pallas(q, interpret=interpret)
+    return packed, n
+
+
+def bitplane_pack_batch(q, *, interpret: bool | None = None):
+    """(B, n) int32 stacked 1-D level streams -> ((B, 32, R, W) packed, n).
+
+    Each batch row gets the 1-D wrapper's layout — pad at the END of its
+    flat stream, so ``blobs_from_packed`` per chunk sees the same valid
+    prefix as an unbatched call — and the whole stack runs as ONE
+    ``jax.vmap``-ed kernel launch instead of B.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    q = jnp.asarray(q, jnp.int32)
+    B, n = q.shape
+    C = 128 * GROUP
+    R = -(-n // C)
+    q = jnp.pad(q, ((0, 0), (0, R * C - n))).reshape(B, R, C)
+    pr = (-R) % ROWS_B
+    if pr:
+        q = jnp.pad(q, ((0, 0), (0, pr), (0, 0)))
+    dispatch.record("bitplane_pack", batch=B)
+    packed = jax.vmap(lambda a: bitplane_pack_pallas(a, interpret=interpret))(q)
     return packed, n
 
 
@@ -61,8 +86,40 @@ def bitplane_unpack(plane_words, n: int, *, low_zero: int = 0,
     if pad:
         pw = jnp.pad(pw, ((0, 0), (0, pad)))
     pw = pw.reshape(32, R, _UNPACK_W)
+    dispatch.record("bitplane_unpack")
     q, nb = bitplane_unpack_pallas(pw, low_zero=low_zero,
                                    interpret=interpret)
     if with_nb:
         return q.reshape(-1)[:n], nb.reshape(-1)[:n]
     return q.reshape(-1)[:n]
+
+
+def bitplane_unpack_batch(plane_words, n: int, *, low_zero: int = 0,
+                          with_nb: bool = False,
+                          interpret: bool | None = None):
+    """(B, 32, NW) stacked per-plane word streams -> (B, n) int32 bins.
+
+    The batched twin of ``bitplane_unpack`` for equal-(n, low_zero) chunk
+    groups: one ``jax.vmap``-ed launch decodes all B streams, each padded
+    exactly like a lone call, so per-chunk outputs are bit-identical.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pw = jnp.asarray(plane_words, jnp.uint32)
+    B, P, NW = pw.shape
+    assert P == 32, "expect one row per negabinary digit"
+    need = -(-max(n, 1) // (GROUP * _UNPACK_W))
+    R = -(-need // ROWS_B) * ROWS_B
+    pad = R * _UNPACK_W - NW
+    if pad:
+        pw = jnp.pad(pw, ((0, 0), (0, 0), (0, pad)))
+    pw = pw.reshape(B, 32, R, _UNPACK_W)
+    dispatch.record("bitplane_unpack", batch=B)
+    q, nb = jax.vmap(
+        lambda a: bitplane_unpack_pallas(a, low_zero=low_zero,
+                                         interpret=interpret))(pw)
+    q = q.reshape(B, -1)[:, :n]
+    nb = nb.reshape(B, -1)[:, :n]
+    if with_nb:
+        return q, nb
+    return q

@@ -1,0 +1,65 @@
+"""Kernel-dispatch accounting for the batched chunk engine.
+
+Every public kernel wrapper (``interp_quant`` / ``interp_recon`` /
+``bitplane_pack`` / ``bitplane_unpack`` and their ``*_batch`` twins)
+records exactly one launch per call: a ``jax.vmap``-ed call is ONE launch
+whose batch axis becomes an extra grid dimension, which is the whole point
+of batching equal-shaped chunks — B chunks stop costing B dispatches.
+
+The chunk-batching parity tests and ``benchmarks/backend_speed.py`` use
+:func:`measure` to assert the batched codec path issues strictly fewer
+dispatches than the per-chunk loop (< chunks x levels for the per-level
+pack/unpack ops).  Counting happens at the Python wrapper layer, so it is
+exact in both interpret mode (CPU) and compiled Mosaic (TPU): one wrapper
+call = one ``pallas_call`` execution.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from contextlib import contextmanager
+from typing import Dict, Iterator
+
+#: cumulative launches per kernel name since process start (or reset())
+_counts: Counter = Counter()
+#: cumulative batch elements covered per kernel name (launches weighted by
+#: their batch size; equals _counts for unbatched calls)
+_elements: Counter = Counter()
+
+
+def record(name: str, batch: int = 1) -> None:
+    """Count one kernel launch covering ``batch`` chunk-sized problems."""
+    _counts[name] += 1
+    _elements[name] += batch
+
+
+def counts() -> Dict[str, int]:
+    """Launches per kernel since start/reset (copy)."""
+    return dict(_counts)
+
+
+def total() -> int:
+    """Total launches across all kernels since start/reset."""
+    return sum(_counts.values())
+
+
+def reset() -> None:
+    _counts.clear()
+    _elements.clear()
+
+
+@contextmanager
+def measure() -> Iterator[Dict[str, int]]:
+    """Collect the launches recorded inside the ``with`` block.
+
+    Yields a dict that is filled in when the block exits:
+    ``{kernel_name: launches}`` (kernels not dispatched are absent, so
+    ``sum(d.values())`` is the block's total dispatch count).  Nesting and
+    interleaving with the global counters are safe — the block only diffs
+    snapshots.
+    """
+    before = Counter(_counts)
+    out: Dict[str, int] = {}
+    try:
+        yield out
+    finally:
+        out.update((_counts - before))

@@ -1,4 +1,5 @@
-from .ops import interp_quant
+from .ops import interp_quant, interp_quant_batch
 from .ref import interp_quant_ref, predict_ref
 
-__all__ = ["interp_quant", "interp_quant_ref", "predict_ref"]
+__all__ = ["interp_quant", "interp_quant_batch", "interp_quant_ref",
+           "predict_ref"]

@@ -1,10 +1,11 @@
-"""Public jit'd wrapper for the fused interpolate+quantize kernel."""
+"""Public jit'd wrappers for the fused interpolate+quantize kernel."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import dispatch
 from .kernel import ROWS_B, interp_quant_pallas
 
 
@@ -30,6 +31,32 @@ def interp_quant(x, xhat, *, s: int, eb: float, interp: str = "cubic",
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
         xhat = jnp.pad(xhat, ((0, pad), (0, 0)))
+    dispatch.record("interp_quant")
     q, pred = interp_quant_pallas(x, xhat, s=s, eb=eb, interp=interp,
                                   interpret=interpret)
     return q[:R], pred[:R]
+
+
+def interp_quant_batch(x, xhat, *, s: int, eb: float, interp: str = "cubic",
+                       interpret: bool | None = None):
+    """Batched phase sweep over stacked equal-shape chunks: (B, R, C).
+
+    ``jax.vmap`` turns the batch axis into an extra grid dimension of ONE
+    kernel launch, so B chunks cost a single dispatch instead of B.  Each
+    batch element is padded/computed exactly like a lone ``interp_quant``
+    call, so per-chunk results are bit-identical to the unbatched path.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    x = jnp.asarray(x)
+    xhat = jnp.asarray(xhat, x.dtype)
+    B, R, C = x.shape
+    pad = (-R) % ROWS_B
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        xhat = jnp.pad(xhat, ((0, 0), (0, pad), (0, 0)))
+    dispatch.record("interp_quant", batch=B)
+    q, pred = jax.vmap(
+        lambda a, b: interp_quant_pallas(a, b, s=s, eb=eb, interp=interp,
+                                         interpret=interpret))(x, xhat)
+    return q[:, :R], pred[:, :R]

@@ -1,4 +1,4 @@
-from .ops import interp_recon
+from .ops import interp_recon, interp_recon_batch
 from .ref import interp_recon_ref
 
-__all__ = ["interp_recon", "interp_recon_ref"]
+__all__ = ["interp_recon", "interp_recon_batch", "interp_recon_ref"]

@@ -1,9 +1,10 @@
-"""Public jit'd wrapper for the fused interpolate+add-residual kernel."""
+"""Public jit'd wrappers for the fused interpolate+add-residual kernel."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from .. import dispatch
 from .kernel import ROWS_B, interp_recon_pallas
 
 
@@ -30,6 +31,32 @@ def interp_recon(xhat, res, *, s: int, interp: str = "cubic",
     if pad:
         xhat = jnp.pad(xhat, ((0, pad), (0, 0)))
         res = jnp.pad(res, ((0, pad), (0, 0)))
+    dispatch.record("interp_recon")
     out = interp_recon_pallas(xhat, res, s=s, interp=interp,
                               interpret=interpret)
     return out[:R]
+
+
+def interp_recon_batch(xhat, res, *, s: int, interp: str = "cubic",
+                       interpret: bool | None = None):
+    """Batched decode phase sweep over stacked equal-shape chunks: (B, R, C).
+
+    ``jax.vmap`` makes the batch axis an extra grid dimension of ONE kernel
+    launch — B chunks, one dispatch.  Each batch element is padded/computed
+    exactly like a lone ``interp_recon`` call, so per-chunk reconstructions
+    are bit-identical to the unbatched path.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    xhat = jnp.asarray(xhat)
+    res = jnp.asarray(res, xhat.dtype)
+    B, R, C = xhat.shape
+    pad = (-R) % ROWS_B
+    if pad:
+        xhat = jnp.pad(xhat, ((0, 0), (0, pad), (0, 0)))
+        res = jnp.pad(res, ((0, 0), (0, pad), (0, 0)))
+    dispatch.record("interp_recon", batch=B)
+    out = jax.vmap(lambda a, b: interp_recon_pallas(a, b, s=s, interp=interp,
+                                                    interpret=interpret))(
+        xhat, res)
+    return out[:, :R]

@@ -8,10 +8,10 @@ import pytest
 
 from _fields import smooth_field
 from repro.core import (CUBIC, ChunkedRetrievalState, chunk_bounds, compress,
-                        decompress, metrics, open_archive, retrieve)
+                        decompress, metrics, open_archive, refine, retrieve)
 from repro.core.container import (MAGIC, MAGIC2, ArchiveReader,
                                   ChunkedArchiveReader, parse_meta)
-from repro.core.pipeline import split_budget
+from repro.core.pipeline import refine_budgets, split_budget
 
 
 # ------------------------------------------------------------ framing
@@ -62,6 +62,82 @@ def test_split_budget_proportional_and_deterministic():
     assert split_budget(10, []) == []
     # floor would give [0, 0, 0] and drop everything
     assert sum(split_budget(2, [10 ** 9, 10 ** 9, 10 ** 9])) == 2
+
+
+def test_split_budget_rejects_degenerate_inputs():
+    """Regression: a zero-sum weight vector used to produce NaN quotas and
+    crash inside np.floor(...).astype; negative totals fell through to
+    nonsense allocations.  Both are clear ValueErrors now."""
+    with pytest.raises(ValueError, match="positive sum"):
+        split_budget(100, [0, 0, 0])
+    with pytest.raises(ValueError, match="non-negative"):
+        split_budget(-5, [1, 2])
+    with pytest.raises(ValueError, match="non-negative"):
+        split_budget(10, [3, -1])
+    assert split_budget(10, []) == []            # empty stays legal
+    assert split_budget(7, [0, 1]) == [0, 7]     # zero weights are fine
+
+
+def test_retrieve_rejects_overspecified_targets():
+    """Regression: the docstring says "exactly one of" error_bound /
+    max_bytes / bitrate, but retrieve silently preferred error_bound when
+    several were passed.  Over-specification is a ValueError on v1 and
+    chunked archives and on refine."""
+    x = smooth_field((40, 30))
+    v1 = compress(x, 1e-5)
+    v2 = compress(x, 1e-5, chunk_elems=300)
+    for buf in (v1, v2):
+        with pytest.raises(ValueError, match="error_bound, max_bytes"):
+            retrieve(buf, error_bound=1e-3, max_bytes=1000)
+        with pytest.raises(ValueError, match="bitrate"):
+            retrieve(buf, max_bytes=1000, bitrate=2.0)
+        with pytest.raises(ValueError, match="at most one"):
+            retrieve(buf, error_bound=1e-3, max_bytes=1000, bitrate=2.0)
+        # single targets (and none at all) still work
+        retrieve(buf, error_bound=1e-3)
+        retrieve(buf, max_bytes=1000)
+        retrieve(buf, bitrate=2.0)
+        retrieve(buf)
+    _, st = retrieve(v2, error_bound=1e-2)
+    with pytest.raises(ValueError, match="at most one"):
+        refine(st, error_bound=1e-4, bitrate=1.0)
+
+
+def test_refine_budgets_subtracts_spent_bytes():
+    """Unit regression for the refine re-split: chunks keep what they read
+    and only the remainder is distributed."""
+    # fresh state: identical to a plain split
+    assert refine_budgets(100, [1, 1], [0, 0]) == split_budget(100, [1, 1])
+    # chunk 0 already read 150 of a 300 refine: it still gets half of the
+    # remaining 140 on top — the old full re-split gave it 150, a no-op
+    assert refine_budgets(300, [1, 1], [150, 10]) == [220, 80]
+    # budget already exhausted: plans stay pinned at what is loaded
+    assert refine_budgets(100, [1, 1], [80, 40]) == [80, 40]
+    # proportionality applies to the remainder, not the total
+    assert refine_budgets(260, [3, 1], [100, 100]) == [145, 115]
+
+
+def test_chunked_refine_byte_budget_feeds_overspent_chunks():
+    """End-to-end regression: chunk 0 is far less compressible, so an
+    error-bound retrieval loads it well past its element-proportional
+    share.  A byte-budget refine must still deliver NEW planes to chunk 0
+    instead of handing it a from-scratch plan below its loaded prefix."""
+    rng = np.random.default_rng(5)
+    x = smooth_field((60, 33), 1)
+    x[:30] += 10 * rng.standard_normal((30, 33))  # rough half
+    buf = compress(x, 1e-7, chunk_elems=30 * 33)  # 2 chunks, equal elements
+    out, st = retrieve(open_archive(buf), error_bound=1e-5)
+    spent = [cs.bytes_read for cs in st.chunk_states]
+    grow = 800
+    # precondition for the old bug: re-splitting the full cumulative budget
+    # 50/50 would hand chunk 0 LESS than it already read — a silent no-op
+    assert spent[0] > (sum(spent) + grow) // 2
+    out, st = refine(st, max_bytes=sum(spent) + grow)
+    new = [cs.bytes_read - s for cs, s in zip(st.chunk_states, spent)]
+    # the fix splits only the *new* budget: both chunks make progress
+    assert new[0] > 0 and new[1] > 0
+    # and the refine stays within the cumulative request
+    assert st.bytes_read <= sum(spent) + grow
 
 
 def test_chunked_max_bytes_budget_fully_allocated():
