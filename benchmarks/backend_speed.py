@@ -4,9 +4,13 @@ Reports compress AND decode throughput for both backends on a >=2^20-element
 field (the acceptance smoke case), plus the chunked variant in BOTH
 execution modes — the per-chunk loop and the batched shape-group engine
 (``batch_chunks``), whose ``jax.vmap``-ed dispatches are the roadmap's
-equal-shape chunk batching.  Kernel dispatch counts for both modes come
-from ``repro.kernels.dispatch``, so the batched-vs-looped launch-count
-reduction is a recorded, trendable number, not a claim.  Decode is measured
+equal-shape chunk batching, plus — whenever more than one device is
+visible — a sharded entry (``shard="auto"``) that runs the chunk grid
+data-parallel over the local device mesh and records sharded vs
+single-device MB/s and per-device launch fan-out.  Kernel dispatch counts
+for all modes come from ``repro.kernels.dispatch``, so the
+batched-vs-looped launch-count reduction (and the sharded fan-out) is a
+recorded, trendable number, not a claim.  Decode is measured
 as the two retrieval operations the paper optimizes (§5): a full-precision
 ``decompress`` and one incremental ``refine`` step (Algorithm 2's delta
 cascade) on top of a coarse first retrieval.
@@ -144,6 +148,70 @@ def _chunk_batch_rows(x: np.ndarray, eb: float, rows, checks,
                    bat_d < loop_d))
 
 
+def _sharded_rows(x: np.ndarray, eb: float, rows, checks,
+                  comp_records, dec_records):
+    """Sharded-vs-single-device entry: both codec directions over the
+    chunk grid on a mesh of every local device (run the benchmark under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 for a forced CPU
+    mesh).  Byte/bit parity is asserted; on CPU the MB/s delta measures
+    shard_map + interpret-mode overhead, on real hardware it measures the
+    scale-out.  Skipped (one informational record) on single-device hosts.
+    """
+    import jax
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        comp_records.append(dict(case="sharded", mode="skipped",
+                                 op="compress", devices=n_dev))
+        print("backend_speed/sharded: single device visible, skipped "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return
+    n_chunks = len(chunk_bounds(x.shape, CHUNK_ELEMS))
+    bufs, outs = {}, {}
+    for mode, shard in (("single", None), ("sharded", "auto")):
+        compress(x, eb, backend="jax", chunk_elems=CHUNK_ELEMS,
+                 shard=shard)  # warm jit caches out of the timing
+        with dispatch.measure() as d, dispatch.measure_devices() as dd:
+            bufs[mode], dt = timed(compress, x, eb, repeat=1, backend="jax",
+                                   chunk_elems=CHUNK_ELEMS, shard=shard)
+        mbps = x.nbytes / dt / 1e6
+        rows.append(csv_row(f"backend_speed/sharded/{mode}/compress",
+                            dt * 1e6, f"MBps={mbps:.1f};devices="
+                            f"{n_dev if shard else 1};"
+                            f"dispatches={sum(d.values())};"
+                            f"device_launches={sum(dd.values())}"))
+        print(rows[-1])
+        comp_records.append(dict(case="sharded", mode=mode, op="compress",
+                                 seconds=dt, mbps=mbps, chunks=n_chunks,
+                                 devices=n_dev if shard else 1,
+                                 dispatches=sum(d.values()),
+                                 device_launches=sum(dd.values()),
+                                 dispatches_by_kernel=d))
+
+        retrieve(open_archive(bufs[mode]), error_bound=REFINE_COARSE * eb,
+                 backend="jax", shard=shard)  # warm
+        with dispatch.measure() as d, dispatch.measure_devices() as dd:
+            (outs[mode], _), dt = timed(retrieve, open_archive(bufs[mode]),
+                                        error_bound=REFINE_COARSE * eb,
+                                        repeat=1, backend="jax", shard=shard)
+        mbps = x.nbytes / dt / 1e6
+        rows.append(csv_row(f"backend_speed/sharded/{mode}/retrieve",
+                            dt * 1e6, f"MBps={mbps:.1f};devices="
+                            f"{n_dev if shard else 1};"
+                            f"dispatches={sum(d.values())};"
+                            f"device_launches={sum(dd.values())}"))
+        print(rows[-1])
+        dec_records.append(dict(case="sharded", mode=mode, op="retrieve",
+                                seconds=dt, mbps=mbps, chunks=n_chunks,
+                                devices=n_dev if shard else 1,
+                                dispatches=sum(d.values()),
+                                device_launches=sum(dd.values()),
+                                dispatches_by_kernel=d))
+    checks.append(("sharded_parity_bytes", "sharded", "compress",
+                   bufs["single"] == bufs["sharded"]))
+    checks.append(("sharded_parity_bits", "sharded", "retrieve",
+                   bool(np.array_equal(outs["single"], outs["sharded"]))))
+
+
 def run(scale=None, n: int = 1 << 20, smoke: bool = True,
         json_out: str = JSON_OUT, json_out_compress: str = JSON_OUT_COMPRESS):
     rows, checks, records, comp_records = [], [], [], []
@@ -185,6 +253,9 @@ def run(scale=None, n: int = 1 << 20, smoke: bool = True,
 
     # chunk-batch speed entry: batched vs looped dispatch counts + MB/s
     _chunk_batch_rows(x, eb, rows, checks, comp_records, records)
+
+    # sharded entry: chunk grid over a device mesh vs single device
+    _sharded_rows(x, eb, rows, checks, comp_records, records)
 
     if not smoke:
         y = _field(1 << 22)

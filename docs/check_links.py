@@ -1,0 +1,61 @@
+"""Relative-link checker for the docs suite (CI's docs lane).
+
+Scans markdown files for inline links/images ``[text](target)`` and fails
+if a *relative* target does not exist on disk (anchors are stripped;
+absolute URLs and mailto are ignored).  Anchor-only links (``#section``)
+are accepted as long as the file itself exists.
+
+Usage:
+  python docs/check_links.py [file-or-dir ...]      # default: docs/ README.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+#: inline markdown link/image: [text](target) — target up to the first ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP = ("http://", "https://", "mailto:")
+
+
+def iter_md(paths):
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        elif p.suffix == ".md":
+            yield p
+
+
+def check_file(md: Path):
+    """Yield (line_no, target) for every dead relative link in ``md``."""
+    for ln, line in enumerate(md.read_text().splitlines(), 1):
+        for target in _LINK.findall(line):
+            if target.startswith(_SKIP):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:          # pure anchor into this file
+                continue
+            if not (md.parent / path).exists():
+                yield ln, target
+
+
+def main(argv) -> int:
+    roots = argv or ["docs", "README.md"]
+    dead, checked = [], 0
+    for md in iter_md(roots):
+        checked += 1
+        dead += [(md, ln, t) for ln, t in check_file(md)]
+    for md, ln, t in dead:
+        print(f"DEAD LINK {md}:{ln}: {t}")
+    print(f"checked {checked} markdown file(s), "
+          f"{len(dead)} dead relative link(s)")
+    if not checked:
+        print("no markdown files found — wrong working directory?")
+        return 2
+    return 1 if dead else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

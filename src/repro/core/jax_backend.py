@@ -45,7 +45,13 @@ Every primitive also has a ``*_batch`` twin over stacks of equal-shaped
 chunk problems (the unit the v2 shape-group scheduler feeds): the stack
 runs through the ``jax.vmap``-ed kernel entry points, so B chunks cost ONE
 dispatch per phase / per level instead of B, with per-chunk outputs
-bit-identical to B scalar calls.
+bit-identical to B scalar calls.  On top of that, every ``*_batch`` twin
+has a ``*_sharded`` twin (same stack, plus a 1-D device mesh): the stack
+axis is split across the mesh via ``parallel.codec_mesh`` and every device
+runs the vmapped kernel on its local chunks — data-parallel, collective-
+free, and still bit-identical (``compress``/``retrieve``/``refine``/
+``decompress`` expose this as ``shard="auto"`` / an explicit mesh; see
+``docs/architecture.md``).
 """
 from __future__ import annotations
 
@@ -145,7 +151,8 @@ def decorrelate(x: np.ndarray, eb: float, interp: str,
 
 
 def decorrelate_batch(xs: np.ndarray, eb: float, interp: str,
-                      interpret: bool | None = None) -> List[Tuple]:
+                      interpret: bool | None = None,
+                      mesh=None) -> List[Tuple]:
     """Batched twin of :func:`decorrelate` over stacked equal-shape chunks.
 
     ``xs`` is (B, *chunk_shape); returns a list of B per-chunk
@@ -156,10 +163,24 @@ def decorrelate_batch(xs: np.ndarray, eb: float, interp: str,
     bottleneck cuSZ-i identifies for multi-level interpolation on GPUs);
     the host-side escape requantization runs vectorized over the batch,
     with per-chunk record extraction only.
+
+    With ``mesh`` (a 1-D codec mesh), each phase dispatch is additionally
+    ``shard_map``-ed: the stack axis is split across the mesh devices and
+    every device runs the vmapped kernel on its local chunks
+    (:func:`decorrelate_sharded` is the registry-facing alias).  Outputs
+    stay bit-identical — sharding, like batching, is an execution detail.
     """
     import jax
 
-    from ..kernels.interp_quant import interp_quant_batch
+    from ..kernels.interp_quant import (interp_quant_batch,
+                                        interp_quant_sharded)
+
+    def phase_sweep(xm, hm, s):
+        if mesh is not None:
+            return interp_quant_sharded(xm, hm, s=s, eb=eb, interp=interp,
+                                        mesh=mesh, interpret=interpret)
+        return interp_quant_batch(xm, hm, s=s, eb=eb, interp=interp,
+                                  interpret=interpret)
 
     B = xs.shape[0]
     shape = xs.shape[1:]
@@ -181,10 +202,8 @@ def decorrelate_batch(xs: np.ndarray, eb: float, interp: str,
             hm = np.ascontiguousarray(np.moveaxis(hv, ax, -1))
             lead, C = xm.shape[1:-1], xm.shape[-1]
             R = int(np.prod(lead)) if lead else 1
-            q3, pred3 = interp_quant_batch(xm.reshape(B, R, C),
-                                           hm.reshape(B, R, C),
-                                           s=ph.stride, eb=eb, interp=interp,
-                                           interpret=interpret)
+            q3, pred3 = phase_sweep(xm.reshape(B, R, C),
+                                    hm.reshape(B, R, C), ph.stride)
             T = q3.shape[-1]
             # order='C' copies: see decorrelate() — escape zeroing below
             # must write through, device buffers arrive read-only
@@ -218,6 +237,14 @@ def decorrelate_batch(xs: np.ndarray, eb: float, interp: str,
              escs[b], anchors[b]) for b in range(B)]
 
 
+def decorrelate_sharded(xs: np.ndarray, eb: float, interp: str, mesh,
+                        interpret: bool | None = None) -> List[Tuple]:
+    """Sharded compression sweep: :func:`decorrelate_batch` with the chunk
+    stack split over a 1-D device mesh (the ``CodecBackend`` sharded-slot
+    signature: trailing ``mesh`` after the scalar arguments)."""
+    return decorrelate_batch(xs, eb, interp, interpret=interpret, mesh=mesh)
+
+
 def encode_level(q: np.ndarray, interpret: bool | None = None,
                  ) -> Tuple[List[bytes], int]:
     """Kernel-backed twin of ``bitplane.encode_level`` (takes q, not nb).
@@ -239,24 +266,38 @@ def encode_level(q: np.ndarray, interpret: bool | None = None,
 
 
 def encode_level_batch(q2: np.ndarray, interpret: bool | None = None,
-                       ) -> List[Tuple[List[bytes], int]]:
+                       mesh=None) -> List[Tuple[List[bytes], int]]:
     """Batched twin of :func:`encode_level`: (B, n) stacked level streams.
 
     One vmapped pack launch covers the whole stack; the host then truncates
     and zlibs each chunk's planes independently (per-chunk ``nbits`` and
     blobs), so every returned ``(blobs, nbits)`` is byte-identical to an
-    unbatched :func:`encode_level` call on that row.
+    unbatched :func:`encode_level` call on that row.  With ``mesh``, the
+    stack is split over the 1-D codec mesh first (one launch per device;
+    :func:`encode_level_sharded` is the registry-facing alias).
     """
     B, n = q2.shape
     if n == 0:
         return [([], 0) for _ in range(B)]
-    from ..kernels.bitplane_pack import bitplane_pack_batch
+    from ..kernels.bitplane_pack import (bitplane_pack_batch,
+                                         bitplane_pack_sharded)
 
     q2i = np.ascontiguousarray(q2, np.int32)
-    packed, n_valid = bitplane_pack_batch(q2i, interpret=interpret)
+    if mesh is not None:
+        packed, n_valid = bitplane_pack_sharded(q2i, mesh=mesh,
+                                                interpret=interpret)
+    else:
+        packed, n_valid = bitplane_pack_batch(q2i, interpret=interpret)
     packed = np.asarray(packed)
     return [bitplane.blobs_from_packed(packed[b], int(n_valid))
             for b in range(B)]
+
+
+def encode_level_sharded(q2: np.ndarray, mesh,
+                         interpret: bool | None = None,
+                         ) -> List[Tuple[List[bytes], int]]:
+    """Sharded per-level pack: :func:`encode_level_batch` over a mesh."""
+    return encode_level_batch(q2, interpret=interpret, mesh=mesh)
 
 
 # ----------------------------------------------------------------- decode
@@ -318,7 +359,8 @@ def decode_level(blobs, nbits: int, n: int,
 
 
 def decode_level_batch(blob_lists, nbits: int, n: int,
-                       interpret: bool | None = None) -> List[np.ndarray]:
+                       interpret: bool | None = None,
+                       mesh=None) -> List[np.ndarray]:
     """Batched twin of :func:`decode_level` for equal-(nbits, prefix) groups.
 
     ``blob_lists`` holds B chunks' MSB-first blob prefixes, all with the
@@ -327,9 +369,12 @@ def decode_level_batch(blob_lists, nbits: int, n: int,
     mixed prefixes raise ValueError — decoding them with one low_zero
     would silently corrupt the shorter streams).  One vmapped unpack
     launch decodes every stream; each returned truncated negabinary array
-    is bit-identical to an unbatched call.
+    is bit-identical to an unbatched call.  With ``mesh``, the stream
+    stack is split over the 1-D codec mesh (one launch per device;
+    :func:`decode_level_sharded` is the registry-facing alias).
     """
-    from ..kernels.bitplane_pack import bitplane_unpack_batch
+    from ..kernels.bitplane_pack import (bitplane_unpack_batch,
+                                         bitplane_unpack_sharded)
 
     B = len(blob_lists)
     wants = [_loaded_prefix(blobs) for blobs in blob_lists]
@@ -342,10 +387,22 @@ def decode_level_batch(blob_lists, nbits: int, n: int,
     words = np.zeros((B, 32, (n + 31) // 32), np.uint32)
     for b, blobs in enumerate(blob_lists):
         _fill_plane_words(words[b], blobs, want, nbits)
-    _, nb = bitplane_unpack_batch(words, n=n, low_zero=nbits - want,
-                                  with_nb=True, interpret=interpret)
+    if mesh is not None:
+        _, nb = bitplane_unpack_sharded(words, n=n, mesh=mesh,
+                                        low_zero=nbits - want,
+                                        with_nb=True, interpret=interpret)
+    else:
+        _, nb = bitplane_unpack_batch(words, n=n, low_zero=nbits - want,
+                                      with_nb=True, interpret=interpret)
     nb = np.asarray(nb, np.uint32)
     return [nb[b] for b in range(B)]
+
+
+def decode_level_sharded(blob_lists, nbits: int, n: int, mesh,
+                         interpret: bool | None = None) -> List[np.ndarray]:
+    """Sharded per-level unpack: :func:`decode_level_batch` over a mesh."""
+    return decode_level_batch(blob_lists, nbits, n, interpret=interpret,
+                              mesh=mesh)
 
 
 def reconstruct(shape, interp: str, anchors: np.ndarray,
@@ -392,7 +449,8 @@ def reconstruct(shape, interp: str, anchors: np.ndarray,
 def reconstruct_batch(shape, interp: str, anchors: np.ndarray,
                       yhat_per_level: List[np.ndarray],
                       overrides=None, out_dtype=np.float64,
-                      interpret: bool | None = None) -> np.ndarray:
+                      interpret: bool | None = None,
+                      mesh=None) -> np.ndarray:
     """Batched twin of :func:`reconstruct` over B equal-``shape`` items.
 
     Same seam as the scalar path: traversal, offset accounting, and the
@@ -401,11 +459,14 @@ def reconstruct_batch(shape, interp: str, anchors: np.ndarray,
     one vmapped ``interp_recon`` launch per phase for the whole stack.
     Per-item outputs are bit-identical to B scalar :func:`reconstruct`
     calls (the vmapped kernel computes each batch element exactly like a
-    lone call).
+    lone call).  With ``mesh``, each phase launch is ``shard_map``-ed over
+    the 1-D codec mesh (:func:`reconstruct_sharded` is the registry-facing
+    alias); bits still do not change.
     """
     import jax
 
-    from ..kernels.interp_recon import interp_recon_batch
+    from ..kernels.interp_recon import (interp_recon_batch,
+                                        interp_recon_sharded)
 
     def block_fn(hv, ph, res):
         B = hv.shape[0]
@@ -417,9 +478,15 @@ def reconstruct_batch(shape, interp: str, anchors: np.ndarray,
             np.asarray(res, np.float64).reshape(tgt_shape), ax, -1))
         lead, C = hm.shape[1:-1], hm.shape[-1]
         R = int(np.prod(lead)) if lead else 1
-        out3 = interp_recon_batch(hm.reshape(B, R, C), rm.reshape(B, R, -1),
-                                  s=ph.stride, interp=interp,
-                                  interpret=interpret)
+        if mesh is not None:
+            out3 = interp_recon_sharded(hm.reshape(B, R, C),
+                                        rm.reshape(B, R, -1), s=ph.stride,
+                                        interp=interp, mesh=mesh,
+                                        interpret=interpret)
+        else:
+            out3 = interp_recon_batch(hm.reshape(B, R, C),
+                                      rm.reshape(B, R, -1), s=ph.stride,
+                                      interp=interp, interpret=interpret)
         T = out3.shape[-1]
         # order='C' copy: the override writeback addresses each item's
         # block by flat index in original-axis C order
@@ -431,3 +498,14 @@ def reconstruct_batch(shape, interp: str, anchors: np.ndarray,
         return interpolation.reconstruct_batch(
             shape, interp, anchors, yhat_per_level, overrides=overrides,
             out_dtype=out_dtype, block_fn=block_fn)
+
+
+def reconstruct_sharded(shape, interp: str, anchors: np.ndarray,
+                        yhat_per_level: List[np.ndarray], mesh,
+                        overrides=None, out_dtype=np.float64,
+                        interpret: bool | None = None) -> np.ndarray:
+    """Sharded reconstruction sweep: :func:`reconstruct_batch` over a 1-D
+    codec mesh (the ``CodecBackend`` sharded-slot signature)."""
+    return reconstruct_batch(shape, interp, anchors, yhat_per_level,
+                             overrides=overrides, out_dtype=out_dtype,
+                             interpret=interpret, mesh=mesh)

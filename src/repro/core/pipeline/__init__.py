@@ -15,10 +15,11 @@ executes it:
       the v2 container + the escape-channel packer.
   ``decode.py``
       ``retrieve`` / ``refine`` / ``decompress`` (§5, Algorithms 1–2):
-      DP-planned progressive loading, shape-group scheduled (batched where
-      the backend supports it) per-chunk dispatch for v2 archives,
-      largest-remainder byte-budget splitting (``split_budget``; refines
-      split only the unspent remainder via ``refine_budgets``).
+      DP-planned progressive loading, shape-group scheduled (batched
+      and/or mesh-sharded where the backend supports it) per-chunk
+      dispatch for v2 archives, largest-remainder byte-budget splitting
+      (``split_budget``; refines split only the unspent remainder via
+      ``refine_budgets``).
   ``state.py``
       :class:`RetrievalState` / :class:`ChunkedRetrievalState` and the
       Algorithm 2 delta-cascade steps (``load_level_deltas``,

@@ -30,7 +30,7 @@ suites pin this down):
 Each primitive may also ship an OPTIONAL batched twin (``*_batch``) that
 processes a stack of equal-shaped chunk problems in one kernel dispatch —
 the unit the v2 chunk scheduler feeds (see ``encode``/``decode`` shape-group
-scheduling):
+scheduling and ``docs/architecture.md`` for the full dataflow):
 
   decorrelate_batch(xs_f64 (B, *shape), eb, interp) -> B-list of the
       scalar tuples;
@@ -40,11 +40,27 @@ scheduling):
   reconstruct_batch(shape, interp, anchors (B, ...), yhat [(B, n_l)],
       overrides=per-item list, out_dtype=) -> (B, *shape).
 
-``None`` slots mean "no batched form": the pipeline falls back to a
-per-chunk loop over the scalar primitive, so the numpy reference needs no
-batch code and third-party backends can adopt batching incrementally.
-Batched results must be bit-identical to the loop — the batch axis is an
-execution detail, never a format change.
+And each batched twin may ship an OPTIONAL *sharded* twin (``*_sharded``)
+— identical contract plus one trailing required argument, a 1-D device
+mesh (``parallel.codec_mesh``), over which the stack axis is split so
+every mesh device executes the batched primitive on its local chunks:
+
+  decorrelate_sharded(xs, eb, interp, mesh)        -> as decorrelate_batch
+  encode_level_sharded(q2, nb2, mesh)              -> as encode_level_batch
+  decode_level_sharded(blob_lists, nbits, n, mesh) -> as decode_level_batch
+  reconstruct_sharded(shape, interp, anchors, yhat, mesh, overrides=,
+      out_dtype=)                                  -> as reconstruct_batch
+
+``None`` slots mean "no batched/sharded form": the pipeline falls back to
+the next-simpler execution (sharded -> batched -> per-chunk loop over the
+scalar primitive), so the numpy reference needs no batch code and
+third-party backends can adopt batching/sharding incrementally.  The
+capability properties (:attr:`CodecBackend.batches_encode` /
+``batches_decode`` / ``shards_encode`` / ``shards_decode``) are what the
+schedulers consult — pipeline code never tests a backend name.  Batched
+AND sharded results must be bit-identical to the loop: the batch axis and
+the mesh are execution details, never a format change (the chunk-batching
+and sharded-codec test suites pin this).
 
 Selection: ``"numpy"`` | ``"jax"`` | ``"auto"``/None.  "auto" picks jax only
 where the kernels actually compile (TPU); on GPU/CPU they would run in the
@@ -67,8 +83,10 @@ from ..jax_backend import AUTO, JAX, NUMPY
 @dataclass(frozen=True)
 class CodecBackend:
     """The four codec primitives one execution substrate provides, plus
-    optional batched twins over stacks of equal-shaped chunk problems
-    (None = the pipeline loops the scalar primitive per chunk)."""
+    optional batched twins over stacks of equal-shaped chunk problems and
+    optional sharded twins over (stack, 1-D device mesh) — None slots mean
+    the pipeline falls back to the next-simpler execution (sharded ->
+    batched -> per-chunk scalar loop)."""
     name: str
     decorrelate: Callable
     encode_level: Callable
@@ -78,6 +96,10 @@ class CodecBackend:
     encode_level_batch: Optional[Callable] = None
     decode_level_batch: Optional[Callable] = None
     reconstruct_batch: Optional[Callable] = None
+    decorrelate_sharded: Optional[Callable] = None
+    encode_level_sharded: Optional[Callable] = None
+    decode_level_sharded: Optional[Callable] = None
+    reconstruct_sharded: Optional[Callable] = None
 
     @property
     def batches_encode(self) -> bool:
@@ -88,6 +110,16 @@ class CodecBackend:
     def batches_decode(self) -> bool:
         return (self.decode_level_batch is not None
                 and self.reconstruct_batch is not None)
+
+    @property
+    def shards_encode(self) -> bool:
+        return (self.decorrelate_sharded is not None
+                and self.encode_level_sharded is not None)
+
+    @property
+    def shards_decode(self) -> bool:
+        return (self.decode_level_sharded is not None
+                and self.reconstruct_sharded is not None)
 
 
 _REGISTRY: Dict[str, CodecBackend] = {}
@@ -157,6 +189,11 @@ def _jax_encode_level_batch(q2: np.ndarray, nb2: np.ndarray,
     return jax_backend.encode_level_batch(q2)
 
 
+def _jax_encode_level_sharded(q2: np.ndarray, nb2: np.ndarray, mesh,
+                              ) -> List[Tuple[List[bytes], int]]:
+    return jax_backend.encode_level_sharded(q2, mesh)
+
+
 register(CodecBackend(
     name=NUMPY,
     decorrelate=_numpy_decorrelate,
@@ -176,4 +213,8 @@ register(CodecBackend(
     encode_level_batch=_jax_encode_level_batch,
     decode_level_batch=jax_backend.decode_level_batch,
     reconstruct_batch=jax_backend.reconstruct_batch,
+    decorrelate_sharded=jax_backend.decorrelate_sharded,
+    encode_level_sharded=_jax_encode_level_sharded,
+    decode_level_sharded=jax_backend.decode_level_sharded,
+    reconstruct_sharded=jax_backend.reconstruct_sharded,
 ))

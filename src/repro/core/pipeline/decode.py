@@ -31,6 +31,16 @@ key instead of one per chunk — per-chunk plans, states and byte accounting
 are untouched, and ``refine`` still loads only each chunk's missing planes
 (``batch_chunks=False`` forces the per-chunk loop; outputs are
 bit-identical either way).
+
+``shard=`` ("auto" | a 1-D mesh | None, same contract as ``compress``)
+additionally splits each group's stack across a device mesh through the
+backend's ``*_sharded`` primitives: every device decodes and reconstructs
+its local chunk shard, collective-free, while the host keeps all plane
+fetching, DP planning, and progressive accounting per chunk — so
+``bytes_read``, plane prefixes, and the delta cascade merge back into
+:class:`ChunkedRetrievalState` exactly as on a single device, and the
+reconstruction bits never depend on the mesh (``docs/architecture.md``
+walks the full dataflow; ``tests/test_sharded_codec.py`` pins parity).
 """
 from __future__ import annotations
 
@@ -41,7 +51,7 @@ import numpy as np
 from .. import container, loader
 from ..container import ArchiveReader, ChunkedArchiveReader
 from . import backends
-from .encode import shape_groups
+from .encode import group_cap, resolve_exec_mesh, shape_groups
 from .state import (ChunkedRetrievalState, RetrievalState, initial_state,
                     initial_state_batch, load_level_deltas,
                     load_level_deltas_batch, push_delta, push_delta_batch,
@@ -72,6 +82,7 @@ def retrieve(buf_or_reader, error_bound: Optional[float] = None,
              state: Optional[RetrievalState] = None,
              backend: Optional[str] = "numpy",
              batch_chunks: Optional[bool] = None,
+             shard=None,
              ) -> Tuple[np.ndarray, RetrievalState]:
     """Single-pass progressive retrieval.
 
@@ -86,7 +97,11 @@ def retrieve(buf_or_reader, error_bound: Optional[float] = None,
     Accepts v1 and v2 (chunked) archives / readers transparently; for v2,
     ``batch_chunks`` controls equal-shape chunk batching (None/True =
     batch when the backend has batched primitives, False = per-chunk
-    loop), which never changes the reconstruction bits.
+    loop) and ``shard`` (None | "auto" | a 1-D mesh — the ``compress``
+    contract) splits each group's stack across a device mesh.  Neither
+    ever changes the reconstruction bits, and the state stays mesh- and
+    backend-agnostic: a sharded retrieval can be refined unsharded, and
+    vice versa.
     """
     _check_one_target(error_bound, max_bytes, bitrate)
     if isinstance(buf_or_reader, (ArchiveReader, ChunkedArchiveReader)):
@@ -95,7 +110,10 @@ def retrieve(buf_or_reader, error_bound: Optional[float] = None,
         reader = container.open_reader(buf_or_reader)
     if isinstance(reader, ChunkedArchiveReader):
         return _retrieve_chunked(reader, error_bound, max_bytes, bitrate,
-                                 propagation, state, backend, batch_chunks)
+                                 propagation, state, backend, batch_chunks,
+                                 shard)
+    # v1: no chunk grid to shard — validates (explicit mesh raises)
+    resolve_exec_mesh(shard, False, chunked=False, batch_chunks=batch_chunks)
     bk = backends.get(backend)
     m = reader.meta
     if bitrate is not None:
@@ -123,6 +141,7 @@ def refine(state, error_bound: Optional[float] = None,
            propagation: str = loader.SAFE,
            backend: Optional[str] = "numpy",
            batch_chunks: Optional[bool] = None,
+           shard=None,
            ) -> Tuple[np.ndarray, RetrievalState]:
     """Algorithm 2 as a first-class call: continue a previous retrieval.
 
@@ -134,12 +153,13 @@ def refine(state, error_bound: Optional[float] = None,
     return retrieve(state.reader, error_bound=error_bound,
                     max_bytes=max_bytes, bitrate=bitrate,
                     propagation=propagation, state=state, backend=backend,
-                    batch_chunks=batch_chunks)
+                    batch_chunks=batch_chunks, shard=shard)
 
 
-def decompress(buf: bytes, backend: Optional[str] = "numpy") -> np.ndarray:
+def decompress(buf: bytes, backend: Optional[str] = "numpy",
+               shard=None) -> np.ndarray:
     """Full-precision decompression (error <= eb everywhere)."""
-    out, _ = retrieve(buf, backend=backend)
+    out, _ = retrieve(buf, backend=backend, shard=shard)
     return out
 
 
@@ -205,6 +225,7 @@ def _retrieve_chunked(reader: ChunkedArchiveReader,
                       state: Optional[ChunkedRetrievalState],
                       backend: Optional[str] = "numpy",
                       batch_chunks: Optional[bool] = None,
+                      shard=None,
                       ) -> Tuple[np.ndarray, ChunkedRetrievalState]:
     """Shape-group scheduled per-chunk plan + reconstruct; the global bound
     is the chunk max.
@@ -217,11 +238,16 @@ def _retrieve_chunked(reader: ChunkedArchiveReader,
     chunk budgets sum to exactly ``max_bytes``; refines split only the
     budget not already spent (:func:`refine_budgets`).  Equal-shape groups
     run batched when the backend supports it (one kernel dispatch per
-    phase for the whole group); singleton groups and batch-less backends
-    take the per-chunk path.  Both paths produce bit-identical states.
+    phase for the whole group) and, with ``shard``, mesh-sharded (each
+    device handles its local chunk shard, groups capped at
+    ``MAX_BATCH_CHUNKS`` per device); singleton groups and batch-less
+    backends take the per-chunk path.  All paths produce bit-identical
+    states.
     """
     m = reader.meta
     bk = backends.get(backend)
+    mesh = resolve_exec_mesh(shard, bk.shards_decode, chunked=True,
+                             batch_chunks=batch_chunks)
     if state is None:
         state = ChunkedRetrievalState(reader=reader,
                                       chunk_states=[None] * len(m.chunks))
@@ -234,11 +260,13 @@ def _retrieve_chunked(reader: ChunkedArchiveReader,
         spent = [cs.bytes_read if cs is not None else 0
                  for cs in state.chunk_states]
         budgets = refine_budgets(max_bytes, sub_ns, spent)
-    use_batch = batch_chunks is not False and bk.batches_decode
-    for idxs in shape_groups([cm.stop - cm.start for cm in m.chunks]):
+    use_batch = batch_chunks is not False and (bk.batches_decode
+                                               or mesh is not None)
+    for idxs in shape_groups([cm.stop - cm.start for cm in m.chunks],
+                             max_group=group_cap(mesh)):
         if use_batch and len(idxs) > 1:
             _retrieve_group(reader, idxs, error_bound, budgets, propagation,
-                            state, bk)
+                            state, bk, mesh)
         else:
             for i in idxs:
                 kw = {}
@@ -264,14 +292,16 @@ def _retrieve_group(reader: ChunkedArchiveReader, idxs: List[int],
                     error_bound: Optional[float],
                     budgets: Optional[List[int]], propagation: str,
                     state: ChunkedRetrievalState,
-                    bk: backends.CodecBackend) -> None:
+                    bk: backends.CodecBackend, mesh=None) -> None:
     """One equal-shape chunk group through the batched retrieval steps.
 
     Mirrors the scalar ``retrieve`` body per chunk — plan (host DP, each
     chunk's own tables), initial state if fresh, delta load, delta push,
     achieved-bound update — with the reconstructions and plane decodes
-    stacked across the group.  Per-chunk states and reader accounting come
-    out identical to the loop; only the dispatch count changes.
+    stacked across the group (and, with ``mesh``, that stack split across
+    the devices of the 1-D codec mesh).  Per-chunk states and reader
+    accounting come out identical to the loop; only the dispatch count
+    (and its device fan-out) changes.
     """
     subs = [reader.chunk_reader(i) for i in idxs]
     keeps = []
@@ -286,14 +316,15 @@ def _retrieve_group(reader: ChunkedArchiveReader, idxs: List[int],
         keeps.append(plan.keep_planes)
     fresh = [p for p, i in enumerate(idxs) if state.chunk_states[i] is None]
     if fresh:
-        sts = initial_state_batch([subs[p] for p in fresh], bk)
+        sts = initial_state_batch([subs[p] for p in fresh], bk, mesh)
         for p, st in zip(fresh, sts):
             state.chunk_states[idxs[p]] = st
     group_states = [state.chunk_states[i] for i in idxs]
-    delta_ys, any_new = load_level_deltas_batch(group_states, keeps, bk)
+    delta_ys, any_new = load_level_deltas_batch(group_states, keeps, bk,
+                                                mesh)
     live = [p for p, new in enumerate(any_new) if new]
     if live:
         push_delta_batch([group_states[p] for p in live],
-                         [delta_ys[p] for p in live], bk)
+                         [delta_ys[p] for p in live], bk, mesh)
     for st in group_states:
         update_achieved_bound(st, propagation)

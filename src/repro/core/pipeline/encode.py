@@ -23,6 +23,20 @@ keeps the memory bound chunking exists to provide.  Archives are
 byte-identical either way (``batch_chunks=False`` forces the per-chunk
 loop; the parity tests pin the equivalence).  v1 (unchunked) archives
 remain the default and are always readable.
+
+``shard=`` lifts the same scheduler onto a device mesh: with a 1-D codec
+mesh (``"auto"`` = all local devices when more than one; see
+``parallel.codec_mesh`` and ``docs/architecture.md``), each shape group's
+stacked slab is split across the mesh and every device runs the backend's
+batched kernels on its local chunk shard — one collective-free logical
+dispatch per (level, dim) phase for the whole grid.  The scheduler is
+shard-aware in two places: the group cap scales to ``MAX_BATCH_CHUNKS x
+mesh size`` (``MAX_BATCH_CHUNKS`` stays the *per-device* working-set
+bound), and ragged groups are padded up to a mesh multiple at the sharded
+kernel entry points (all-zero pad problems, outputs sliced off).  Sharding
+never changes bytes: per-chunk metadata, escapes and blobs are still
+derived per chunk on the host, so sharded archives are byte-identical to
+single-device ones.
 """
 from __future__ import annotations
 
@@ -38,7 +52,8 @@ from . import backends
 def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
              relative: bool = False, backend: Optional[str] = "numpy",
              chunk_elems: Optional[int] = None,
-             batch_chunks: Optional[bool] = None) -> bytes:
+             batch_chunks: Optional[bool] = None,
+             shard=None) -> bytes:
     """Compress ``x`` with point-wise error bound ``eb``.
 
     ``relative=True`` interprets eb as a fraction of the value range.
@@ -48,7 +63,12 @@ def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
     ~chunk_elems-sized independent slabs.  ``batch_chunks`` controls the
     equal-shape chunk batching (None/True = batch when the backend has
     batched primitives, False = always loop per chunk); the archive bytes
-    do not depend on the choice.
+    do not depend on the choice.  ``shard`` runs the chunk grid
+    data-parallel over a 1-D device mesh (None = off, "auto" = all local
+    devices when more than one, or an explicit ``jax.sharding.Mesh``);
+    sharding requires the stacked scheduler (so it is incompatible with
+    ``batch_chunks=False``) and a backend with sharded primitives (others
+    fall back to their unsharded path).  Bytes never depend on ``shard``.
     """
     x = np.asarray(x)
     if relative:
@@ -56,15 +76,21 @@ def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
     if eb <= 0:
         raise ValueError("error bound must be positive")
     bk = backends.get(backend)
+    mesh = resolve_exec_mesh(shard, bk.shards_encode,
+                             chunked=chunk_elems is not None,
+                             batch_chunks=batch_chunks)
     if chunk_elems is None:
         return _compress_single(x, eb, interp, bk)
     bounds = chunk_bounds(x.shape, chunk_elems)
-    use_batch = batch_chunks is not False and bk.batches_encode
+    use_batch = batch_chunks is not False and (bk.batches_encode
+                                               or mesh is not None)
     bufs: List[Optional[bytes]] = [None] * len(bounds)
-    for idxs in shape_groups([b - a for a, b in bounds]):
+    for idxs in shape_groups([b - a for a, b in bounds],
+                             max_group=group_cap(mesh)):
         if use_batch and len(idxs) > 1:
             xs = np.stack([x[bounds[i][0]: bounds[i][1]] for i in idxs])
-            for i, buf in zip(idxs, _compress_batch(xs, eb, interp, bk)):
+            for i, buf in zip(idxs,
+                              _compress_batch(xs, eb, interp, bk, mesh)):
                 bufs[i] = buf
         else:
             for i in idxs:
@@ -72,6 +98,57 @@ def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
                 bufs[i] = _compress_single(x[a:b], eb, interp, bk)
     return container.write_chunked_archive(x.shape, x.dtype, eb, interp,
                                            bounds, bufs)
+
+
+def resolve_exec_mesh(shard, backend_shards: bool, *, chunked: bool,
+                      batch_chunks: Optional[bool]):
+    """``shard=`` policy shared by both codec directions -> mesh or None.
+
+    Delegates mesh resolution to ``parallel.codec_mesh.resolve_shard``
+    ("auto" -> all local devices when >1, Mesh -> validated 1-D), then
+    applies the pipeline rules: sharding needs a chunk grid and the
+    stacked scheduler, so an *explicit* mesh combined with an unchunked
+    archive or ``batch_chunks=False`` is a contradiction and raises, while
+    ``"auto"`` quietly stays unsharded in those cases.  A backend without
+    sharded primitives (the numpy reference) always falls back to its
+    unsharded path — mirroring how missing ``*_batch`` slots fall back to
+    the per-chunk loop.
+    """
+    if shard is None or shard is False:
+        return None
+    from ...parallel import codec_mesh
+
+    mesh = codec_mesh.resolve_shard(shard)
+    if mesh is None:
+        return None
+    explicit = shard != codec_mesh.AUTO
+    if not chunked:
+        if explicit:
+            raise ValueError("sharded execution runs over the chunk grid: "
+                             "pass chunk_elems= (v1 archives have no "
+                             "chunks to place on the mesh)")
+        return None
+    if batch_chunks is False:
+        if explicit:
+            raise ValueError("shard= needs the stacked shape-group "
+                             "scheduler; it cannot be combined with "
+                             "batch_chunks=False")
+        return None
+    return mesh if backend_shards else None
+
+
+def group_cap(mesh) -> int:
+    """Chunks per scheduled stack: ``MAX_BATCH_CHUNKS`` per device.
+
+    Unsharded that is the plain batch cap; on a mesh the stack is split
+    across ``n`` devices, so an ``n``-times-larger group still bounds each
+    device's working set at ``MAX_BATCH_CHUNKS`` chunk problems.
+    """
+    if mesh is None:
+        return MAX_BATCH_CHUNKS
+    from ...parallel import codec_mesh
+
+    return MAX_BATCH_CHUNKS * codec_mesh.shard_count(mesh)
 
 
 def chunk_bounds(shape, chunk_elems: int) -> List[Tuple[int, int]]:
@@ -142,19 +219,25 @@ def _compress_single(x: np.ndarray, eb: float, interp: str,
 
 
 def _compress_batch(xs: np.ndarray, eb: float, interp: str,
-                    bk: backends.CodecBackend) -> List[bytes]:
+                    bk: backends.CodecBackend, mesh=None) -> List[bytes]:
     """B equal-shape chunks (stacked on axis 0) -> B v1 archives.
 
     Exactly ``_compress_single`` per chunk, but the sweep and the per-level
     pack each run ONCE for the whole stack through the backend's batched
-    primitives.  Per-chunk metadata (nbits, delta tables, escapes) is still
-    derived from that chunk's own streams, so the archives are
-    byte-identical to the per-chunk loop.
+    primitives — or, with ``mesh``, through its *sharded* primitives, which
+    split the stack across the mesh devices (each device then runs the
+    batched kernels on its local chunk shard).  Per-chunk metadata (nbits,
+    delta tables, escapes) is still derived from that chunk's own streams,
+    so the archives are byte-identical to the per-chunk loop either way.
     """
     B = xs.shape[0]
     shape, dtype = xs.shape[1:], xs.dtype
     L = interpolation.num_levels(shape)
-    results = bk.decorrelate_batch(xs.astype(np.float64), eb, interp)
+    if mesh is not None:
+        results = bk.decorrelate_sharded(xs.astype(np.float64), eb, interp,
+                                         mesh)
+    else:
+        results = bk.decorrelate_batch(xs.astype(np.float64), eb, interp)
 
     blobs_pc: List[List[List[bytes]]] = [[] for _ in range(B)]
     meta_pc: List[List[dict]] = [[] for _ in range(B)]
@@ -162,7 +245,10 @@ def _compress_batch(xs: np.ndarray, eb: float, interp: str,
     for li in range(L):
         q2 = np.stack([results[b][1][li] for b in range(B)])
         nb2 = negabinary.to_negabinary(q2)
-        enc = bk.encode_level_batch(q2, nb2)
+        if mesh is not None:
+            enc = bk.encode_level_sharded(q2, nb2, mesh)
+        else:
+            enc = bk.encode_level_batch(q2, nb2)
         for b in range(B):
             blobs, nbits = enc[b]
             delta = negabinary.truncation_loss_table(nb2[b], nbits, eb)

@@ -156,20 +156,42 @@ def update_achieved_bound(state: RetrievalState, propagation: str) -> None:
 # indistinguishable from the per-chunk loop (bit-identical xhat included;
 # the batch axis is an execution detail).  Backends without batched slots
 # fall back to the scalar loop transparently.
+#
+# Each helper also takes an optional 1-D codec ``mesh``: the same stack is
+# then run through the backend's ``*_sharded`` primitives, which split the
+# group across the mesh devices (``parallel.codec_mesh``).  Shard-local
+# results come back as ordinary per-chunk streams, so the merge into
+# per-chunk ``RetrievalState``s — and from there into
+# ``ChunkedRetrievalState``'s aggregated ``bytes_read``/``err_bound`` — is
+# byte-for-byte the single-device merge; nothing in the state records
+# which mesh (if any) produced it, which is what lets a sharded retrieval
+# be refined unsharded and vice versa.
 
-def initial_state_batch(readers: List[ArchiveReader],
-                        bk: CodecBackend) -> List[RetrievalState]:
+def _stack_reconstruct(bk: CodecBackend, mesh, shape, interp, anchors, yhat,
+                       overrides):
+    """Group reconstruct through the sharded slot when a mesh is active,
+    the batched slot otherwise (callers have already ruled out B == 1)."""
+    if mesh is not None and bk.reconstruct_sharded is not None:
+        return bk.reconstruct_sharded(shape, interp, anchors, yhat, mesh,
+                                      overrides=overrides)
+    return bk.reconstruct_batch(shape, interp, anchors, yhat,
+                                overrides=overrides)
+
+
+def initial_state_batch(readers: List[ArchiveReader], bk: CodecBackend,
+                        mesh=None) -> List[RetrievalState]:
     """Coarsest approximation for B equal-shape chunks: one batched
-    reconstruct builds every initial ``xhat``."""
-    if bk.reconstruct_batch is None or len(readers) == 1:
+    (optionally mesh-sharded) reconstruct builds every initial ``xhat``."""
+    if ((bk.reconstruct_batch is None and bk.reconstruct_sharded is None)
+            or len(readers) == 1):
         return [initial_state(r, bk) for r in readers]
     m0 = readers[0].meta
     anchors = np.stack([r.anchors() for r in readers])
     yhat = [np.zeros((len(readers), lv.n), np.float64) for lv in m0.levels]
     overrides = [[_unpack_escapes(r.escapes(li))
                   for li in range(len(r.meta.levels))] for r in readers]
-    xhat = bk.reconstruct_batch(m0.shape, m0.interp, anchors, yhat,
-                                overrides=overrides)
+    xhat = _stack_reconstruct(bk, mesh, m0.shape, m0.interp, anchors, yhat,
+                              overrides)
     states = []
     for b, r in enumerate(readers):
         m = r.meta
@@ -187,15 +209,16 @@ def initial_state_batch(readers: List[ArchiveReader],
 
 def load_level_deltas_batch(states: List[RetrievalState],
                             keep_planes_list: List[List[int]],
-                            bk: CodecBackend,
+                            bk: CodecBackend, mesh=None,
                             ) -> Tuple[List[List[np.ndarray]], List[bool]]:
     """Batched :func:`load_level_deltas` over B equal-shape chunk states.
 
     Plane fetches stay per chunk (each chunk's reader counts its own
     bytes), but the decode itself is grouped by (nbits, loaded-prefix) —
     the static configuration of the unpack kernel — and each group runs as
-    one batched ``decode_level`` dispatch.  Returns per-chunk delta streams
-    and per-chunk any-new flags, exactly like B scalar calls.
+    one batched ``decode_level`` dispatch (mesh-sharded across devices
+    when ``mesh`` is given).  Returns per-chunk delta streams and
+    per-chunk any-new flags, exactly like B scalar calls.
     """
     m0 = states[0].reader.meta
     B = len(states)
@@ -223,7 +246,10 @@ def load_level_deltas_batch(states: List[RetrievalState],
                 for i in range(want):
                     blobs[i] = st.reader.plane(li, i)
                 blob_lists.append(blobs)
-            if bk.decode_level_batch is not None and len(bs) > 1:
+            if (mesh is not None and bk.decode_level_sharded is not None
+                    and len(bs) > 1):
+                nbs = bk.decode_level_sharded(blob_lists, nbits, lv0.n, mesh)
+            elif bk.decode_level_batch is not None and len(bs) > 1:
                 nbs = bk.decode_level_batch(blob_lists, nbits, lv0.n)
             else:
                 nbs = [bk.decode_level(bl, nbits, lv0.n)
@@ -242,11 +268,12 @@ def load_level_deltas_batch(states: List[RetrievalState],
 
 def push_delta_batch(states: List[RetrievalState],
                      delta_ys: List[List[np.ndarray]],
-                     bk: CodecBackend) -> None:
+                     bk: CodecBackend, mesh=None) -> None:
     """Batched :func:`push_delta`: one zero-anchor cascade reconstructs
     every chunk's delta in a single stack (escape deltas pinned 0 per
-    chunk, as in the scalar path)."""
-    if bk.reconstruct_batch is None or len(states) == 1:
+    chunk, as in the scalar path), mesh-sharded when ``mesh`` is given."""
+    if ((bk.reconstruct_batch is None and bk.reconstruct_sharded is None)
+            or len(states) == 1):
         for st, dy in zip(states, delta_ys):
             push_delta(st, dy, bk)
         return
@@ -257,7 +284,7 @@ def push_delta_batch(states: List[RetrievalState],
             for li in range(len(m0.levels))]
     overrides = [[(idx, np.zeros(idx.size)) for idx in st.esc_idx]
                  for st in states]
-    delta = bk.reconstruct_batch(m0.shape, m0.interp, zero_anchors, yhat,
-                                 overrides=overrides)
+    delta = _stack_reconstruct(bk, mesh, m0.shape, m0.interp, zero_anchors,
+                               yhat, overrides)
     for b, st in enumerate(states):
         st.xhat = st.xhat + delta[b]

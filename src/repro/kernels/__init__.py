@@ -24,9 +24,13 @@ reconstructions are byte/bit-identical to the numpy reference pipeline
 (enforced by tests/test_backend_parity.py and tests/test_decode_parity.py).
 Each wrapper also ships a ``jax.vmap``-ed ``*_batch`` entry point over
 stacks of equal-shaped problems — the chunk-batch engine's unit: B chunks,
-one launch — and every launch is counted by ``kernels.dispatch`` (the
-batched-vs-looped reduction is asserted in tests and recorded by
-``benchmarks/backend_speed.py``).
+one launch — and a ``*_sharded`` entry point that splits the same stack
+over a 1-D device mesh via ``parallel.codec_mesh.shard_vmap`` (every
+device runs the vmapped kernel on its local rows; one logical dispatch,
+mesh-size device launches).  Every launch is counted by
+``kernels.dispatch``, including the sharded per-device fan-out (the
+batched-vs-looped reduction and the sharded accounting are asserted in
+tests and recorded by ``benchmarks/backend_speed.py``).
 
   attention       — flash-attention (GQA) forward for the LM serving/training
                     stack: per-(batch, head, q-tile) programs stream kv tiles

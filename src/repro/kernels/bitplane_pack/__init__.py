@@ -1,7 +1,9 @@
-from .ops import (bitplane_pack, bitplane_pack_batch, bitplane_unpack,
-                  bitplane_unpack_batch)
+from .ops import (bitplane_pack, bitplane_pack_batch, bitplane_pack_sharded,
+                  bitplane_unpack, bitplane_unpack_batch,
+                  bitplane_unpack_sharded)
 from .ref import bitplane_pack_ref, bitplane_unpack_ref, unpack_planes_ref
 
-__all__ = ["bitplane_pack", "bitplane_pack_batch", "bitplane_unpack",
-           "bitplane_unpack_batch", "bitplane_pack_ref",
+__all__ = ["bitplane_pack", "bitplane_pack_batch", "bitplane_pack_sharded",
+           "bitplane_unpack", "bitplane_unpack_batch",
+           "bitplane_unpack_sharded", "bitplane_pack_ref",
            "bitplane_unpack_ref", "unpack_planes_ref"]

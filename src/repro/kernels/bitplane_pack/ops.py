@@ -38,13 +38,19 @@ def bitplane_pack(q, *, interpret: bool | None = None):
     return packed, n
 
 
-def bitplane_pack_batch(q, *, interpret: bool | None = None):
+def bitplane_pack_batch(q, *, interpret: bool | None = None, mesh=None):
     """(B, n) int32 stacked 1-D level streams -> ((B, 32, R, W) packed, n).
 
     Each batch row gets the 1-D wrapper's layout — pad at the END of its
     flat stream, so ``blobs_from_packed`` per chunk sees the same valid
     prefix as an unbatched call — and the whole stack runs as ONE
     ``jax.vmap``-ed kernel launch instead of B.
+
+    With ``mesh``, the batch axis is zero-padded to a mesh multiple
+    (all-zero pad streams pack to all-zero words, sliced back off) and
+    split across the 1-D codec mesh; each device packs its local rows
+    with the same vmapped kernel.  One function holds both layouts so the
+    byte-critical stream padding cannot drift between them.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -52,13 +58,32 @@ def bitplane_pack_batch(q, *, interpret: bool | None = None):
     B, n = q.shape
     C = 128 * GROUP
     R = -(-n // C)
-    q = jnp.pad(q, ((0, 0), (0, R * C - n))).reshape(B, R, C)
+    padb = 0
+    if mesh is not None:
+        from ...parallel import codec_mesh
+        padb = codec_mesh.pad_to_shards(B, mesh)
+    q = jnp.pad(q, ((0, padb), (0, R * C - n))).reshape(B + padb, R, C)
     pr = (-R) % ROWS_B
     if pr:
         q = jnp.pad(q, ((0, 0), (0, pr), (0, 0)))
-    dispatch.record("bitplane_pack", batch=B)
-    packed = jax.vmap(lambda a: bitplane_pack_pallas(a, interpret=interpret))(q)
-    return packed, n
+
+    def kernel(a):
+        return bitplane_pack_pallas(a, interpret=interpret)
+
+    if mesh is None:
+        dispatch.record("bitplane_pack", batch=B)
+        packed = jax.vmap(kernel)(q)
+    else:
+        dispatch.record("bitplane_pack", batch=B,
+                        devices=codec_mesh.shard_count(mesh))
+        packed = codec_mesh.shard_vmap(kernel, mesh)(q)
+    return packed[:B], n
+
+
+def bitplane_pack_sharded(q, *, mesh, interpret: bool | None = None):
+    """Sharded twin: ``bitplane_pack_batch`` with the (B, n) stack split
+    over the 1-D codec ``mesh`` (thin alias)."""
+    return bitplane_pack_batch(q, interpret=interpret, mesh=mesh)
 
 
 def bitplane_unpack(plane_words, n: int, *, low_zero: int = 0,
@@ -96,12 +121,18 @@ def bitplane_unpack(plane_words, n: int, *, low_zero: int = 0,
 
 def bitplane_unpack_batch(plane_words, n: int, *, low_zero: int = 0,
                           with_nb: bool = False,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None, mesh=None):
     """(B, 32, NW) stacked per-plane word streams -> (B, n) int32 bins.
 
     The batched twin of ``bitplane_unpack`` for equal-(n, low_zero) chunk
     groups: one ``jax.vmap``-ed launch decodes all B streams, each padded
     exactly like a lone call, so per-chunk outputs are bit-identical.
+
+    With ``mesh``, the stream stack is zero-padded to a mesh multiple
+    (all-zero pad streams decode to zeros, sliced back off) and split
+    across the 1-D codec mesh; every device decodes its local streams
+    with the same vmapped kernel.  One function holds both layouts so the
+    word padding/reshape math cannot drift between them.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -111,15 +142,38 @@ def bitplane_unpack_batch(plane_words, n: int, *, low_zero: int = 0,
     need = -(-max(n, 1) // (GROUP * _UNPACK_W))
     R = -(-need // ROWS_B) * ROWS_B
     pad = R * _UNPACK_W - NW
-    if pad:
-        pw = jnp.pad(pw, ((0, 0), (0, 0), (0, pad)))
-    pw = pw.reshape(B, 32, R, _UNPACK_W)
-    dispatch.record("bitplane_unpack", batch=B)
-    q, nb = jax.vmap(
-        lambda a: bitplane_unpack_pallas(a, low_zero=low_zero,
-                                         interpret=interpret))(pw)
-    q = q.reshape(B, -1)[:, :n]
-    nb = nb.reshape(B, -1)[:, :n]
+    padb = 0
+    if mesh is not None:
+        from ...parallel import codec_mesh
+        padb = codec_mesh.pad_to_shards(B, mesh)
+    if pad or padb:
+        pw = jnp.pad(pw, ((0, padb), (0, 0), (0, pad)))
+    pw = pw.reshape(B + padb, 32, R, _UNPACK_W)
+
+    def kernel(a):
+        return bitplane_unpack_pallas(a, low_zero=low_zero,
+                                      interpret=interpret)
+
+    if mesh is None:
+        dispatch.record("bitplane_unpack", batch=B)
+        q, nb = jax.vmap(kernel)(pw)
+    else:
+        dispatch.record("bitplane_unpack", batch=B,
+                        devices=codec_mesh.shard_count(mesh))
+        q, nb = codec_mesh.shard_vmap(kernel, mesh, n_out=2)(pw)
+    q = q.reshape(B + padb, -1)[:B, :n]
+    nb = nb.reshape(B + padb, -1)[:B, :n]
     if with_nb:
         return q, nb
     return q
+
+
+def bitplane_unpack_sharded(plane_words, n: int, *, mesh, low_zero: int = 0,
+                            with_nb: bool = False,
+                            interpret: bool | None = None):
+    """Sharded twin: ``bitplane_unpack_batch`` with the (B, 32, NW) stack
+    split over the 1-D codec ``mesh`` (thin alias; equal-(n, low_zero)
+    groups only, like the batched twin)."""
+    return bitplane_unpack_batch(plane_words, n, low_zero=low_zero,
+                                 with_nb=with_nb, interpret=interpret,
+                                 mesh=mesh)

@@ -12,6 +12,19 @@ dispatches than the per-chunk loop (< chunks x levels for the per-level
 pack/unpack ops).  Counting happens at the Python wrapper layer, so it is
 exact in both interpret mode (CPU) and compiled Mosaic (TPU): one wrapper
 call = one ``pallas_call`` execution.
+
+Sharded execution adds a second axis to the accounting: a sharded call is
+ONE logical dispatch (one traced ``shard_map``, counted in ``_counts``
+like any other wrapper call) that launches the vmapped kernel on EVERY
+mesh device — ``record(..., devices=D)`` stores that fan-out separately
+and :func:`device_counts` / :func:`measure_devices` expose it (unsharded
+calls record ``devices=1``).  The invariant is strictly per dispatch;
+per-RUN totals follow from the *schedule*, which sharding may itself
+change (the shape-group cap scales with the mesh size, and decode groups
+that stay singleton take the scalar path in every mode), so run-level
+claims like "sharded logical count == batched logical count" hold only
+when the two schedules coincide — the sharded parity tests construct
+chunk grids where they provably do.
 """
 from __future__ import annotations
 
@@ -24,17 +37,35 @@ _counts: Counter = Counter()
 #: cumulative batch elements covered per kernel name (launches weighted by
 #: their batch size; equals _counts for unbatched calls)
 _elements: Counter = Counter()
+#: cumulative per-device launches (launches weighted by mesh size; equals
+#: _counts for unsharded calls)
+_device_counts: Counter = Counter()
 
 
-def record(name: str, batch: int = 1) -> None:
-    """Count one kernel launch covering ``batch`` chunk-sized problems."""
+def record(name: str, batch: int = 1, devices: int = 1) -> None:
+    """Count one kernel launch covering ``batch`` chunk-sized problems.
+
+    ``devices`` is the mesh fan-out of the launch: a ``shard_map``-ed call
+    is one *logical* dispatch that runs on ``devices`` devices at once
+    (1 = unsharded, the default).
+    """
     _counts[name] += 1
     _elements[name] += batch
+    _device_counts[name] += devices
 
 
 def counts() -> Dict[str, int]:
     """Launches per kernel since start/reset (copy)."""
     return dict(_counts)
+
+
+def device_counts() -> Dict[str, int]:
+    """Per-device launches per kernel since start/reset (copy).
+
+    Each logical dispatch contributes its mesh size (1 when unsharded), so
+    this is the number of kernel executions actual hardware performs.
+    """
+    return dict(_device_counts)
 
 
 def total() -> int:
@@ -45,6 +76,7 @@ def total() -> int:
 def reset() -> None:
     _counts.clear()
     _elements.clear()
+    _device_counts.clear()
 
 
 @contextmanager
@@ -63,3 +95,21 @@ def measure() -> Iterator[Dict[str, int]]:
         yield out
     finally:
         out.update((_counts - before))
+
+
+@contextmanager
+def measure_devices() -> Iterator[Dict[str, int]]:
+    """Like :func:`measure`, but collecting *per-device* launches.
+
+    The yielded dict maps kernel name to the number of on-device kernel
+    executions inside the block: a sharded dispatch over a D-device mesh
+    counts D, an unsharded one counts 1.  Pairs with :func:`measure` to
+    assert both invariants of the sharded path at once — logical
+    dispatches unchanged, device launches = logical x mesh size.
+    """
+    before = Counter(_device_counts)
+    out: Dict[str, int] = {}
+    try:
+        yield out
+    finally:
+        out.update((_device_counts - before))

@@ -1,5 +1,5 @@
-from .ops import interp_quant, interp_quant_batch
+from .ops import interp_quant, interp_quant_batch, interp_quant_sharded
 from .ref import interp_quant_ref, predict_ref
 
-__all__ = ["interp_quant", "interp_quant_batch", "interp_quant_ref",
-           "predict_ref"]
+__all__ = ["interp_quant", "interp_quant_batch", "interp_quant_sharded",
+           "interp_quant_ref", "predict_ref"]

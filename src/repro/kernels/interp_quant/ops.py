@@ -38,13 +38,21 @@ def interp_quant(x, xhat, *, s: int, eb: float, interp: str = "cubic",
 
 
 def interp_quant_batch(x, xhat, *, s: int, eb: float, interp: str = "cubic",
-                       interpret: bool | None = None):
+                       interpret: bool | None = None, mesh=None):
     """Batched phase sweep over stacked equal-shape chunks: (B, R, C).
 
     ``jax.vmap`` turns the batch axis into an extra grid dimension of ONE
     kernel launch, so B chunks cost a single dispatch instead of B.  Each
     batch element is padded/computed exactly like a lone ``interp_quant``
     call, so per-chunk results are bit-identical to the unbatched path.
+
+    With ``mesh`` (a 1-D codec mesh), the batch axis is zero-padded to a
+    mesh multiple (``codec_mesh.pad_to_shards``) and ``shard_map`` places
+    consecutive rows on consecutive devices, each running the same vmapped
+    kernel — one collective-free launch per device, one *logical* dispatch
+    total (recorded with ``devices=mesh size``), pad rows sliced off.
+    One function holds both layouts so the byte-critical padding/reshape
+    math cannot drift between them.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -52,11 +60,33 @@ def interp_quant_batch(x, xhat, *, s: int, eb: float, interp: str = "cubic",
     xhat = jnp.asarray(xhat, x.dtype)
     B, R, C = x.shape
     pad = (-R) % ROWS_B
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
-        xhat = jnp.pad(xhat, ((0, 0), (0, pad), (0, 0)))
-    dispatch.record("interp_quant", batch=B)
-    q, pred = jax.vmap(
-        lambda a, b: interp_quant_pallas(a, b, s=s, eb=eb, interp=interp,
-                                         interpret=interpret))(x, xhat)
-    return q[:, :R], pred[:, :R]
+    padb = 0
+    if mesh is not None:
+        from ...parallel import codec_mesh
+        padb = codec_mesh.pad_to_shards(B, mesh)
+    if pad or padb:
+        x = jnp.pad(x, ((0, padb), (0, pad), (0, 0)))
+        xhat = jnp.pad(xhat, ((0, padb), (0, pad), (0, 0)))
+
+    def kernel(a, b):
+        return interp_quant_pallas(a, b, s=s, eb=eb, interp=interp,
+                                   interpret=interpret)
+
+    if mesh is None:
+        dispatch.record("interp_quant", batch=B)
+        q, pred = jax.vmap(kernel)(x, xhat)
+    else:
+        dispatch.record("interp_quant", batch=B,
+                        devices=codec_mesh.shard_count(mesh))
+        q, pred = codec_mesh.shard_vmap(kernel, mesh, n_out=2)(x, xhat)
+    return q[:B, :R], pred[:B, :R]
+
+
+def interp_quant_sharded(x, xhat, *, s: int, eb: float, mesh,
+                         interp: str = "cubic",
+                         interpret: bool | None = None):
+    """Sharded phase sweep: ``interp_quant_batch`` with the (B, R, C)
+    batch axis split over the 1-D codec ``mesh`` (thin alias; see the
+    batched entry for the layout/dispatch contract)."""
+    return interp_quant_batch(x, xhat, s=s, eb=eb, interp=interp,
+                              interpret=interpret, mesh=mesh)

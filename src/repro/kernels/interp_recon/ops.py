@@ -38,13 +38,19 @@ def interp_recon(xhat, res, *, s: int, interp: str = "cubic",
 
 
 def interp_recon_batch(xhat, res, *, s: int, interp: str = "cubic",
-                       interpret: bool | None = None):
+                       interpret: bool | None = None, mesh=None):
     """Batched decode phase sweep over stacked equal-shape chunks: (B, R, C).
 
     ``jax.vmap`` makes the batch axis an extra grid dimension of ONE kernel
     launch — B chunks, one dispatch.  Each batch element is padded/computed
     exactly like a lone ``interp_recon`` call, so per-chunk reconstructions
     are bit-identical to the unbatched path.
+
+    With ``mesh``, the batch axis is zero-padded to a mesh multiple and
+    split across the 1-D codec mesh by ``shard_map`` around the identical
+    vmapped kernel — no collectives, one logical dispatch, ``mesh size``
+    device launches, pad rows sliced off.  One function holds both
+    layouts so the padding/reshape math cannot drift between them.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -52,11 +58,31 @@ def interp_recon_batch(xhat, res, *, s: int, interp: str = "cubic",
     res = jnp.asarray(res, xhat.dtype)
     B, R, C = xhat.shape
     pad = (-R) % ROWS_B
-    if pad:
-        xhat = jnp.pad(xhat, ((0, 0), (0, pad), (0, 0)))
-        res = jnp.pad(res, ((0, 0), (0, pad), (0, 0)))
-    dispatch.record("interp_recon", batch=B)
-    out = jax.vmap(lambda a, b: interp_recon_pallas(a, b, s=s, interp=interp,
-                                                    interpret=interpret))(
-        xhat, res)
-    return out[:, :R]
+    padb = 0
+    if mesh is not None:
+        from ...parallel import codec_mesh
+        padb = codec_mesh.pad_to_shards(B, mesh)
+    if pad or padb:
+        xhat = jnp.pad(xhat, ((0, padb), (0, pad), (0, 0)))
+        res = jnp.pad(res, ((0, padb), (0, pad), (0, 0)))
+
+    def kernel(a, b):
+        return interp_recon_pallas(a, b, s=s, interp=interp,
+                                   interpret=interpret)
+
+    if mesh is None:
+        dispatch.record("interp_recon", batch=B)
+        out = jax.vmap(kernel)(xhat, res)
+    else:
+        dispatch.record("interp_recon", batch=B,
+                        devices=codec_mesh.shard_count(mesh))
+        out = codec_mesh.shard_vmap(kernel, mesh)(xhat, res)
+    return out[:B, :R]
+
+
+def interp_recon_sharded(xhat, res, *, s: int, mesh, interp: str = "cubic",
+                         interpret: bool | None = None):
+    """Sharded decode phase sweep: ``interp_recon_batch`` with the batch
+    axis split over the 1-D codec ``mesh`` (thin alias)."""
+    return interp_recon_batch(xhat, res, s=s, interp=interp,
+                              interpret=interpret, mesh=mesh)

@@ -1,11 +1,36 @@
-"""Logical-axis sharding context.
+"""Logical-axis sharding context for the training/serving stack.
 
-Models call ``shard_act(x, "batch", None, "heads", None)`` with *logical*
-axis names; a context installed by the launcher maps them to mesh axes with
-divisibility checks (falling back to replication — e.g. qwen2's 14 heads
-cannot tile a 16-way model axis, so its attention runs data-parallel while
-its FFN/vocab still use TP; see DESIGN.md §4).  Without a context the call
-is a no-op, so the same model code runs in CPU unit tests.
+This is the *model-side* half of the parallel substrate (the codec's
+chunk-grid sharding is the separate, simpler ``parallel.codec_mesh`` —
+see ``docs/architecture.md`` §4 for how the two relate): models annotate
+activations with **logical** axis names and a thread-local context
+installed by the launcher maps those names to physical mesh axes.
+
+The contract, piece by piece:
+
+  * :data:`LOGICAL_TO_MESH` — the default logical-name -> mesh-axes table
+    ("batch" -> ("pod", "data"), "heads"/"ff"/"experts"/"vocab" ->
+    ("model",), ...).  It is a *vocabulary*, not a guarantee: a name maps
+    only onto axes the active mesh actually has.
+  * :func:`sharding_ctx` — context manager installing (mesh, overrides)
+    thread-locally.  ``overrides`` remaps names for a lexical scope, e.g.
+    ``{"batch": ("data",)}`` inside a shard_map body where the "pod" axis
+    is already manual.  Contexts nest; the previous mapping is restored
+    on exit.
+  * :func:`shard_act` — models call
+    ``shard_act(x, "batch", None, "heads", None)`` with one logical name
+    (or None) per tensor dim.  With no context installed it is a no-op —
+    the exact property that lets the same model code run in CPU unit
+    tests — otherwise it emits a ``with_sharding_constraint``.
+  * :func:`resolve_axis` — the divisibility check behind it: a dim that
+    the mapped mesh axes do not divide falls back to replication rather
+    than erroring (e.g. qwen2's 14 heads cannot tile a 16-way model axis,
+    so its attention runs data-parallel while its FFN/vocab still use TP;
+    see DESIGN.md §4).  Every lookup is therefore total: any model runs
+    on any mesh, just with less sharding than requested.
+
+Nothing here touches jax's shard_map API surface directly — version
+tolerance lives in ``parallel.compat``.
 """
 from __future__ import annotations
 

@@ -1,21 +1,44 @@
 """Version-tolerant jax API shims for the parallel substrate.
 
-``shard_map`` moved twice across jax releases:
+Every module that places work on a device mesh — the training launcher
+(``launch/steps.py``), the logical-axis context (``parallel.api``), and the
+codec's sharded chunk-grid executor (``parallel.codec_mesh``, see
+``docs/architecture.md``) — goes through this file instead of calling jax's
+mesh/shard APIs directly, because those APIs moved across the releases this
+repo supports.  Two shims:
 
-  * old:  ``jax.experimental.shard_map.shard_map(f, mesh, in_specs,
-          out_specs, check_rep=...)``
-  * new:  ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=...,
-          axis_names=..., check_vma=...)``
+:func:`shard_map`
+    ``shard_map`` moved twice across jax releases:
 
-Call sites in this repo use the *new* keyword vocabulary (``axis_names``,
-``check_vma``); this wrapper translates to whatever the installed jax
-provides so the same code runs on both sides of the rename.
+      * old:  ``jax.experimental.shard_map.shard_map(f, mesh, in_specs,
+              out_specs, check_rep=...)``
+      * new:  ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=...,
+              axis_names=..., check_vma=...)``
+
+    Call sites in this repo use the *new* keyword vocabulary
+    (``axis_names``, ``check_vma``); the wrapper translates to whatever the
+    installed jax provides so the same code runs on both sides of the
+    rename.  On the legacy API, axes not named manual are forwarded via
+    ``auto=`` (the legacy default is manual-everywhere, which would cost
+    SPMD sharding on the untouched axes — see the inline note).
+
+:func:`make_mesh`
+    ``jax.make_mesh`` (device-order-aware constructor) only exists on
+    newer jax; older releases spell it ``jax.sharding.Mesh`` over an
+    explicit device array.  The wrapper takes (axis sizes, axis names,
+    optional explicit devices) and returns a :class:`jax.sharding.Mesh`
+    either way.
+
+The contract both shims keep: pure API translation, no policy.  Axis
+layout / sizing decisions live with the callers (``launch/mesh.py`` for
+training, ``parallel.codec_mesh`` for the codec).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, axis_names: Optional[set] = None,
@@ -41,3 +64,24 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names: Optional[set] = None,
             kw["auto"] = auto
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_rep=bool(check_vma), **kw)
+
+
+def make_mesh(axis_shape: Tuple[int, ...], axis_names: Tuple[str, ...],
+              devices: Optional[Sequence] = None) -> "jax.sharding.Mesh":
+    """Build a :class:`jax.sharding.Mesh` on any supported jax release.
+
+    ``axis_shape``/``axis_names`` follow ``jax.make_mesh``; ``devices``
+    optionally pins an explicit device list (first ``prod(axis_shape)``
+    local devices by default).  Newer jax goes through ``jax.make_mesh``
+    (which may reorder devices for interconnect locality) only when the
+    device list is implicit — an explicit list is always honored verbatim,
+    on every release, so callers that slice ``jax.devices()`` themselves
+    (e.g. ``codec_mesh.codec_mesh(n)``) get a deterministic mesh.
+    """
+    from jax.sharding import Mesh
+
+    if devices is None:
+        if hasattr(jax, "make_mesh"):
+            return jax.make_mesh(axis_shape, axis_names)
+        devices = jax.devices()[: int(np.prod(axis_shape))]
+    return Mesh(np.asarray(devices).reshape(axis_shape), axis_names)
