@@ -3,17 +3,19 @@
 Reports compress AND decode throughput for both backends on a >=2^20-element
 field (the acceptance smoke case), plus the chunked variant in BOTH
 execution modes — the per-chunk loop and the batched shape-group engine
-(``batch_chunks``), whose ``jax.vmap``-ed dispatches are the roadmap's
-equal-shape chunk batching, plus — whenever more than one device is
-visible — a sharded entry (``shard="auto"``) that runs the chunk grid
-data-parallel over the local device mesh and records sharded vs
-single-device MB/s and per-device launch fan-out.  Kernel dispatch counts
-for all modes come from ``repro.kernels.dispatch``, so the
+(``ExecPolicy(batch_chunks=...)``), whose ``jax.vmap``-ed dispatches are
+the roadmap's equal-shape chunk batching, plus — whenever more than one
+device is visible — a sharded entry (``ExecPolicy(shard="auto")``) that
+runs the chunk grid data-parallel over the local device mesh and records
+sharded vs single-device MB/s and per-device launch fan-out.  Everything
+drives the object API (``Codec`` / ``Archive`` / ``Fidelity`` /
+``ExecPolicy``), so the benchmark doubles as its smoke test.  Kernel
+dispatch counts for all modes come from ``repro.kernels.dispatch``, so the
 batched-vs-looped launch-count reduction (and the sharded fan-out) is a
 recorded, trendable number, not a claim.  Decode is measured
 as the two retrieval operations the paper optimizes (§5): a full-precision
-``decompress`` and one incremental ``refine`` step (Algorithm 2's delta
-cascade) on top of a coarse first retrieval.
+read and one incremental ``refine`` step (Algorithm 2's delta cascade) on
+top of a coarse first retrieval.
 
 CPU caveat: off-TPU the Pallas kernels run in *interpret mode*, a
 correctness harness, so the jax numbers on CPU measure dispatch overhead,
@@ -42,8 +44,8 @@ import json
 import numpy as np
 
 from .common import csv_row, timed
-from repro.core import (chunk_bounds, compress, decompress, open_archive,
-                        refine, retrieve)
+from repro import Archive, Codec, ExecPolicy, Fidelity
+from repro.core import chunk_bounds
 from repro.kernels import dispatch
 
 JSON_OUT = "BENCH_decode.json"
@@ -65,17 +67,19 @@ def _field(n: int) -> np.ndarray:
 
 def _decode_rows(x: np.ndarray, eb: float, buf: bytes, case: str,
                  repeat: int, rows, records, outs):
-    """Measure full decompress + one refine step for both decode backends."""
+    """Measure full read + one refine step for both decode backends."""
+    archive = Archive(buf)
     for bk in ("numpy", "jax"):
+        policy = ExecPolicy(backend=bk)
         if bk == "jax":
             # warm every jit cache entry the timed calls will hit — incl.
             # the refine ladder, whose plane prefixes are distinct static
             # args of the unpack kernel (a cold refine would time tracing)
-            decompress(buf, backend=bk)
-            _, ws = retrieve(open_archive(buf),
-                             error_bound=REFINE_COARSE * eb, backend=bk)
-            refine(ws, error_bound=REFINE_FINE * eb, backend=bk)
-        out, dt = timed(decompress, buf, repeat=repeat, backend=bk)
+            archive.open(policy).read()
+            warm = archive.open(policy)
+            warm.read(Fidelity.error_bound(REFINE_COARSE * eb))
+            warm.refine(Fidelity.error_bound(REFINE_FINE * eb))
+        out, dt = timed(lambda: archive.open(policy).read(), repeat=repeat)
         outs.setdefault(case, {})[bk] = out
         mbps = x.nbytes / dt / 1e6
         rows.append(csv_row(f"backend_speed/{case}/{bk}/decompress",
@@ -86,33 +90,34 @@ def _decode_rows(x: np.ndarray, eb: float, buf: bytes, case: str,
 
         # one refine step: coarse retrieval outside the clock, then time
         # the incremental delta cascade to the tighter bound
-        reader = open_archive(buf)
-        _, st = retrieve(reader, error_bound=REFINE_COARSE * eb, backend=bk)
-        (_, st), dt = timed(refine, st, error_bound=REFINE_FINE * eb,
-                            repeat=1, backend=bk)
+        session = archive.open(policy)
+        session.read(Fidelity.error_bound(REFINE_COARSE * eb))
+        _, dt = timed(session.refine, Fidelity.error_bound(REFINE_FINE * eb),
+                      repeat=1)
         mbps = x.nbytes / dt / 1e6
         rows.append(csv_row(f"backend_speed/{case}/{bk}/refine",
                             dt * 1e6,
-                            f"MBps={mbps:.1f};bytes_read={st.bytes_read}"))
+                            f"MBps={mbps:.1f};"
+                            f"bytes_read={session.bytes_read}"))
         print(rows[-1])
         records.append(dict(case=case, backend=bk, op="refine",
                             seconds=dt, mbps=mbps,
-                            bytes_read=int(st.bytes_read)))
+                            bytes_read=int(session.bytes_read)))
 
 
 def _chunk_batch_rows(x: np.ndarray, eb: float, rows, checks,
                       comp_records, dec_records):
     """The chunk-batch speed entry: batched vs looped dispatch counts and
     MB/s for both codec directions on a CHUNK_ELEMS-slabbed archive."""
+    codec = Codec(eb=eb, chunk_elems=CHUNK_ELEMS)
     n_chunks = len(chunk_bounds(x.shape, CHUNK_ELEMS))
     bufs = {}
     for mode, flag in (("looped", False), ("batched", True)):
-        compress(x, eb, backend="jax", chunk_elems=CHUNK_ELEMS,
-                 batch_chunks=flag)  # warm jit caches out of the timing
+        policy = ExecPolicy(backend="jax", batch_chunks=flag)
+        codec.compress(x, policy)  # warm jit caches out of the timing
         with dispatch.measure() as d:
-            bufs[mode], dt = timed(compress, x, eb, repeat=1, backend="jax",
-                                   chunk_elems=CHUNK_ELEMS,
-                                   batch_chunks=flag)
+            arc, dt = timed(codec.compress, x, policy, repeat=1)
+        bufs[mode] = arc.tobytes()
         mbps = x.nbytes / dt / 1e6
         nd = sum(d.values())
         rows.append(csv_row(f"backend_speed/chunk_batch/{mode}/compress",
@@ -124,13 +129,10 @@ def _chunk_batch_rows(x: np.ndarray, eb: float, rows, checks,
                                  chunks=n_chunks, dispatches=nd,
                                  dispatches_by_kernel=d))
 
-        retrieve(open_archive(bufs[mode]), error_bound=REFINE_COARSE * eb,
-                 backend="jax", batch_chunks=flag)  # warm
+        coarse = Fidelity.error_bound(REFINE_COARSE * eb)
+        arc.open(policy).read(coarse)  # warm
         with dispatch.measure() as d:
-            reader = open_archive(bufs[mode])
-            (_, st), dt = timed(retrieve, reader,
-                                error_bound=REFINE_COARSE * eb, repeat=1,
-                                backend="jax", batch_chunks=flag)
+            _, dt = timed(lambda: arc.open(policy).read(coarse), repeat=1)
         mbps = x.nbytes / dt / 1e6
         nd = sum(d.values())
         rows.append(csv_row(f"backend_speed/chunk_batch/{mode}/retrieve",
@@ -165,14 +167,15 @@ def _sharded_rows(x: np.ndarray, eb: float, rows, checks,
         print("backend_speed/sharded: single device visible, skipped "
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
         return
+    codec = Codec(eb=eb, chunk_elems=CHUNK_ELEMS)
     n_chunks = len(chunk_bounds(x.shape, CHUNK_ELEMS))
     bufs, outs = {}, {}
     for mode, shard in (("single", None), ("sharded", "auto")):
-        compress(x, eb, backend="jax", chunk_elems=CHUNK_ELEMS,
-                 shard=shard)  # warm jit caches out of the timing
+        policy = ExecPolicy(backend="jax", shard=shard)
+        codec.compress(x, policy)  # warm jit caches out of the timing
         with dispatch.measure() as d, dispatch.measure_devices() as dd:
-            bufs[mode], dt = timed(compress, x, eb, repeat=1, backend="jax",
-                                   chunk_elems=CHUNK_ELEMS, shard=shard)
+            arc, dt = timed(codec.compress, x, policy, repeat=1)
+        bufs[mode] = arc.tobytes()
         mbps = x.nbytes / dt / 1e6
         rows.append(csv_row(f"backend_speed/sharded/{mode}/compress",
                             dt * 1e6, f"MBps={mbps:.1f};devices="
@@ -187,12 +190,11 @@ def _sharded_rows(x: np.ndarray, eb: float, rows, checks,
                                  device_launches=sum(dd.values()),
                                  dispatches_by_kernel=d))
 
-        retrieve(open_archive(bufs[mode]), error_bound=REFINE_COARSE * eb,
-                 backend="jax", shard=shard)  # warm
+        coarse = Fidelity.error_bound(REFINE_COARSE * eb)
+        arc.open(policy).read(coarse)  # warm
         with dispatch.measure() as d, dispatch.measure_devices() as dd:
-            (outs[mode], _), dt = timed(retrieve, open_archive(bufs[mode]),
-                                        error_bound=REFINE_COARSE * eb,
-                                        repeat=1, backend="jax", shard=shard)
+            outs[mode], dt = timed(lambda: arc.open(policy).read(coarse),
+                                   repeat=1)
         mbps = x.nbytes / dt / 1e6
         rows.append(csv_row(f"backend_speed/sharded/{mode}/retrieve",
                             dt * 1e6, f"MBps={mbps:.1f};devices="
@@ -221,23 +223,25 @@ def run(scale=None, n: int = 1 << 20, smoke: bool = True,
     eb = 1e-5
     repeat = 1 if smoke else 3
     variants = [
-        ("numpy", dict(backend="numpy")),
-        ("jax", dict(backend="jax")),
-        ("jax_chunked", dict(backend="jax", chunk_elems=1 << 18)),
+        ("numpy", Codec(eb=eb), ExecPolicy(backend="numpy")),
+        ("jax", Codec(eb=eb), ExecPolicy(backend="jax")),
+        ("jax_chunked", Codec(eb=eb, chunk_elems=1 << 18),
+         ExecPolicy(backend="jax")),
     ]
     bufs = {}
-    for name, kw in variants:
+    for name, codec, policy in variants:
         if name.startswith("jax"):
-            compress(x, eb, **kw)  # warm the jit caches out of the timing
-        buf, dt = timed(compress, x, eb, repeat=repeat, **kw)
-        bufs[name] = buf
+            codec.compress(x, policy)  # warm the jit caches out of timing
+        arc, dt = timed(codec.compress, x, policy, repeat=repeat)
+        bufs[name] = arc.tobytes()
         mbps = x.nbytes / dt / 1e6
         rows.append(csv_row(f"backend_speed/{x.size}el/{name}/compress",
-                            dt * 1e6, f"MBps={mbps:.1f};bytes={len(buf)}"))
+                            dt * 1e6,
+                            f"MBps={mbps:.1f};bytes={arc.nbytes}"))
         print(rows[-1])
         comp_records.append(dict(case=f"{x.size}el", variant=name,
                                  op="compress", seconds=dt, mbps=mbps,
-                                 bytes=len(buf)))
+                                 bytes=arc.nbytes))
     checks.append(("backend_parity_bytes", f"{x.size}el", "compress",
                    bufs["numpy"] == bufs["jax"]))
 
@@ -259,8 +263,8 @@ def run(scale=None, n: int = 1 << 20, smoke: bool = True,
 
     if not smoke:
         y = _field(1 << 22)
-        for name, kw in variants:
-            buf, dt = timed(compress, y, eb, repeat=1, **kw)
+        for name, codec, policy in variants:
+            arc, dt = timed(codec.compress, y, policy, repeat=1)
             rows.append(csv_row(f"backend_speed/{y.size}el/{name}/compress",
                                 dt * 1e6,
                                 f"MBps={y.nbytes / dt / 1e6:.1f}"))

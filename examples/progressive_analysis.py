@@ -1,14 +1,15 @@
 """The paper's Fig.-11 use case: different post-analyses need different
 fidelity.  Curl of a velocity field stabilizes with ~0.3% of the data;
 the Laplacian (second derivatives amplify high-frequency error) needs more.
-Progressive retrieval serves both from ONE archive without recompression.
+One progressive session serves both from ONE archive without
+recompression — each ladder rung fetches only the planes it adds.
 
   PYTHONPATH=src python examples/progressive_analysis.py
 """
 import numpy as np
 
+from repro import Codec, Fidelity
 from repro.configs.paper import TABLE3, generate
-from repro.core import compress, retrieve, open_archive, metrics
 
 
 def curl_mag(v):
@@ -30,16 +31,16 @@ def rel_err(a, b):
 def main():
     x = generate(TABLE3[2], scale=0.12)            # VelocityX-like
     rng = float(x.max() - x.min())
-    buf = compress(x, 1e-7 * rng)
-    reader = open_archive(buf)
+    archive = Codec(eb=1e-7 * rng).compress(x)
     ref_curl, ref_lap = curl_mag(x), laplacian(x)
 
-    state = None
-    print(f"archive {len(buf)/1e6:.2f} MB")
+    session = archive.open()
+    print(f"archive {archive.nbytes/1e6:.2f} MB")
     print(f"{'loaded%':>8} {'curl rel-err':>14} {'laplace rel-err':>16}")
-    for E_rel in (1e-2, 1e-3, 1e-4, 1e-5):
-        out, state = retrieve(reader, error_bound=E_rel * rng, state=state)
-        frac = 100 * state.bytes_read / len(buf)
+    ladder = (Fidelity.error_bound(e * rng)
+              for e in (1e-2, 1e-3, 1e-4, 1e-5))
+    for fid, out in session.ladder(ladder):
+        frac = 100 * session.bytes_read / archive.nbytes
         print(f"{frac:7.1f}% {rel_err(ref_curl, curl_mag(out)):14.3e} "
               f"{rel_err(ref_lap, laplacian(out)):16.3e}")
     print("-> first-derivative analysis converges with a fraction of the "

@@ -1,0 +1,41 @@
+"""repro — IPComp reproduction grown toward a production JAX/Pallas system.
+
+The public codec surface lives in :mod:`repro.api` and is re-exported
+here::
+
+    from repro import Codec, Archive, Fidelity, ExecPolicy
+
+    archive = Codec(eb=1e-6).compress(x)
+    session = archive.open(ExecPolicy(backend="jax"))
+    out = session.read(Fidelity.error_bound(1e-3))
+
+The legacy free functions (``compress`` / ``retrieve`` / ``refine`` /
+``decompress``) are importable from here too; they are compatibility
+shims over the object API and emit one
+:class:`~repro.api.IPCompDeprecationWarning` per call.
+
+Attribute access is lazy (PEP 562): ``import repro`` stays cheap, and
+subsystems that never touch the codec (``repro.models``,
+``repro.launch``, ...) do not pay for its import.
+"""
+
+_API_NAMES = (
+    "Codec", "Archive", "ProgressiveReader", "Fidelity", "ExecPolicy",
+    "ExecContext", "DEFAULT_POLICY", "CorruptArchiveError",
+    "IPCompDeprecationWarning",
+    "compress", "decompress", "retrieve", "refine", "open_archive",
+    "RetrievalState", "ChunkedRetrievalState",
+)
+
+__all__ = list(_API_NAMES) + ["api"]
+
+
+def __getattr__(name: str):
+    if name in _API_NAMES:
+        from . import api
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_API_NAMES))

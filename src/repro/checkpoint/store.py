@@ -33,8 +33,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from ..core import ipcomp
-from ..core.container import ArchiveReader
+from ..api import Archive, Codec, Fidelity
 
 
 def _leaf_id(path) -> str:
@@ -69,7 +68,8 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
             kind = "raw"
         else:
             a2 = arr.reshape(arr.shape[0], -1) if arr.ndim > 2 else arr
-            blob = ipcomp.compress(a2, rel_eb, interp, relative=True)
+            blob = Codec(eb=rel_eb, interp=interp,
+                         relative=True).compress(a2).tobytes()
             kind = "ipc"
         with open(os.path.join(tmp, lid + ".ipc"), "wb") as f:
             f.write(blob)
@@ -105,20 +105,17 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def _load_leaf(d: str, lid: str, meta: dict,
-               error_bound: Optional[float],
-               states: Optional[Dict] = None) -> np.ndarray:
-    blob = open(os.path.join(d, lid + ".ipc"), "rb").read()
+               error_bound: Optional[float] = None) -> np.ndarray:
+    """Full-precision leaf load (progressive loads go through the per-leaf
+    sessions in :func:`progressive_restore`)."""
+    path = os.path.join(d, lid + ".ipc")
     if meta["kind"] == "raw":
+        blob = open(path, "rb").read()
         arr = np.frombuffer(blob, np.float32).reshape(meta["shape"])
         return arr.astype(np.dtype(meta["dtype"]))
-    if error_bound is None:
-        out = ipcomp.decompress(blob)
-    else:
-        reader = ipcomp.open_archive(blob)
-        st = states.get(lid) if states is not None else None
-        out, st = ipcomp.retrieve(reader, error_bound=error_bound, state=st)
-        if states is not None:
-            states[lid] = st
+    sess = Archive.load(path).open()
+    out = sess.read(None if error_bound is None
+                    else Fidelity.error_bound(error_bound))
     return out.reshape(meta["shape"]).astype(np.dtype(meta["dtype"]))
 
 
@@ -138,7 +135,8 @@ def restore_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
 
 @dataclass
 class ProgressiveRestore:
-    """Carries per-leaf RetrievalStates between refinement rounds."""
+    """Carries per-leaf ProgressiveReader sessions between refinement
+    rounds."""
     dir: str
     step: int
     manifest: dict
@@ -165,30 +163,22 @@ def progressive_restore(ckpt_dir: str, step: int, like: Any, *,
         lid = _leaf_id(path)
         meta = session.manifest["leaves"][lid]
         if meta["kind"] == "ipc":
+            sess = session.states.get(lid)
+            if sess is None:
+                sess = Archive.load(os.path.join(d, lid + ".ipc")).open()
+                session.states[lid] = sess
             # absolute bound per leaf: weight_error is relative to range
-            arr = _load_leaf(d, lid, meta, _abs_bound(d, lid, weight_error,
-                                                      session),
-                             session.states)
+            # (eb stored absolute; manifest rel_eb relates it to the range)
+            eb = sess.archive.eb
+            bound = max(weight_error * eb / session.manifest["rel_eb"], eb)
+            arr = sess.read(Fidelity.error_bound(bound)) \
+                .reshape(meta["shape"]).astype(np.dtype(meta["dtype"]))
         else:
             arr = _load_leaf(d, lid, meta, None)
         out.append(jax.numpy.asarray(arr))
     session.bytes_read = sum(
         st.bytes_read for st in session.states.values())
     return treedef.unflatten(out), session
-
-
-def _abs_bound(d: str, lid: str, rel: float,
-               session: ProgressiveRestore) -> float:
-    st = session.states.get(lid)
-    if st is not None:
-        m = st.reader.meta
-    else:
-        blob = open(os.path.join(d, lid + ".ipc"), "rb").read()
-        from ..core.container import parse_meta
-        m = parse_meta(blob)
-    # eb stored absolute; manifest rel_eb relates it to the range
-    rng = m.eb / session.manifest["rel_eb"]
-    return max(rel * rng, m.eb)
 
 
 class CheckpointManager:

@@ -30,6 +30,49 @@ MAGIC = b"IPC1"
 MAGIC2 = b"IPC2"
 
 
+class CorruptArchiveError(ValueError):
+    """A buffer that is not a well-formed IPComp archive: wrong/unknown
+    magic, truncated framing, undecodable header, or declared blob extents
+    that fall outside the buffer.  Subclasses :class:`ValueError` so
+    pre-existing ``except ValueError`` handling keeps working; raised with
+    a message naming what is wrong and where, instead of leaking
+    ``struct.unpack`` / ``json`` noise from the middle of the parser."""
+
+
+def _framing(buf, what: str):
+    """Shared v1/v2 framing checks -> (header_len, decoded header dict).
+
+    Validates, in order, each boundary a truncated buffer can violate:
+    the 4-byte magic, the 4-byte header length, the header body, and the
+    header being decodable JSON.  ``buf[:4]`` is checked by the caller
+    (it is the version dispatch); everything after it is checked here.
+    """
+    if len(buf) < 8:
+        raise CorruptArchiveError(
+            f"truncated {what}: {len(buf)} bytes, need at least 8 for "
+            "magic + header length")
+    (hlen,) = struct.unpack("<I", buf[4:8])
+    if 8 + hlen > len(buf):
+        raise CorruptArchiveError(
+            f"truncated {what}: header claims {hlen} bytes but only "
+            f"{len(buf) - 8} follow the framing")
+    try:
+        header = json.loads(bytes(buf[8:8 + hlen]).decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise CorruptArchiveError(f"undecodable {what} header: {e}") from e
+    if not isinstance(header, dict):
+        raise CorruptArchiveError(f"malformed {what} header: expected an "
+                                  f"object, got {type(header).__name__}")
+    return hlen, header
+
+
+def _check_extent(offset: int, size: int, total: int, what: str) -> None:
+    if offset < 0 or size < 0 or offset + size > total:
+        raise CorruptArchiveError(
+            f"corrupt archive: {what} extent [{offset}, {offset + size}) "
+            f"falls outside the {total}-byte buffer")
+
+
 @dataclass
 class LevelMeta:
     level: int                 # L..1 (1 = finest)
@@ -107,20 +150,54 @@ def write_archive(shape, dtype, eb, interp, L, anchors: np.ndarray,
 
 
 def parse_meta(buf) -> ArchiveMeta:
-    """Parse a v1 header (accepts bytes or a zero-copy memoryview)."""
-    if buf[:4] == MAGIC2:
+    """Parse a v1 header (accepts bytes or a zero-copy memoryview).
+
+    Truncated / undecodable buffers raise :class:`CorruptArchiveError`
+    with the failing boundary named; declared blob extents are checked
+    against the buffer so a truncated *data* section fails here, at parse
+    time, instead of as a short read deep inside a retrieval.
+    """
+    if bytes(buf[:4]) == MAGIC2:
         raise ValueError("chunked (v2) archive: use parse_chunked_meta / "
                          "open_reader, or the top-level retrieve()")
-    assert buf[:4] == MAGIC, "not an IPComp archive"
-    (hlen,) = struct.unpack("<I", buf[4:8])
-    h = json.loads(bytes(buf[8:8 + hlen]).decode())
-    levels = [LevelMeta(**lv) for lv in h["levels"]]
-    return ArchiveMeta(shape=h["shape"], dtype=h["dtype"], eb=h["eb"],
-                       interp=h["interp"], L=h["L"],
-                       anchors_offset=h["anchors_offset"],
-                       anchors_size=h["anchors_size"],
-                       anchors_shape=h["anchors_shape"], levels=levels,
-                       header_end=8 + hlen, total_size=len(buf))
+    if bytes(buf[:4]) != MAGIC:
+        raise CorruptArchiveError(
+            "not an IPComp archive: expected magic "
+            f"{MAGIC!r} or {MAGIC2!r}, got {bytes(buf[:4])!r}")
+    hlen, h = _framing(buf, "v1 archive")
+    try:
+        levels = [LevelMeta(**lv) for lv in h["levels"]]
+        meta = ArchiveMeta(shape=h["shape"], dtype=h["dtype"], eb=h["eb"],
+                           interp=h["interp"], L=h["L"],
+                           anchors_offset=h["anchors_offset"],
+                           anchors_size=h["anchors_size"],
+                           anchors_shape=h["anchors_shape"], levels=levels,
+                           header_end=8 + hlen, total_size=len(buf))
+    except (KeyError, TypeError) as e:
+        raise CorruptArchiveError(f"malformed v1 archive header: {e}") from e
+    _check_extent(meta.anchors_offset, meta.anchors_size, len(buf),
+                  "anchors")
+    if meta.anchors_size != 8 * int(np.prod(meta.anchors_shape)):
+        raise CorruptArchiveError(
+            f"corrupt archive: anchors_size {meta.anchors_size} does not "
+            f"match anchors_shape {tuple(meta.anchors_shape)} "
+            "(8 bytes/element)")
+    for li, lv in enumerate(meta.levels):
+        # internal consistency, so a header-corrupt buffer fails HERE and
+        # not as an IndexError when a plan first touches the bad level
+        if not (len(lv.plane_offsets) == len(lv.plane_sizes) == lv.nbits
+                and len(lv.delta_table) == lv.nbits + 1):
+            raise CorruptArchiveError(
+                f"corrupt archive: level {li} declares nbits={lv.nbits} "
+                f"but carries {len(lv.plane_offsets)} plane offsets / "
+                f"{len(lv.plane_sizes)} sizes / "
+                f"{len(lv.delta_table)}-entry delta table")
+        for pi, (off, size) in enumerate(zip(lv.plane_offsets,
+                                             lv.plane_sizes)):
+            _check_extent(off, size, len(buf), f"level {li} plane {pi}")
+        _check_extent(lv.esc_offset, lv.esc_size, len(buf),
+                      f"level {li} escapes")
+    return meta
 
 
 class ArchiveReader:
@@ -130,9 +207,12 @@ class ArchiveReader:
     resident (it is the index), data blobs are fetched on demand and counted.
     """
 
-    def __init__(self, buf: bytes):
+    def __init__(self, buf: bytes, meta: Optional[ArchiveMeta] = None):
         self.buf = buf
-        self.meta = parse_meta(buf)
+        # meta is immutable once parsed: callers that already validated the
+        # buffer (repro.api.Archive) pass it in so a new reader — a fresh
+        # bytes_read accounting scope — does not re-parse the header
+        self.meta = parse_meta(buf) if meta is None else meta
         self.bytes_read = 0          # data-blob bytes fetched so far
         self._fetched: set = set()
 
@@ -212,13 +292,26 @@ def write_chunked_archive(shape, dtype, eb, interp,
 
 
 def parse_chunked_meta(buf: bytes) -> ChunkedMeta:
-    assert buf[:4] == MAGIC2, "not a chunked (v2) IPComp archive"
-    (hlen,) = struct.unpack("<I", buf[4:8])
-    h = json.loads(buf[8:8 + hlen].decode())
-    chunks = [ChunkMeta(**c) for c in h["chunks"]]
-    return ChunkedMeta(shape=h["shape"], dtype=h["dtype"], eb=h["eb"],
-                       interp=h["interp"], chunks=chunks,
-                       header_end=8 + hlen, total_size=len(buf))
+    """Parse a v2 header; see :func:`parse_meta` for the error contract."""
+    if bytes(buf[:4]) != MAGIC2:
+        raise CorruptArchiveError(
+            "not a chunked (v2) IPComp archive: expected magic "
+            f"{MAGIC2!r}, got {bytes(buf[:4])!r}")
+    hlen, h = _framing(buf, "v2 archive")
+    try:
+        chunks = [ChunkMeta(**c) for c in h["chunks"]]
+        meta = ChunkedMeta(shape=h["shape"], dtype=h["dtype"], eb=h["eb"],
+                           interp=h["interp"], chunks=chunks,
+                           header_end=8 + hlen, total_size=len(buf))
+    except (KeyError, TypeError) as e:
+        raise CorruptArchiveError(f"malformed v2 archive header: {e}") from e
+    for i, cm in enumerate(meta.chunks):
+        _check_extent(cm.offset, cm.size, len(buf), f"chunk {i}")
+        if not 0 <= cm.start <= cm.stop:
+            raise CorruptArchiveError(
+                f"corrupt archive: chunk {i} claims slab rows "
+                f"[{cm.start}, {cm.stop})")
+    return meta
 
 
 class ChunkedArchiveReader:
@@ -229,9 +322,9 @@ class ChunkedArchiveReader:
     cumulative retrieval volume across progressive calls.
     """
 
-    def __init__(self, buf: bytes):
+    def __init__(self, buf: bytes, meta: Optional[ChunkedMeta] = None):
         self.buf = buf
-        self.meta = parse_chunked_meta(buf)
+        self.meta = parse_chunked_meta(buf) if meta is None else meta
         self._view = memoryview(buf)  # zero-copy chunk slicing
         self._readers: Dict[int, ArchiveReader] = {}
 
@@ -247,8 +340,24 @@ class ChunkedArchiveReader:
         return sum(r.bytes_read for r in self._readers.values())
 
 
-def open_reader(buf: bytes):
-    """Version dispatch: v1 -> ArchiveReader, v2 -> ChunkedArchiveReader."""
-    if buf[:4] == MAGIC2:
+def open_reader(buf: bytes, meta=None):
+    """Version dispatch: v1 -> ArchiveReader, v2 -> ChunkedArchiveReader.
+
+    Anything that is not a well-formed archive of either version —
+    unknown magic, truncated framing or data section, undecodable header
+    — raises :class:`CorruptArchiveError` here rather than failing later
+    inside a retrieval.  ``meta`` skips the re-parse when the caller holds
+    the already-validated header of this exact buffer (a new reader is a
+    fresh ``bytes_read`` accounting scope, not a fresh parse).
+    """
+    if meta is not None:
+        cls = (ChunkedArchiveReader if isinstance(meta, ChunkedMeta)
+               else ArchiveReader)
+        return cls(buf, meta=meta)
+    if bytes(buf[:4]) == MAGIC2:
         return ChunkedArchiveReader(buf)
+    if bytes(buf[:4]) != MAGIC:
+        raise CorruptArchiveError(
+            "not an IPComp archive: expected magic "
+            f"{MAGIC!r} or {MAGIC2!r}, got {bytes(buf[:4])!r}")
     return ArchiveReader(buf)

@@ -1,9 +1,13 @@
-"""IPComp public API: compress / retrieve / refine (paper Algorithms 1 & 2).
+"""IPComp legacy surface: compress / retrieve / refine (paper Algorithms 1 & 2).
 
-Compatibility shim: the implementation lives in the ``core/pipeline``
-package (``encode`` / ``decode`` / ``state`` / ``backends`` — see its
-docstring for the module map); this module re-exports the historical
-``core.ipcomp`` surface so existing imports keep working unchanged.
+Compatibility shim twice over: the implementation lives in the
+``core/pipeline`` package (``spec`` / ``encode`` / ``decode`` / ``state``
+/ ``backends`` — see its docstring for the module map), and the
+*supported* public surface is the object API in :mod:`repro.api`
+(``Codec`` / ``Archive`` / ``Fidelity`` / ``ExecPolicy`` /
+``ProgressiveReader``).  This module re-exports the historical
+``core.ipcomp`` names so existing imports keep working unchanged; the
+free functions emit one ``IPCompDeprecationWarning`` per call.
 
 Compression pipeline (Fig. 2):
   x --interpolation predictor--> residuals y_l --quantize--> q_l
@@ -27,9 +31,10 @@ from __future__ import annotations
 
 from .pipeline.backends import CodecBackend, get as get_backend
 from .pipeline.decode import (_retrieve_chunked, decompress, open_archive,
-                              refine, retrieve, split_budget)
+                              read_archive, refine, retrieve, split_budget)
 from .pipeline.encode import (_compress_single, _pack_escapes, chunk_bounds,
-                              compress)
+                              compress, encode_array)
+from .pipeline.spec import ExecPolicy, Fidelity, IPCompDeprecationWarning
 from .pipeline.state import (ChunkedRetrievalState, RetrievalState,
                              _unpack_escapes, initial_state)
 
@@ -43,4 +48,6 @@ __all__ = [
     "compress", "chunk_bounds", "decompress", "retrieve", "refine",
     "open_archive", "split_budget", "RetrievalState",
     "ChunkedRetrievalState", "CodecBackend",
+    "encode_array", "read_archive", "Fidelity", "ExecPolicy",
+    "IPCompDeprecationWarning",
 ]

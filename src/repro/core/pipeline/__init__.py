@@ -1,9 +1,16 @@
 """IPComp codec pipeline: compress / retrieve / refine as an explicit package.
 
-What used to be one monolithic ``core/ipcomp.py`` is four modules with one
-seam — the backend registry — between the algorithm and the substrate that
-executes it:
+What used to be one monolithic ``core/ipcomp.py`` is five modules with two
+seams — the backend registry between the algorithm and the substrate that
+executes it, and the spec types between the public API and the pipeline:
 
+  ``spec.py``
+      :class:`Fidelity` (sum type over the four retrieval targets) and
+      :class:`ExecPolicy` / :class:`ExecContext` (the bits-invariant
+      execution knobs, validated once) — the native currency of the
+      pipeline and the vocabulary of the object API (``repro.api``).
+      Also home of :class:`IPCompDeprecationWarning`, the category every
+      legacy free-function shim emits.
   ``backends.py``
       :class:`CodecBackend` registry.  Bundles the four hot-path primitives
       (decorrelate, encode_level, decode_level, reconstruct) per substrate;
@@ -11,33 +18,42 @@ executes it:
       / ``interp_recon`` / ``bitplane_pack`` / ``bitplane_unpack``).  All
       primitives are bit-identical across backends.
   ``encode.py``
-      ``compress`` (Fig. 2 pipeline) + ``chunk_bounds`` slab splitting for
-      the v2 container + the escape-channel packer.
+      ``encode_array`` (Fig. 2 pipeline, policy-native) + ``chunk_bounds``
+      slab splitting for the v2 container + the escape-channel packer;
+      ``compress`` is the legacy shim.
   ``decode.py``
-      ``retrieve`` / ``refine`` / ``decompress`` (§5, Algorithms 1–2):
+      ``read_archive`` (§5, Algorithms 1–2, Fidelity/ExecPolicy-native):
       DP-planned progressive loading, shape-group scheduled (batched
       and/or mesh-sharded where the backend supports it) per-chunk
       dispatch for v2 archives, largest-remainder byte-budget splitting
       (``split_budget``; refines split only the unspent remainder via
-      ``refine_budgets``).
+      ``refine_budgets``); ``retrieve`` / ``refine`` / ``decompress`` are
+      the legacy shims.
   ``state.py``
       :class:`RetrievalState` / :class:`ChunkedRetrievalState` and the
       Algorithm 2 delta-cascade steps (``load_level_deltas``,
-      ``push_delta``, ``update_achieved_bound``, ``initial_state``).
+      ``push_delta``, ``update_achieved_bound``, ``initial_state``),
+      batched variants taking the call's :class:`~.spec.ExecContext`.
 
-``core.ipcomp`` remains as a thin re-export of this package, so existing
-imports keep working unchanged.
+``core.ipcomp`` remains as a thin re-export of this package, and
+``repro.api`` builds the object surface (Codec / Archive /
+ProgressiveReader) on the native entries, so both generations of imports
+keep working unchanged.
 """
 from .backends import AUTO, JAX, NUMPY, CodecBackend, get, names, register
-from .decode import (decompress, open_archive, refine, refine_budgets,
-                     retrieve, split_budget)
-from .encode import chunk_bounds, compress, shape_groups
+from .decode import (decompress, open_archive, read_archive, refine,
+                     refine_budgets, retrieve, split_budget)
+from .encode import chunk_bounds, compress, encode_array, shape_groups
+from .spec import (DEFAULT_POLICY, ExecContext, ExecPolicy, Fidelity,
+                   IPCompDeprecationWarning)
 from .state import ChunkedRetrievalState, RetrievalState
 
 __all__ = [
     "AUTO", "JAX", "NUMPY", "CodecBackend", "get", "names", "register",
-    "compress", "chunk_bounds", "shape_groups",
-    "retrieve", "refine", "decompress", "open_archive", "split_budget",
-    "refine_budgets",
+    "compress", "encode_array", "chunk_bounds", "shape_groups",
+    "retrieve", "refine", "decompress", "read_archive", "open_archive",
+    "split_budget", "refine_budgets",
+    "Fidelity", "ExecPolicy", "ExecContext", "DEFAULT_POLICY",
+    "IPCompDeprecationWarning",
     "RetrievalState", "ChunkedRetrievalState",
 ]

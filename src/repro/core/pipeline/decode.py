@@ -1,17 +1,24 @@
 """Retrieval side of the codec pipeline (paper §5, Algorithms 1–2).
 
-The DP loader plans the minimum bitplane set for the requested error bound
-/ bitrate; a single reconstruction pass produces the output (no multi-pass
-residual decompression).  ``refine`` continues a previous retrieval: it
-loads only the *additional* bitplanes and pushes a linear delta cascade on
-top of the previous reconstruction (the state machinery lives in
-``pipeline.state``).
+The DP loader plans the minimum bitplane set for the requested
+:class:`~.spec.Fidelity`; a single reconstruction pass produces the output
+(no multi-pass residual decompression).  A later call with the same state
+*refines*: it loads only the *additional* bitplanes and pushes a linear
+delta cascade on top of the previous reconstruction (the state machinery
+lives in ``pipeline.state``).
 
-Like the encode side, every hot step — plane decode and the reconstruction
-sweep — goes through the resolved :class:`~.backends.CodecBackend`, so
-``backend="jax"`` runs retrieval on the Pallas kernel pair
-(``interp_recon`` + ``bitplane_unpack``) with bit-identical output to the
-numpy reference; ``backend="auto"`` picks jax on TPU only.
+The native entry point is :func:`read_archive` — (reader | bytes,
+:class:`~.spec.Fidelity`, :class:`~.spec.ExecPolicy`, optional state) —
+which ``repro.api.ProgressiveReader`` sessions drive; the historical
+``retrieve`` / ``refine`` / ``decompress`` free functions are one-screen
+compatibility shims over it.
+
+Like the encode side, every hot step — plane decode and the
+reconstruction sweep — goes through the policy's resolved
+:class:`~.backends.CodecBackend`, so ``ExecPolicy(backend="jax")`` runs
+retrieval on the Pallas kernel pair (``interp_recon`` +
+``bitplane_unpack``) with bit-identical output to the numpy reference;
+``"auto"`` picks jax on TPU only.
 
 For chunked (v2) archives every plan/refine step runs per chunk (a
 per-chunk L_inf bound implies the global one) and ``bytes_read``
@@ -23,24 +30,26 @@ the bytes it already read and only the *remaining* budget is split
 (:func:`refine_budgets`), so no chunk is starved for having consumed its
 share earlier.
 
-Execution over the chunk grid is scheduled in equal-shape groups: when the
-backend ships batched primitives (``decode_level_batch`` /
+Execution over the chunk grid is scheduled in equal-shape groups: when
+the backend ships batched primitives (``decode_level_batch`` /
 ``reconstruct_batch``), each group's plane decodes and reconstruction
 sweeps run as ONE vmapped kernel dispatch per phase / per (level, prefix)
-key instead of one per chunk — per-chunk plans, states and byte accounting
-are untouched, and ``refine`` still loads only each chunk's missing planes
-(``batch_chunks=False`` forces the per-chunk loop; outputs are
-bit-identical either way).
+key instead of one per chunk — per-chunk plans, states and byte
+accounting are untouched, and a refine still loads only each chunk's
+missing planes (``ExecPolicy(batch_chunks=False)`` forces the per-chunk
+loop; outputs are bit-identical either way).
 
-``shard=`` ("auto" | a 1-D mesh | None, same contract as ``compress``)
-additionally splits each group's stack across a device mesh through the
-backend's ``*_sharded`` primitives: every device decodes and reconstructs
-its local chunk shard, collective-free, while the host keeps all plane
-fetching, DP planning, and progressive accounting per chunk — so
-``bytes_read``, plane prefixes, and the delta cascade merge back into
-:class:`ChunkedRetrievalState` exactly as on a single device, and the
-reconstruction bits never depend on the mesh (``docs/architecture.md``
-walks the full dataflow; ``tests/test_sharded_codec.py`` pins parity).
+``ExecPolicy(shard=...)`` ("auto" | a 1-D mesh | None, same contract as
+the encode side) additionally splits each group's stack across a device
+mesh through the backend's ``*_sharded`` primitives: every device decodes
+and reconstructs its local chunk shard, collective-free, while the host
+keeps all plane fetching, DP planning, and progressive accounting per
+chunk — so ``bytes_read``, plane prefixes, and the delta cascade merge
+back into :class:`ChunkedRetrievalState` exactly as on a single device,
+and the reconstruction bits never depend on the policy
+(``docs/architecture.md`` walks the full dataflow;
+``tests/test_sharded_codec.py`` and ``tests/test_policy_matrix.py`` pin
+the invariance).
 """
 from __future__ import annotations
 
@@ -50,12 +59,13 @@ import numpy as np
 
 from .. import container, loader
 from ..container import ArchiveReader, ChunkedArchiveReader
-from . import backends
-from .encode import group_cap, resolve_exec_mesh, shape_groups
+from . import spec
+from .spec import ExecPolicy, Fidelity
 from .state import (ChunkedRetrievalState, RetrievalState, initial_state,
                     initial_state_batch, load_level_deltas,
                     load_level_deltas_batch, push_delta, push_delta_batch,
                     update_achieved_bound)
+from .encode import group_cap, shape_groups
 
 
 def open_archive(buf: bytes):
@@ -63,16 +73,54 @@ def open_archive(buf: bytes):
     return container.open_reader(buf)
 
 
-def _check_one_target(error_bound, max_bytes, bitrate) -> None:
-    """The docstring contract is "exactly one of" — silently preferring
-    ``error_bound`` when several are passed hid caller bugs, so
-    over-specification is now a :class:`ValueError` (v1 and chunked)."""
-    given = [name for name, v in (("error_bound", error_bound),
-                                  ("max_bytes", max_bytes),
-                                  ("bitrate", bitrate)) if v is not None]
-    if len(given) > 1:
-        raise ValueError("pass at most one of error_bound/max_bytes/bitrate "
-                         f"(got {', '.join(given)})")
+def _plan(meta, fidelity: Fidelity, propagation: str) -> loader.LoadPlan:
+    """Plan selection is a total function of the Fidelity sum type —
+    no kwarg precedence left to get wrong."""
+    if fidelity.kind == spec.ERROR_BOUND:
+        return loader.plan_error_mode(meta, fidelity.value, propagation)
+    budget = fidelity.target_bytes(meta.n_elements)
+    if budget is not None:
+        return loader.plan_bitrate_mode(meta, budget, propagation)
+    return loader.plan_full(meta)
+
+
+def read_archive(buf_or_reader, fidelity: Optional[Fidelity] = None,
+                 policy: Optional[ExecPolicy] = None,
+                 propagation: str = loader.SAFE,
+                 state: Optional[RetrievalState] = None,
+                 ) -> Tuple[np.ndarray, RetrievalState]:
+    """Single-pass progressive retrieval (native entry).
+
+    ``fidelity`` selects the plan (default: :meth:`Fidelity.full`);
+    ``policy`` selects the execution substrate and parallelism — every
+    policy reconstructs bit-identical arrays, and the state is
+    policy-agnostic, so successive calls may switch backend, batching, or
+    mesh freely.  Pass ``state`` from a previous call to refine
+    incrementally (Algorithm 2) — only missing bitplanes are fetched.
+
+    Accepts v1 and v2 (chunked) archives / readers transparently.
+    """
+    fidelity = Fidelity.full() if fidelity is None else fidelity
+    policy = spec.DEFAULT_POLICY if policy is None else policy
+    if isinstance(buf_or_reader, (ArchiveReader, ChunkedArchiveReader)):
+        reader = buf_or_reader
+    else:
+        reader = container.open_reader(buf_or_reader)
+    if isinstance(reader, ChunkedArchiveReader):
+        return _retrieve_chunked(reader, fidelity, propagation, state,
+                                 policy)
+    # v1: no chunk grid to shard — bind validates (explicit mesh raises)
+    ctx = policy.bind(chunked=False, encode=False)
+    m = reader.meta
+    plan = _plan(m, fidelity, propagation)
+    if state is None:
+        state = initial_state(reader, ctx.bk)
+    delta_y, any_new = load_level_deltas(state, plan.keep_planes, ctx.bk)
+    if any_new:
+        push_delta(state, delta_y, ctx.bk)
+    update_achieved_bound(state, propagation)
+    out = state.xhat.astype(np.dtype(m.dtype))
+    return out, state
 
 
 def retrieve(buf_or_reader, error_bound: Optional[float] = None,
@@ -84,55 +132,22 @@ def retrieve(buf_or_reader, error_bound: Optional[float] = None,
              batch_chunks: Optional[bool] = None,
              shard=None,
              ) -> Tuple[np.ndarray, RetrievalState]:
-    """Single-pass progressive retrieval.
+    """Legacy free function; shim over :func:`read_archive`.
 
+    Prefer ``repro.api``: ``Archive(buf).open(policy).read(fidelity)``.
     Exactly one of (error_bound, max_bytes, bitrate) selects the plan
-    (passing several raises ValueError); None of them = full-precision.
-    Pass ``state`` from a previous call to refine incrementally
-    (Algorithm 2) — only missing bitplanes are fetched.  ``backend``
-    selects the decode substrate ("numpy" | "jax" | "auto"); every backend
-    reconstructs bit-identical arrays, and the state is backend-agnostic,
-    so successive calls may even switch backends.
-
-    Accepts v1 and v2 (chunked) archives / readers transparently; for v2,
-    ``batch_chunks`` controls equal-shape chunk batching (None/True =
-    batch when the backend has batched primitives, False = per-chunk
-    loop) and ``shard`` (None | "auto" | a 1-D mesh — the ``compress``
-    contract) splits each group's stack across a device mesh.  Neither
-    ever changes the reconstruction bits, and the state stays mesh- and
-    backend-agnostic: a sharded retrieval can be refined unsharded, and
-    vice versa.
+    (passing several raises ValueError; they coerce through
+    :meth:`Fidelity.from_targets`); none of them = full precision.
+    (backend, batch_chunks, shard) form the :class:`~.spec.ExecPolicy`.
+    Behavior and bits are unchanged.
     """
-    _check_one_target(error_bound, max_bytes, bitrate)
-    if isinstance(buf_or_reader, (ArchiveReader, ChunkedArchiveReader)):
-        reader = buf_or_reader
-    else:
-        reader = container.open_reader(buf_or_reader)
-    if isinstance(reader, ChunkedArchiveReader):
-        return _retrieve_chunked(reader, error_bound, max_bytes, bitrate,
-                                 propagation, state, backend, batch_chunks,
-                                 shard)
-    # v1: no chunk grid to shard — validates (explicit mesh raises)
-    resolve_exec_mesh(shard, False, chunked=False, batch_chunks=batch_chunks)
-    bk = backends.get(backend)
-    m = reader.meta
-    if bitrate is not None:
-        max_bytes = int(bitrate * m.n_elements / 8)
-    if error_bound is not None:
-        plan = loader.plan_error_mode(m, error_bound, propagation)
-    elif max_bytes is not None:
-        plan = loader.plan_bitrate_mode(m, max_bytes, propagation)
-    else:
-        plan = loader.plan_full(m)
-
-    if state is None:
-        state = initial_state(reader, bk)
-    delta_y, any_new = load_level_deltas(state, plan.keep_planes, bk)
-    if any_new:
-        push_delta(state, delta_y, bk)
-    update_achieved_bound(state, propagation)
-    out = state.xhat.astype(np.dtype(m.dtype))
-    return out, state
+    spec.warn_legacy("retrieve()", "Archive.open(policy).read(fidelity)")
+    return read_archive(buf_or_reader,
+                        Fidelity.from_targets(error_bound, max_bytes,
+                                              bitrate),
+                        ExecPolicy(backend=backend,
+                                   batch_chunks=batch_chunks, shard=shard),
+                        propagation=propagation, state=state)
 
 
 def refine(state, error_bound: Optional[float] = None,
@@ -143,24 +158,39 @@ def refine(state, error_bound: Optional[float] = None,
            batch_chunks: Optional[bool] = None,
            shard=None,
            ) -> Tuple[np.ndarray, RetrievalState]:
-    """Algorithm 2 as a first-class call: continue a previous retrieval.
+    """Legacy free function; shim over :func:`read_archive` with a state.
 
-    ``refine(state, error_bound=E)`` is ``retrieve(state.reader, ...,
-    state=state)`` — only the bitplanes the tighter target adds are fetched
-    and pushed through the delta cascade.  Works on v1 and chunked states;
-    at most one of (error_bound, max_bytes, bitrate) may be given.
+    Prefer ``repro.api``: ``ProgressiveReader.refine(fidelity)`` on the
+    session returned by ``Archive.open``.  Only the bitplanes the tighter
+    target adds are fetched and pushed through the delta cascade.  Works
+    on v1 and chunked states; at most one of (error_bound, max_bytes,
+    bitrate) may be given.
     """
-    return retrieve(state.reader, error_bound=error_bound,
-                    max_bytes=max_bytes, bitrate=bitrate,
-                    propagation=propagation, state=state, backend=backend,
-                    batch_chunks=batch_chunks, shard=shard)
+    spec.warn_legacy("refine()", "ProgressiveReader.refine(fidelity)")
+    return read_archive(state.reader,
+                        Fidelity.from_targets(error_bound, max_bytes,
+                                              bitrate),
+                        ExecPolicy(backend=backend,
+                                   batch_chunks=batch_chunks, shard=shard),
+                        propagation=propagation, state=state)
 
 
 def decompress(buf: bytes, backend: Optional[str] = "numpy",
-               shard=None) -> np.ndarray:
-    """Full-precision decompression (error <= eb everywhere)."""
-    out, _ = retrieve(buf, backend=backend, shard=shard)
-    return out
+               shard=None, batch_chunks: Optional[bool] = None) -> np.ndarray:
+    """Legacy free function: full-precision decompression (error <= eb
+    everywhere).
+
+    Prefer ``repro.api``: ``Archive(buf).open(policy).read()``.  Accepts
+    the same execution kwargs as ``retrieve`` — including
+    ``batch_chunks``, which it historically dropped — and delegates to
+    the object API, so the semantics cannot drift again.
+    """
+    spec.warn_legacy("decompress()",
+                     "Archive.open(policy).read(Fidelity.full())")
+    from ... import api
+    policy = ExecPolicy(backend=backend, batch_chunks=batch_chunks,
+                        shard=shard)
+    return api.Archive(buf).open(policy).read(Fidelity.full())
 
 
 def split_budget(total: int, weights: Sequence[int]) -> List[int]:
@@ -217,67 +247,60 @@ def refine_budgets(total: int, weights: Sequence[int],
             for s, extra in zip(spent, split_budget(total - used, weights))]
 
 
-def _retrieve_chunked(reader: ChunkedArchiveReader,
-                      error_bound: Optional[float],
-                      max_bytes: Optional[int],
-                      bitrate: Optional[float],
+def _retrieve_chunked(reader: ChunkedArchiveReader, fidelity: Fidelity,
                       propagation: str,
                       state: Optional[ChunkedRetrievalState],
-                      backend: Optional[str] = "numpy",
-                      batch_chunks: Optional[bool] = None,
-                      shard=None,
+                      policy: ExecPolicy,
                       ) -> Tuple[np.ndarray, ChunkedRetrievalState]:
     """Shape-group scheduled per-chunk plan + reconstruct; the global bound
     is the chunk max.
 
-    Error mode passes ``error_bound`` straight through (each chunk holding
+    Error mode passes the bound straight through (each chunk holding
     L_inf <= E makes the assembled array hold it).  Byte/bitrate budgets
     are split across chunks proportionally to element count — keeping the
     loaded bit-per-point uniform, the same objective the v1 DP optimizes —
     with the integer remainder distributed largest-fraction-first so the
-    chunk budgets sum to exactly ``max_bytes``; refines split only the
+    chunk budgets sum to exactly the request; refines split only the
     budget not already spent (:func:`refine_budgets`).  Equal-shape groups
     run batched when the backend supports it (one kernel dispatch per
-    phase for the whole group) and, with ``shard``, mesh-sharded (each
-    device handles its local chunk shard, groups capped at
-    ``MAX_BATCH_CHUNKS`` per device); singleton groups and batch-less
-    backends take the per-chunk path.  All paths produce bit-identical
-    states.
+    phase for the whole group) and, with a mesh in the policy,
+    mesh-sharded (each device handles its local chunk shard, groups
+    capped at ``MAX_BATCH_CHUNKS`` per device); singleton groups and
+    batch-less backends take the per-chunk path.  All paths produce
+    bit-identical states.
     """
     m = reader.meta
-    bk = backends.get(backend)
-    mesh = resolve_exec_mesh(shard, bk.shards_decode, chunked=True,
-                             batch_chunks=batch_chunks)
+    ctx = policy.bind(chunked=True, encode=False)
     if state is None:
         state = ChunkedRetrievalState(reader=reader,
                                       chunk_states=[None] * len(m.chunks))
-    if bitrate is not None:
-        max_bytes = int(bitrate * m.n_elements / 8)
     budgets = None
-    if error_bound is None and max_bytes is not None:
+    total_bytes = fidelity.target_bytes(m.n_elements)
+    if total_bytes is not None:
         sub_ns = [reader.chunk_reader(i).meta.n_elements
                   for i in range(len(m.chunks))]
         spent = [cs.bytes_read if cs is not None else 0
                  for cs in state.chunk_states]
-        budgets = refine_budgets(max_bytes, sub_ns, spent)
-    use_batch = batch_chunks is not False and (bk.batches_decode
-                                               or mesh is not None)
+        budgets = refine_budgets(total_bytes, sub_ns, spent)
+    # per-chunk scalar fallback: v1 sub-archives, so the mesh (which only
+    # applies to the chunk grid as a whole) is stripped from the policy
+    sub_policy = policy.unsharded()
     for idxs in shape_groups([cm.stop - cm.start for cm in m.chunks],
-                             max_group=group_cap(mesh)):
-        if use_batch and len(idxs) > 1:
-            _retrieve_group(reader, idxs, error_bound, budgets, propagation,
-                            state, bk, mesh)
+                             max_group=group_cap(ctx.mesh)):
+        if ctx.batch_decode and len(idxs) > 1:
+            _retrieve_group(reader, idxs, fidelity, budgets, propagation,
+                            state, ctx)
         else:
             for i in idxs:
-                kw = {}
-                if error_bound is not None:
-                    kw["error_bound"] = error_bound
+                if fidelity.kind == spec.ERROR_BOUND:
+                    sub_fid = fidelity
                 elif budgets is not None:
-                    kw["max_bytes"] = budgets[i]
-                _, st = retrieve(reader.chunk_reader(i),
-                                 propagation=propagation,
-                                 state=state.chunk_states[i],
-                                 backend=backend, **kw)
+                    sub_fid = Fidelity.max_bytes(budgets[i])
+                else:
+                    sub_fid = Fidelity.full()
+                _, st = read_archive(reader.chunk_reader(i), sub_fid,
+                                     sub_policy, propagation=propagation,
+                                     state=state.chunk_states[i])
                 state.chunk_states[i] = st
     out = np.empty(m.shape, np.dtype(m.dtype))
     for i, cm in enumerate(m.chunks):
@@ -289,26 +312,25 @@ def _retrieve_chunked(reader: ChunkedArchiveReader,
 
 
 def _retrieve_group(reader: ChunkedArchiveReader, idxs: List[int],
-                    error_bound: Optional[float],
-                    budgets: Optional[List[int]], propagation: str,
-                    state: ChunkedRetrievalState,
-                    bk: backends.CodecBackend, mesh=None) -> None:
+                    fidelity: Fidelity, budgets: Optional[List[int]],
+                    propagation: str, state: ChunkedRetrievalState,
+                    ctx: spec.ExecContext) -> None:
     """One equal-shape chunk group through the batched retrieval steps.
 
-    Mirrors the scalar ``retrieve`` body per chunk — plan (host DP, each
-    chunk's own tables), initial state if fresh, delta load, delta push,
-    achieved-bound update — with the reconstructions and plane decodes
-    stacked across the group (and, with ``mesh``, that stack split across
-    the devices of the 1-D codec mesh).  Per-chunk states and reader
-    accounting come out identical to the loop; only the dispatch count
-    (and its device fan-out) changes.
+    Mirrors the scalar ``read_archive`` body per chunk — plan (host DP,
+    each chunk's own tables), initial state if fresh, delta load, delta
+    push, achieved-bound update — with the reconstructions and plane
+    decodes stacked across the group (and, when the context carries a
+    mesh, that stack split across the devices of the 1-D codec mesh).
+    Per-chunk states and reader accounting come out identical to the
+    loop; only the dispatch count (and its device fan-out) changes.
     """
     subs = [reader.chunk_reader(i) for i in idxs]
     keeps = []
     for i, sub in zip(idxs, subs):
         sm = sub.meta
-        if error_bound is not None:
-            plan = loader.plan_error_mode(sm, error_bound, propagation)
+        if fidelity.kind == spec.ERROR_BOUND:
+            plan = loader.plan_error_mode(sm, fidelity.value, propagation)
         elif budgets is not None:
             plan = loader.plan_bitrate_mode(sm, budgets[i], propagation)
         else:
@@ -316,15 +338,14 @@ def _retrieve_group(reader: ChunkedArchiveReader, idxs: List[int],
         keeps.append(plan.keep_planes)
     fresh = [p for p, i in enumerate(idxs) if state.chunk_states[i] is None]
     if fresh:
-        sts = initial_state_batch([subs[p] for p in fresh], bk, mesh)
+        sts = initial_state_batch([subs[p] for p in fresh], ctx)
         for p, st in zip(fresh, sts):
             state.chunk_states[idxs[p]] = st
     group_states = [state.chunk_states[i] for i in idxs]
-    delta_ys, any_new = load_level_deltas_batch(group_states, keeps, bk,
-                                                mesh)
+    delta_ys, any_new = load_level_deltas_batch(group_states, keeps, ctx)
     live = [p for p, new in enumerate(any_new) if new]
     if live:
         push_delta_batch([group_states[p] for p in live],
-                         [delta_ys[p] for p in live], bk, mesh)
+                         [delta_ys[p] for p in live], ctx)
     for st in group_states:
         update_achieved_bound(st, propagation)

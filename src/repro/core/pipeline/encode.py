@@ -46,7 +46,51 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .. import container, interpolation, negabinary
-from . import backends
+from . import backends, spec
+from .spec import ExecPolicy
+
+# historical import site — tests and callers import the ``shard=`` policy
+# from here; the logic itself lives with ExecPolicy in ``spec.py``
+resolve_exec_mesh = spec.resolve_exec_mesh
+
+
+def encode_array(x: np.ndarray, eb: float,
+                 interp: str = interpolation.CUBIC, relative: bool = False,
+                 chunk_elems: Optional[int] = None,
+                 policy: Optional[ExecPolicy] = None) -> bytes:
+    """Compress ``x`` with point-wise error bound ``eb`` (native entry).
+
+    This is the policy-native encoder under ``repro.api.Codec.compress``:
+    (eb, interp, relative, chunk_elems) are the *bytes-affecting* spec —
+    the :class:`~.spec.ExecPolicy` only selects how the work executes
+    (backend substrate, chunk batching, mesh sharding) and never changes
+    the archive bytes.  ``relative=True`` interprets eb as a fraction of
+    the value range.  ``chunk_elems`` switches to the chunked v2 container
+    with ~chunk_elems-sized independent slabs.
+    """
+    policy = spec.DEFAULT_POLICY if policy is None else policy
+    x = np.asarray(x)
+    if relative:
+        eb = eb * (float(x.max()) - float(x.min()) or 1.0)
+    if eb <= 0:
+        raise ValueError("error bound must be positive")
+    ctx = policy.bind(chunked=chunk_elems is not None, encode=True)
+    if chunk_elems is None:
+        return _compress_single(x, eb, interp, ctx.bk)
+    bounds = chunk_bounds(x.shape, chunk_elems)
+    bufs: List[Optional[bytes]] = [None] * len(bounds)
+    for idxs in shape_groups([b - a for a, b in bounds],
+                             max_group=group_cap(ctx.mesh)):
+        if ctx.batch_encode and len(idxs) > 1:
+            xs = np.stack([x[bounds[i][0]: bounds[i][1]] for i in idxs])
+            for i, buf in zip(idxs, _compress_batch(xs, eb, interp, ctx)):
+                bufs[i] = buf
+        else:
+            for i in idxs:
+                a, b = bounds[i]
+                bufs[i] = _compress_single(x[a:b], eb, interp, ctx.bk)
+    return container.write_chunked_archive(x.shape, x.dtype, eb, interp,
+                                           bounds, bufs)
 
 
 def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
@@ -54,87 +98,19 @@ def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,
              chunk_elems: Optional[int] = None,
              batch_chunks: Optional[bool] = None,
              shard=None) -> bytes:
-    """Compress ``x`` with point-wise error bound ``eb``.
+    """Legacy free function; shim over :func:`encode_array`.
 
-    ``relative=True`` interprets eb as a fraction of the value range.
-    ``backend`` is "numpy" | "jax" | "auto"/None (jax on TPU where the
-    kernels compile, numpy elsewhere); both emit identical bytes.
-    ``chunk_elems`` switches to the chunked v2 container with
-    ~chunk_elems-sized independent slabs.  ``batch_chunks`` controls the
-    equal-shape chunk batching (None/True = batch when the backend has
-    batched primitives, False = always loop per chunk); the archive bytes
-    do not depend on the choice.  ``shard`` runs the chunk grid
-    data-parallel over a 1-D device mesh (None = off, "auto" = all local
-    devices when more than one, or an explicit ``jax.sharding.Mesh``);
-    sharding requires the stacked scheduler (so it is incompatible with
-    ``batch_chunks=False``) and a backend with sharded primitives (others
-    fall back to their unsharded path).  Bytes never depend on ``shard``.
+    Prefer ``repro.api.Codec(eb, ...).compress(x, policy=ExecPolicy(...))``
+    — the kwargs map 1:1: (eb, interp, relative, chunk_elems) are the
+    :class:`~repro.api.Codec` spec, (backend, batch_chunks, shard) the
+    :class:`~.spec.ExecPolicy`.  Behavior and bytes are unchanged.
     """
-    x = np.asarray(x)
-    if relative:
-        eb = eb * (float(x.max()) - float(x.min()) or 1.0)
-    if eb <= 0:
-        raise ValueError("error bound must be positive")
-    bk = backends.get(backend)
-    mesh = resolve_exec_mesh(shard, bk.shards_encode,
-                             chunked=chunk_elems is not None,
-                             batch_chunks=batch_chunks)
-    if chunk_elems is None:
-        return _compress_single(x, eb, interp, bk)
-    bounds = chunk_bounds(x.shape, chunk_elems)
-    use_batch = batch_chunks is not False and (bk.batches_encode
-                                               or mesh is not None)
-    bufs: List[Optional[bytes]] = [None] * len(bounds)
-    for idxs in shape_groups([b - a for a, b in bounds],
-                             max_group=group_cap(mesh)):
-        if use_batch and len(idxs) > 1:
-            xs = np.stack([x[bounds[i][0]: bounds[i][1]] for i in idxs])
-            for i, buf in zip(idxs,
-                              _compress_batch(xs, eb, interp, bk, mesh)):
-                bufs[i] = buf
-        else:
-            for i in idxs:
-                a, b = bounds[i]
-                bufs[i] = _compress_single(x[a:b], eb, interp, bk)
-    return container.write_chunked_archive(x.shape, x.dtype, eb, interp,
-                                           bounds, bufs)
-
-
-def resolve_exec_mesh(shard, backend_shards: bool, *, chunked: bool,
-                      batch_chunks: Optional[bool]):
-    """``shard=`` policy shared by both codec directions -> mesh or None.
-
-    Delegates mesh resolution to ``parallel.codec_mesh.resolve_shard``
-    ("auto" -> all local devices when >1, Mesh -> validated 1-D), then
-    applies the pipeline rules: sharding needs a chunk grid and the
-    stacked scheduler, so an *explicit* mesh combined with an unchunked
-    archive or ``batch_chunks=False`` is a contradiction and raises, while
-    ``"auto"`` quietly stays unsharded in those cases.  A backend without
-    sharded primitives (the numpy reference) always falls back to its
-    unsharded path — mirroring how missing ``*_batch`` slots fall back to
-    the per-chunk loop.
-    """
-    if shard is None or shard is False:
-        return None
-    from ...parallel import codec_mesh
-
-    mesh = codec_mesh.resolve_shard(shard)
-    if mesh is None:
-        return None
-    explicit = shard != codec_mesh.AUTO
-    if not chunked:
-        if explicit:
-            raise ValueError("sharded execution runs over the chunk grid: "
-                             "pass chunk_elems= (v1 archives have no "
-                             "chunks to place on the mesh)")
-        return None
-    if batch_chunks is False:
-        if explicit:
-            raise ValueError("shard= needs the stacked shape-group "
-                             "scheduler; it cannot be combined with "
-                             "batch_chunks=False")
-        return None
-    return mesh if backend_shards else None
+    spec.warn_legacy("compress()", "Codec(eb, ...).compress(x, policy=...)")
+    return encode_array(x, eb, interp=interp, relative=relative,
+                        chunk_elems=chunk_elems,
+                        policy=ExecPolicy(backend=backend,
+                                          batch_chunks=batch_chunks,
+                                          shard=shard))
 
 
 def group_cap(mesh) -> int:
@@ -219,7 +195,7 @@ def _compress_single(x: np.ndarray, eb: float, interp: str,
 
 
 def _compress_batch(xs: np.ndarray, eb: float, interp: str,
-                    bk: backends.CodecBackend, mesh=None) -> List[bytes]:
+                    ctx: spec.ExecContext) -> List[bytes]:
     """B equal-shape chunks (stacked on axis 0) -> B v1 archives.
 
     Exactly ``_compress_single`` per chunk, but the sweep and the per-level
@@ -230,6 +206,7 @@ def _compress_batch(xs: np.ndarray, eb: float, interp: str,
     delta tables, escapes) is still derived from that chunk's own streams,
     so the archives are byte-identical to the per-chunk loop either way.
     """
+    bk, mesh = ctx.bk, ctx.mesh
     B = xs.shape[0]
     shape, dtype = xs.shape[1:], xs.dtype
     L = interpolation.num_levels(shape)

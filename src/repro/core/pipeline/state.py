@@ -32,6 +32,7 @@ import numpy as np
 from .. import loader, negabinary
 from ..container import ArchiveReader, ChunkedArchiveReader
 from .backends import CodecBackend
+from .spec import ExecContext
 
 
 @dataclass
@@ -157,31 +158,34 @@ def update_achieved_bound(state: RetrievalState, propagation: str) -> None:
 # the batch axis is an execution detail).  Backends without batched slots
 # fall back to the scalar loop transparently.
 #
-# Each helper also takes an optional 1-D codec ``mesh``: the same stack is
-# then run through the backend's ``*_sharded`` primitives, which split the
-# group across the mesh devices (``parallel.codec_mesh``).  Shard-local
-# results come back as ordinary per-chunk streams, so the merge into
-# per-chunk ``RetrievalState``s — and from there into
-# ``ChunkedRetrievalState``'s aggregated ``bytes_read``/``err_bound`` — is
-# byte-for-byte the single-device merge; nothing in the state records
-# which mesh (if any) produced it, which is what lets a sharded retrieval
-# be refined unsharded and vice versa.
+# Each helper takes the call's resolved :class:`~.spec.ExecContext` —
+# backend + optional 1-D codec mesh: with a mesh, the same stack is run
+# through the backend's ``*_sharded`` primitives, which split the group
+# across the mesh devices (``parallel.codec_mesh``).  Shard-local results
+# come back as ordinary per-chunk streams, so the merge into per-chunk
+# ``RetrievalState``s — and from there into ``ChunkedRetrievalState``'s
+# aggregated ``bytes_read``/``err_bound`` — is byte-for-byte the
+# single-device merge; nothing in the state records which policy (if any)
+# produced it, which is what lets a sharded retrieval be refined
+# unsharded and vice versa.
 
-def _stack_reconstruct(bk: CodecBackend, mesh, shape, interp, anchors, yhat,
+def _stack_reconstruct(ctx: ExecContext, shape, interp, anchors, yhat,
                        overrides):
     """Group reconstruct through the sharded slot when a mesh is active,
     the batched slot otherwise (callers have already ruled out B == 1)."""
-    if mesh is not None and bk.reconstruct_sharded is not None:
-        return bk.reconstruct_sharded(shape, interp, anchors, yhat, mesh,
-                                      overrides=overrides)
+    bk = ctx.bk
+    if ctx.mesh is not None and bk.reconstruct_sharded is not None:
+        return bk.reconstruct_sharded(shape, interp, anchors, yhat,
+                                      ctx.mesh, overrides=overrides)
     return bk.reconstruct_batch(shape, interp, anchors, yhat,
                                 overrides=overrides)
 
 
-def initial_state_batch(readers: List[ArchiveReader], bk: CodecBackend,
-                        mesh=None) -> List[RetrievalState]:
+def initial_state_batch(readers: List[ArchiveReader],
+                        ctx: ExecContext) -> List[RetrievalState]:
     """Coarsest approximation for B equal-shape chunks: one batched
     (optionally mesh-sharded) reconstruct builds every initial ``xhat``."""
+    bk = ctx.bk
     if ((bk.reconstruct_batch is None and bk.reconstruct_sharded is None)
             or len(readers) == 1):
         return [initial_state(r, bk) for r in readers]
@@ -190,7 +194,7 @@ def initial_state_batch(readers: List[ArchiveReader], bk: CodecBackend,
     yhat = [np.zeros((len(readers), lv.n), np.float64) for lv in m0.levels]
     overrides = [[_unpack_escapes(r.escapes(li))
                   for li in range(len(r.meta.levels))] for r in readers]
-    xhat = _stack_reconstruct(bk, mesh, m0.shape, m0.interp, anchors, yhat,
+    xhat = _stack_reconstruct(ctx, m0.shape, m0.interp, anchors, yhat,
                               overrides)
     states = []
     for b, r in enumerate(readers):
@@ -209,7 +213,7 @@ def initial_state_batch(readers: List[ArchiveReader], bk: CodecBackend,
 
 def load_level_deltas_batch(states: List[RetrievalState],
                             keep_planes_list: List[List[int]],
-                            bk: CodecBackend, mesh=None,
+                            ctx: ExecContext,
                             ) -> Tuple[List[List[np.ndarray]], List[bool]]:
     """Batched :func:`load_level_deltas` over B equal-shape chunk states.
 
@@ -217,9 +221,10 @@ def load_level_deltas_batch(states: List[RetrievalState],
     bytes), but the decode itself is grouped by (nbits, loaded-prefix) —
     the static configuration of the unpack kernel — and each group runs as
     one batched ``decode_level`` dispatch (mesh-sharded across devices
-    when ``mesh`` is given).  Returns per-chunk delta streams and
-    per-chunk any-new flags, exactly like B scalar calls.
+    when the context carries a mesh).  Returns per-chunk delta streams
+    and per-chunk any-new flags, exactly like B scalar calls.
     """
+    bk, mesh = ctx.bk, ctx.mesh
     m0 = states[0].reader.meta
     B = len(states)
     delta_ys: List[List[Optional[np.ndarray]]] = \
@@ -268,10 +273,12 @@ def load_level_deltas_batch(states: List[RetrievalState],
 
 def push_delta_batch(states: List[RetrievalState],
                      delta_ys: List[List[np.ndarray]],
-                     bk: CodecBackend, mesh=None) -> None:
+                     ctx: ExecContext) -> None:
     """Batched :func:`push_delta`: one zero-anchor cascade reconstructs
     every chunk's delta in a single stack (escape deltas pinned 0 per
-    chunk, as in the scalar path), mesh-sharded when ``mesh`` is given."""
+    chunk, as in the scalar path), mesh-sharded when the context carries
+    a mesh."""
+    bk = ctx.bk
     if ((bk.reconstruct_batch is None and bk.reconstruct_sharded is None)
             or len(states) == 1):
         for st, dy in zip(states, delta_ys):
@@ -284,7 +291,7 @@ def push_delta_batch(states: List[RetrievalState],
             for li in range(len(m0.levels))]
     overrides = [[(idx, np.zeros(idx.size)) for idx in st.esc_idx]
                  for st in states]
-    delta = _stack_reconstruct(bk, mesh, m0.shape, m0.interp, zero_anchors,
+    delta = _stack_reconstruct(ctx, m0.shape, m0.interp, zero_anchors,
                                yhat, overrides)
     for b, st in enumerate(states):
         st.xhat = st.xhat + delta[b]

@@ -1,0 +1,100 @@
+"""The deprecation contract of the legacy free-function shims.
+
+Every legacy entry point (``compress`` / ``retrieve`` / ``refine`` /
+``decompress``) emits EXACTLY ONE ``IPCompDeprecationWarning`` per call —
+no more (shims must not chain through each other) and no less — while the
+object API emits none at all.  The CI deprecation lane runs the new-API
+suites under ``-W error::repro.api.IPCompDeprecationWarning``; this file
+pins the shim side of the contract.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro import (Archive, Codec, ExecPolicy, Fidelity,
+                   IPCompDeprecationWarning)
+from repro.core import compress, decompress, refine, retrieve
+
+X = smooth_field((30, 20), seed=2)
+
+
+def _count(fn, *a, **kw):
+    """Run fn and count IPCompDeprecationWarnings it emits."""
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        result = fn(*a, **kw)
+    return result, sum(issubclass(w.category, IPCompDeprecationWarning)
+                       for w in caught)
+
+
+@pytest.mark.parametrize("chunk_elems", [None, 200], ids=["v1", "v2"])
+def test_each_legacy_entry_point_warns_exactly_once(chunk_elems):
+    buf, n = _count(compress, X, 1e-5, chunk_elems=chunk_elems)
+    assert n == 1
+    (out, state), n = _count(retrieve, buf, error_bound=1e-3)
+    assert n == 1
+    (out, state), n = _count(refine, state, error_bound=1e-4)
+    assert n == 1
+    _, n = _count(decompress, buf)
+    assert n == 1
+
+
+def test_legacy_warns_even_on_error_paths():
+    """The warning precedes validation: a bad call still names its
+    replacement."""
+    _, n = _count(lambda: pytest.raises(ValueError, compress, X, -1.0))
+    assert n == 1
+    buf, _ = _count(compress, X, 1e-5)
+    _, n = _count(lambda: pytest.raises(ValueError, retrieve, buf,
+                                        error_bound=1e-3, bitrate=2.0))
+    assert n == 1
+
+
+def test_warning_category_and_message():
+    with pytest.warns(IPCompDeprecationWarning, match="Codec"):
+        compress(X, 1e-5)
+    assert issubclass(IPCompDeprecationWarning, DeprecationWarning)
+    # the category is importable where the CI lane's -W filter looks
+    from repro.api import IPCompDeprecationWarning as from_api
+    assert from_api is IPCompDeprecationWarning
+
+
+def test_object_api_is_warning_clean(tmp_path):
+    """A full object-API workflow — compress, serialize, session ladder,
+    policy swap — emits zero shim warnings."""
+    def workflow():
+        arc = Codec(eb=1e-5, chunk_elems=200).compress(
+            X, policy=ExecPolicy(backend="numpy"))
+        arc.save(tmp_path / "a.ipc")
+        s = Archive.load(tmp_path / "a.ipc").open()
+        for _ in s.ladder([Fidelity.error_bound(1e-2),
+                           Fidelity.max_bytes(2000), Fidelity.full()]):
+            pass
+        s.policy = ExecPolicy(batch_chunks=False)
+        return s.refine()
+
+    out, n = _count(workflow)
+    assert n == 0
+    assert np.abs(out - X).max() <= 1e-5
+
+
+def test_legacy_and_new_apis_agree():
+    """The shims are *thin*: same bytes from compress vs Codec, same bits
+    and accounting from retrieve/refine vs a session."""
+    arc = Codec(eb=1e-5, chunk_elems=200).compress(X)
+    buf, _ = _count(compress, X, 1e-5, chunk_elems=200)
+    assert buf == arc.tobytes()
+
+    session = arc.open()
+    s_out = session.read(Fidelity.error_bound(1e-3))
+    (l_out, l_state), _ = _count(retrieve, buf, error_bound=1e-3)
+    assert np.array_equal(s_out, l_out)
+    assert session.bytes_read == l_state.bytes_read
+    assert session.achieved_bound == l_state.err_bound
+
+    s_ref = session.refine(Fidelity.full())
+    (l_ref, l_state), _ = _count(refine, l_state)
+    assert np.array_equal(s_ref, l_ref)
+    assert session.bytes_read == l_state.bytes_read

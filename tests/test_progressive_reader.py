@@ -1,0 +1,151 @@
+"""ProgressiveReader session semantics (paper §4, Algorithm 2 as an object).
+
+The session owns what the legacy API made callers hand-carry — the
+container reader and the RetrievalState — so these tests pin the object
+behaviors the free functions could not express: independent sessions
+over one Archive, refine monotonicity through the session accessors,
+lazy fidelity-ladder iteration, and no-op behavior on looser targets.
+Mid-session *policy* swaps are pinned in ``test_policy_matrix.py``.
+
+Runs warning-clean (new API only); the CI deprecation lane enforces it.
+"""
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro import Archive, Codec, ExecPolicy, Fidelity
+from repro.core import metrics
+
+X = smooth_field((40, 30), seed=1)
+
+
+@pytest.fixture(params=[None, 300], ids=["v1", "v2"])
+def archive(request):
+    return Codec(eb=1e-6, chunk_elems=request.param).compress(X)
+
+
+def test_fresh_session_state(archive):
+    s = archive.open()
+    assert s.data is None
+    assert s.bytes_read == 0
+    assert s.achieved_bound == float("inf")
+    assert s.archive is archive
+
+
+def test_refine_monotonicity(archive):
+    """Down a fidelity ladder: achieved bounds non-increasing and honored,
+    bytes_read non-decreasing, data always the latest reconstruction."""
+    s = archive.open()
+    last_bound, last_read = float("inf"), 0
+    for e in (1e-1, 1e-2, 1e-3, 1e-4, 1e-5):
+        out = s.refine(Fidelity.error_bound(e))
+        assert metrics.linf(X, out) <= e
+        assert s.achieved_bound <= min(e, last_bound)
+        assert s.bytes_read >= last_read
+        assert out is s.data
+        last_bound, last_read = s.achieved_bound, s.bytes_read
+    exact = s.read()                      # default = Fidelity.full()
+    assert metrics.linf(X, exact) <= archive.eb
+
+
+def test_looser_target_is_a_noop(archive):
+    """Refinement never drops planes: a looser request after a tight one
+    fetches nothing and keeps the achieved bound."""
+    s = archive.open()
+    tight = s.read(Fidelity.error_bound(1e-4))
+    read, bound = s.bytes_read, s.achieved_bound
+    loose = s.read(Fidelity.error_bound(1e-1))
+    assert np.array_equal(tight, loose)
+    assert s.bytes_read == read and s.achieved_bound == bound
+
+
+def test_sessions_are_independent(archive):
+    """Each open() gets its own reader and state: progress in one session
+    costs and changes nothing in another."""
+    a, b = archive.open(), archive.open()
+    a.read(Fidelity.error_bound(1e-4))
+    assert b.bytes_read == 0 and b.data is None
+    out_b = b.read(Fidelity.error_bound(1e-2))
+    assert metrics.linf(X, out_b) <= 1e-2
+    assert a.bytes_read >= b.bytes_read
+    # refining b is unaffected by a's deeper position; both sessions meet
+    # the bound (their loaded plane unions differ by path, so exact bytes
+    # may too — that is Algorithm 2, not leakage between sessions)
+    b.read(Fidelity.error_bound(1e-4))
+    assert metrics.linf(X, b.data) <= 1e-4
+    assert metrics.linf(X, a.data) <= 1e-4
+
+
+def test_session_equals_oneshot(archive):
+    """Refining stepwise lands where a cold full read lands: at full
+    precision the plan is every plane, so the loaded set — and the byte
+    accounting — match exactly; the cascade sum is equal to float
+    accumulation order (the contract test_progressive_monotonicity pins
+    for the legacy surface)."""
+    stepped = archive.open()
+    for fid in (Fidelity.max_bytes(1200), Fidelity.error_bound(1e-3),
+                Fidelity.full()):
+        stepped.read(fid)
+    cold = archive.open()
+    out = cold.read(Fidelity.full())
+    assert stepped.bytes_read == cold.bytes_read
+    assert stepped.achieved_bound == cold.achieved_bound
+    np.testing.assert_allclose(stepped.data, out, atol=1e-12)
+
+
+def test_ladder_iteration(archive):
+    """ladder() yields (fidelity, data) per rung, lazily."""
+    fids = [Fidelity.error_bound(e) for e in (1e-2, 1e-3, 1e-4)]
+    s = archive.open()
+    seen = []
+    for fid, out in s.ladder(fids):
+        assert metrics.linf(X, out) <= fid.value
+        seen.append(fid)
+    assert seen == fids
+
+    # lazy: breaking early stops fetching
+    s2 = archive.open()
+    it = s2.ladder(iter(fids))
+    next(it)
+    partial = s2.bytes_read
+    assert partial < s.bytes_read
+    next(it)
+    assert s2.bytes_read > partial
+
+
+def test_byte_budget_fidelities(archive):
+    """Growing max_bytes rungs refine monotonically (the DP spends only
+    the planned plane bytes; anchors/escapes ride on top, so bytes_read
+    tracks but is not capped by the budget — the legacy contract)."""
+    s = archive.open()
+    prev_bound, prev_read = float("inf"), 0
+    for budget in (800, 1600, 3200):
+        s.read(Fidelity.max_bytes(budget))
+        assert s.achieved_bound <= prev_bound
+        assert s.bytes_read >= prev_read
+        prev_bound, prev_read = s.achieved_bound, s.bytes_read
+    assert s.achieved_bound < float("inf")
+
+
+def test_policy_setter_validates(archive):
+    s = archive.open()
+    with pytest.raises(TypeError, match="ExecPolicy"):
+        s.policy = "jax"
+    s.policy = ExecPolicy(backend="numpy", batch_chunks=False)
+    assert s.policy.batch_chunks is False
+
+
+def test_propagation_is_session_wide():
+    """open(propagation=) pins the planner's propagation model for every
+    rung of the session.  SAFE (default) actually guarantees the bound;
+    PAPER uses Theorem 1's smaller amplification factors, so it plans no
+    more bytes than SAFE (and, per the repro findings, may overshoot the
+    true error — which is why it is opt-in)."""
+    arc = Codec(eb=1e-6).compress(X)
+    safe = arc.open(propagation="safe")
+    paper = arc.open(propagation="paper")
+    out = safe.read(Fidelity.error_bound(1e-3))
+    assert metrics.linf(X, out) <= 1e-3
+    paper.read(Fidelity.error_bound(1e-3))
+    assert paper.bytes_read <= safe.bytes_read
+    assert paper.achieved_bound < float("inf")
