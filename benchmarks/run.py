@@ -9,6 +9,8 @@ trendable JSON artifacts ``BENCH_compress.json`` and ``BENCH_decode.json``
 to the working directory — run from the repo root so CI picks them up.
 ``BENCH_compress.json`` carries the chunk-batch speed entry: batched vs
 looped kernel dispatch counts and MB/s for the vmapped shape-group engine.
+The ``serve`` module drives the serving tier's mixed-fidelity workload
+(per-call vs coalesced vs cached) and writes ``BENCH_serve.json``.
 
   PYTHONPATH=src python -m benchmarks.run [--scale 0.15] [--only fig5,...]
 """
@@ -18,12 +20,14 @@ import argparse
 import sys
 
 from . import (backend_speed, fig5_ratio, fig6_retrieval, fig7_bitrate,
-               fig8_speed, fig10_psnr, table2_entropy, grad_compress_bench)
+               fig8_speed, fig10_psnr, serve_bench, table2_entropy,
+               grad_compress_bench)
 
 MODULES = {
     "fig5": fig5_ratio, "fig6": fig6_retrieval, "fig7": fig7_bitrate,
     "fig8": fig8_speed, "fig10": fig10_psnr, "table2": table2_entropy,
     "grad_compress": grad_compress_bench, "backend_speed": backend_speed,
+    "serve": serve_bench,
 }
 
 

@@ -1,0 +1,226 @@
+"""Serving-tier load generator: the paper's many-readers workload.
+
+Drives the continuous-batching :class:`repro.serving.RetrievalServer`
+with a >=16-request mixed-fidelity workload (coarse previews, tight
+bounds, byte budgets, bitrates, full reads, refine chains) over several
+archives, in three execution modes:
+
+* ``percall``   — no coalescing, no cache: every request is planned and
+  decoded as its own group (the per-request baseline);
+* ``coalesced`` — cross-request coalescing: same-shape chunk jobs from
+  different requests share one batched kernel launch per scheduler tick;
+* ``cached``    — coalescing plus the shared :class:`PlaneCache`:
+  requests reuse each other's decoded plane prefixes.
+
+Recorded per mode: wall time, requests/sec, p50/p99 request latency,
+backend-primitive dispatch counts (``decode_level`` / ``reconstruct`` /
+``dedup_reuse`` from the server's counters — backend-independent), the
+Pallas launch counts from ``repro.kernels.dispatch``, and cache
+hit/miss/byte accounting.  Claim checks pin the serving wins: nonzero
+cache-hit rate with byte accounting, strictly fewer dispatches coalesced
+than per-call, and every served reconstruction bit-identical to a
+private uncached session at the same fidelity (refine chains compared
+against a private session walking the same ladder).  Results go to
+``BENCH_serve.json`` (a CI artifact).
+
+CPU caveat (same as ``backend_speed``): off-TPU the jax backend runs
+Pallas in interpret mode, so wall-clock favors numpy and the dispatch /
+cache counters are the trendable metrics.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--requests 18]
+      [--backend jax] [--json-out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from .common import csv_row
+from repro import Codec, ExecPolicy, Fidelity
+from repro.kernels import dispatch
+from repro.serving import PlaneCache, RetrievalServer
+
+JSON_OUT = "BENCH_serve.json"
+CACHE_BYTES = 32 << 20
+
+
+def _archives():
+    """Three small archives spanning the container shapes the scheduler
+    handles: uneven chunk grid, even chunk grid, and a v1 single slab."""
+    rng = np.random.default_rng(11)
+    fields = {
+        "turb": np.cumsum(rng.standard_normal((96, 96)), axis=0) / 10.0,
+        "wave": (np.sin(np.linspace(0, 9, 64 * 64)).reshape(64, 64)
+                 * 3.0),
+        "blob": np.exp(-((np.mgrid[0:64, 0:64] - 32) ** 2
+                         ).sum(0) / 300.0),
+    }
+    codecs = {
+        "turb": Codec(eb=1e-5, chunk_elems=2048),
+        "wave": Codec(eb=1e-5, chunk_elems=1024),
+        "blob": Codec(eb=1e-5),              # v1: single slab
+    }
+    return {name: codecs[name].compress(x) for name, x in fields.items()}
+
+
+def _workload(n_requests: int):
+    """The mixed-fidelity request mix, as (archive_id, Fidelity, chain)
+    tuples; ``chain`` marks a refine riding on the previous request for
+    the same archive.  Cycled to ``n_requests`` entries."""
+    base = [
+        ("turb", Fidelity.error_bound(1e-2), False),
+        ("turb", Fidelity.error_bound(1e-2), False),   # duplicate consumer
+        ("turb", Fidelity.error_bound(1e-4), False),
+        ("turb", Fidelity.full(), True),               # refine the preview
+        ("wave", Fidelity.error_bound(1e-2), False),
+        ("wave", Fidelity.bitrate(4.0), False),
+        ("wave", Fidelity.full(), False),
+        ("blob", Fidelity.error_bound(1e-3), False),
+        ("blob", Fidelity.max_bytes(3000), False),
+        ("blob", Fidelity.full(), True),               # refine the budget read
+        ("turb", Fidelity.bitrate(6.0), False),
+        ("wave", Fidelity.error_bound(1e-2), False),   # duplicate consumer
+    ]
+    return [base[i % len(base)] for i in range(n_requests)]
+
+
+def _submit_all(server, workload):
+    """Queue the workload; refine chains attach to the latest earlier
+    request for the same archive."""
+    reqs, last = [], {}
+    for archive_id, fid, chain in workload:
+        parent = last.get(archive_id) if chain else None
+        req = server.submit(archive_id, fid, refine_of=parent)
+        last[archive_id] = req
+        reqs.append(req)
+    return reqs
+
+
+def _reference_bits(archives, workload):
+    """Private uncached numpy sessions, one per request; refine chains
+    walk the same ladder inside one session."""
+    outs, last_session = [], {}
+    for archive_id, fid, chain in workload:
+        if chain and archive_id in last_session:
+            session = last_session[archive_id]
+        else:
+            session = archives[archive_id].open()
+        outs.append(session.read(fid))
+        last_session[archive_id] = session
+    return outs
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def _run_mode(mode, archives, workload, policy):
+    cache = PlaneCache(max_bytes=CACHE_BYTES) if mode == "cached" else None
+    server = RetrievalServer(policy=policy, cache=cache,
+                             coalesce=mode != "percall")
+    for name, arc in archives.items():
+        server.add_archive(name, arc)
+    reqs = _submit_all(server, workload)
+    with dispatch.measure() as launches:
+        t0 = time.perf_counter()
+        server.drain()
+        dt = time.perf_counter() - t0
+    assert all(r.status == "done" for r in reqs), \
+        [(r.req_id, r.error) for r in reqs if r.status != "done"]
+    lat = [r.latency_s for r in reqs]
+    record = dict(
+        mode=mode, requests=len(reqs), seconds=dt,
+        req_per_s=len(reqs) / dt, ticks=server.ticks,
+        p50_latency_s=_percentile(lat, 50),
+        p99_latency_s=_percentile(lat, 99),
+        counters=dict(server.counters),
+        primitive_dispatches=sum(v for k, v in server.counters.items()
+                                 if k != "dedup_reuse"),
+        pallas_launches=sum(launches.values()),
+        bytes_read=[int(r.bytes_read) for r in reqs],
+    )
+    if cache is not None:
+        record["cache"] = cache.stats()
+    return record, [r.result for r in reqs]
+
+
+def run(scale=None, n_requests: int = 18, backend: str = "jax",
+        json_out: str = JSON_OUT):
+    if n_requests < 16:
+        raise SystemExit(f"--requests must be >= 16, got {n_requests}")
+    archives = _archives()
+    workload = _workload(n_requests)
+    policy = ExecPolicy(backend=backend)
+    rows, checks, records = [], [], []
+    reference = _reference_bits(archives, workload)
+
+    results = {}
+    for mode in ("percall", "coalesced", "cached"):
+        record, outs = _run_mode(mode, archives, workload, policy)
+        records.append(record)
+        results[mode] = outs
+        derived = (f"req_per_s={record['req_per_s']:.1f};"
+                   f"p50={record['p50_latency_s'] * 1e3:.1f}ms;"
+                   f"p99={record['p99_latency_s'] * 1e3:.1f}ms;"
+                   f"dispatches={record['primitive_dispatches']}")
+        if "cache" in record:
+            derived += (f";hit_rate={record['cache']['hit_rate']:.2f};"
+                        f"fetch_saved={record['cache']['fetch_bytes_saved']}")
+        rows.append(csv_row(f"serve/{n_requests}req/{mode}",
+                            record["seconds"] * 1e6, derived))
+        print(rows[-1])
+
+    # (c) served bits == private uncached per-session bits, every mode
+    for mode, outs in results.items():
+        ok = all(np.array_equal(a, b) for a, b in zip(outs, reference))
+        checks.append((f"serve_bits_match_sessions_{mode}",
+                       f"{n_requests}req", "serve", ok))
+    # (b) coalescing strictly reduces dispatch counts vs per-request
+    percall, coalesced, cached = records
+    checks.append(("serve_coalesce_fewer_dispatches", f"{n_requests}req",
+                   "serve", coalesced["primitive_dispatches"]
+                   < percall["primitive_dispatches"]))
+    # (a) the shared cache sees real reuse, with byte accounting
+    cstats = cached["cache"]
+    checks.append(("serve_cache_hits", f"{n_requests}req", "serve",
+                   cstats["hits"] > 0 and cstats["hit_rate"] > 0))
+    checks.append(("serve_cache_byte_accounting", f"{n_requests}req",
+                   "serve", cstats["bytes_cached"] > 0
+                   and cstats["hit_bytes"] > 0))
+
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(dict(
+                requests=n_requests, backend=backend,
+                cache_max_bytes=CACHE_BYTES,
+                workload=[(a, repr(f), c) for a, f, c in workload],
+                records=records,
+                checks=[dict(name=c[0], case=c[1], op=c[2], ok=bool(c[3]))
+                        for c in checks]), f, indent=2)
+        print(f"wrote {json_out} ({len(records)} mode records)")
+    return rows, checks
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=18,
+                    help="workload size (>= 16)")
+    ap.add_argument("--backend", default="jax",
+                    choices=["numpy", "jax"],
+                    help="server ExecPolicy backend")
+    ap.add_argument("--json-out", default=JSON_OUT,
+                    help="JSON artifact path ('' disables)")
+    args = ap.parse_args()
+    _, checks = run(n_requests=args.requests, backend=args.backend,
+                    json_out=args.json_out)
+    for name, ds, op, ok in checks:
+        print(f"check {name}[{ds}/{op}]: {'ok' if ok else 'FAILED'}")
+    if not all(c[-1] for c in checks):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

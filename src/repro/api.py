@@ -206,8 +206,24 @@ class Archive:
 
     # ---- reading
 
+    def new_reader(self, cache_scope=None):
+        """A fresh low-level container reader over this archive's bytes
+        (``ArchiveReader`` / ``ChunkedArchiveReader``) with independent
+        fetched-range accounting.
+
+        ``cache_scope`` opts the reader into shared plane-cache keying
+        (see ``pipeline.state``); equal scopes MUST mean identical
+        archive bytes.  The serving tier uses its registry id; sessions
+        opened with a ``plane_cache`` use the Archive itself (Archives
+        compare by content, so equal keys imply equal bytes).
+        """
+        reader = container.open_reader(self._data, meta=self._meta)
+        reader.cache_scope = cache_scope
+        return reader
+
     def open(self, policy: Optional[ExecPolicy] = None,
-             propagation: str = loader.SAFE) -> "ProgressiveReader":
+             propagation: str = loader.SAFE,
+             plane_cache=None) -> "ProgressiveReader":
         """Start a progressive session -> :class:`ProgressiveReader`.
 
         Each call returns an independent session with fresh byte
@@ -215,10 +231,14 @@ class Archive:
         (swap it mid-session via :attr:`ProgressiveReader.policy` — the
         state is policy-agnostic by design).  ``propagation`` picks the
         error-propagation model of the DP planner (``loader.SAFE``
-        default / ``loader.PAPER``).
+        default / ``loader.PAPER``).  ``plane_cache`` attaches a shared
+        ``repro.serving.PlaneCache``: sessions over equal archives then
+        reuse each other's decoded plane prefixes (bits never change;
+        ``bytes_read`` may shrink on cache hits).
         """
         return ProgressiveReader(self, policy=policy,
-                                 propagation=propagation)
+                                 propagation=propagation,
+                                 plane_cache=plane_cache)
 
 
 class ProgressiveReader:
@@ -238,10 +258,15 @@ class ProgressiveReader:
 
     def __init__(self, archive: Archive,
                  policy: Optional[ExecPolicy] = None,
-                 propagation: str = loader.SAFE):
+                 propagation: str = loader.SAFE,
+                 plane_cache=None):
         self._archive = archive
-        self._reader = container.open_reader(archive.tobytes(),
-                                             meta=archive._meta)
+        # with a shared plane cache the content-equal Archive is the cache
+        # scope: equal scope keys then imply equal archive bytes, so two
+        # sessions over the same data reuse each other's decoded prefixes
+        self._reader = archive.new_reader(
+            cache_scope=archive if plane_cache is not None else None)
+        self._cache = plane_cache
         self._propagation = propagation
         self._state: Optional[RetrievalState] = None
         self._data: Optional[np.ndarray] = None
@@ -279,7 +304,8 @@ class ProgressiveReader:
                 ".full()")
         out, self._state = decode.read_archive(
             self._reader, fidelity, self._policy,
-            propagation=self._propagation, state=self._state)
+            propagation=self._propagation, state=self._state,
+            cache=self._cache)
         self._data = out
         return out
 

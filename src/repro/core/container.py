@@ -215,12 +215,23 @@ class ArchiveReader:
         self.meta = parse_meta(buf) if meta is None else meta
         self.bytes_read = 0          # data-blob bytes fetched so far
         self._fetched: set = set()
+        #: opaque hashable token identifying *which archive bytes* this
+        #: reader serves, for cross-session plane-cache keying (None =
+        #: never cached).  Set by the session/server that owns the reader;
+        #: equal tokens MUST mean identical underlying archive bytes.
+        self.cache_scope = None
 
     def read(self, offset: int, size: int, tag: str) -> bytes:
         if size and tag not in self._fetched:
             self._fetched.add(tag)
             self.bytes_read += size
         return self.buf[offset: offset + size]
+
+    def plane_fetched(self, level_idx: int, plane_idx: int) -> bool:
+        """Has this reader (= this accounting scope) already fetched the
+        given plane blob?  Used by the plane cache to credit exactly the
+        fetch bytes a cache hit avoids."""
+        return f"L{level_idx}P{plane_idx}" in self._fetched
 
     def anchors(self) -> np.ndarray:
         m = self.meta
@@ -327,13 +338,19 @@ class ChunkedArchiveReader:
         self.meta = parse_chunked_meta(buf) if meta is None else meta
         self._view = memoryview(buf)  # zero-copy chunk slicing
         self._readers: Dict[int, ArchiveReader] = {}
+        #: see :attr:`ArchiveReader.cache_scope`; chunk sub-readers derive
+        #: ``(cache_scope, chunk_index)`` so every chunk keys independently
+        self.cache_scope = None
 
     def chunk_reader(self, i: int) -> ArchiveReader:
         if i not in self._readers:
             cm = self.meta.chunks[i]
             self._readers[i] = ArchiveReader(
                 self._view[cm.offset: cm.offset + cm.size])
-        return self._readers[i]
+        sub = self._readers[i]
+        if self.cache_scope is not None and sub.cache_scope is None:
+            sub.cache_scope = (self.cache_scope, i)
+        return sub
 
     @property
     def bytes_read(self) -> int:

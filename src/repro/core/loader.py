@@ -134,12 +134,28 @@ def plan_error_mode(meta: ArchiveMeta, E: float,
 
 def plan_bitrate_mode(meta: ArchiveMeta, max_bytes: int,
                       propagation: str = PAPER) -> LoadPlan:
-    """Minimum-error plan with loaded bytes <= max_bytes."""
+    """Minimum-error plan with loaded bytes <= max_bytes.
+
+    Every plan loads the escape channels (lossless outliers travel with
+    their level), so the smallest representable plan costs
+    ``sum(esc_size)`` bytes — the *plan floor*.  A ``max_bytes`` below the
+    floor is infeasible and raises ``ValueError``: silently returning the
+    floor plan (the old behaviour) violated the ``Fidelity.max_bytes``
+    contract with no signal, reporting ``loaded_bytes > max_bytes``.
+    ``max_bytes`` exactly at the floor is feasible and returns the
+    zero-plane plan.
+    """
     errs, sizes = _level_cost_tables(meta, propagation)
     nl = len(meta.levels)
     min_bytes = int(sum(int(s[-1]) for s in sizes))  # b = nbits per level
+    if max_bytes < min_bytes:
+        raise ValueError(
+            f"max_bytes={max_bytes} is infeasible: the smallest plan for "
+            f"this archive loads {min_bytes} bytes (escape channels are "
+            "always loaded with their level); request at least that many "
+            "bytes or use an error-bound target")
     budget = max_bytes - min_bytes
-    if budget <= 0:  # can't even afford the escape channels: load minimum
+    if budget <= 0:  # exactly the escape-channel floor: load the minimum
         return _finish(meta, [0] * nl, errs, mode="bitrate")
     # ceil-rounded units guarantee sum(sizes) <= NBUCKETS*unit = budget
     unit = budget / NBUCKETS
@@ -174,17 +190,25 @@ def plan_bitrate_mode(meta: ArchiveMeta, max_bytes: int,
     return _finish(meta, keep, errs, mode="bitrate")
 
 
-def plan_full(meta: ArchiveMeta) -> LoadPlan:
-    errs, _ = _level_cost_tables(meta, PAPER)
+def plan_full(meta: ArchiveMeta, propagation: str = PAPER) -> LoadPlan:
+    """Full-precision plan: every plane of every level.
+
+    ``propagation`` selects the error-propagation model for the reported
+    ``err_bound`` exactly like the other planners — it used to be
+    hardcoded to PAPER, so a session planning under SAFE could receive a
+    plan whose reported bound was computed under a different (tighter)
+    model than the session's own ``update_achieved_bound`` accounting.
+    """
+    errs, _ = _level_cost_tables(meta, propagation)
     return _finish(meta, [lv.nbits for lv in meta.levels], errs, mode="full")
 
 
 def _finish(meta: ArchiveMeta, keep: List[int], errs, mode: str) -> LoadPlan:
-    total = 0
-    err = meta.eb
-    for li, lv in enumerate(meta.levels):
-        b = lv.nbits - keep[li]
-        total += sum(lv.plane_sizes[: keep[li]]) + lv.esc_size
-        err += float(errs[li][b])
+    total = sum(sum(lv.plane_sizes[: keep[li]]) + lv.esc_size
+                for li, lv in enumerate(meta.levels))
+    # same summation shape as state.update_achieved_bound, so the plan's
+    # reported bound and the session's achieved bound agree to the bit
+    err = meta.eb + sum(float(errs[li][lv.nbits - keep[li]])
+                        for li, lv in enumerate(meta.levels))
     return LoadPlan(keep_planes=keep, loaded_bytes=int(total),
                     err_bound=float(err), mode=mode)

@@ -73,21 +73,27 @@ def open_archive(buf: bytes):
     return container.open_reader(buf)
 
 
-def _plan(meta, fidelity: Fidelity, propagation: str) -> loader.LoadPlan:
+def plan_retrieval(meta, fidelity: Fidelity,
+                   propagation: str) -> loader.LoadPlan:
     """Plan selection is a total function of the Fidelity sum type —
-    no kwarg precedence left to get wrong."""
+    no kwarg precedence left to get wrong.  ``propagation`` threads into
+    every mode (including ``full``, whose reported bound used to be
+    hardcoded to the PAPER model).  Public: the serving tier plans each
+    request's chunks against this exact dispatcher so server plans can
+    never drift from session plans."""
     if fidelity.kind == spec.ERROR_BOUND:
         return loader.plan_error_mode(meta, fidelity.value, propagation)
     budget = fidelity.target_bytes(meta.n_elements)
     if budget is not None:
         return loader.plan_bitrate_mode(meta, budget, propagation)
-    return loader.plan_full(meta)
+    return loader.plan_full(meta, propagation)
 
 
 def read_archive(buf_or_reader, fidelity: Optional[Fidelity] = None,
                  policy: Optional[ExecPolicy] = None,
                  propagation: str = loader.SAFE,
                  state: Optional[RetrievalState] = None,
+                 cache=None, counters=None,
                  ) -> Tuple[np.ndarray, RetrievalState]:
     """Single-pass progressive retrieval (native entry).
 
@@ -99,6 +105,9 @@ def read_archive(buf_or_reader, fidelity: Optional[Fidelity] = None,
     incrementally (Algorithm 2) — only missing bitplanes are fetched.
 
     Accepts v1 and v2 (chunked) archives / readers transparently.
+    ``cache`` / ``counters`` are the serving-tier hooks threaded into the
+    state helpers (see ``pipeline.state``); both default off and never
+    change reconstruction bits.
     """
     fidelity = Fidelity.full() if fidelity is None else fidelity
     policy = spec.DEFAULT_POLICY if policy is None else policy
@@ -108,16 +117,17 @@ def read_archive(buf_or_reader, fidelity: Optional[Fidelity] = None,
         reader = container.open_reader(buf_or_reader)
     if isinstance(reader, ChunkedArchiveReader):
         return _retrieve_chunked(reader, fidelity, propagation, state,
-                                 policy)
+                                 policy, cache=cache, counters=counters)
     # v1: no chunk grid to shard — bind validates (explicit mesh raises)
     ctx = policy.bind(chunked=False, encode=False)
     m = reader.meta
-    plan = _plan(m, fidelity, propagation)
+    plan = plan_retrieval(m, fidelity, propagation)
     if state is None:
-        state = initial_state(reader, ctx.bk)
-    delta_y, any_new = load_level_deltas(state, plan.keep_planes, ctx.bk)
+        state = initial_state(reader, ctx.bk, counters=counters)
+    delta_y, any_new = load_level_deltas(state, plan.keep_planes, ctx.bk,
+                                         cache=cache, counters=counters)
     if any_new:
-        push_delta(state, delta_y, ctx.bk)
+        push_delta(state, delta_y, ctx.bk, counters=counters)
     update_achieved_bound(state, propagation)
     out = state.xhat.astype(np.dtype(m.dtype))
     return out, state
@@ -247,10 +257,98 @@ def refine_budgets(total: int, weights: Sequence[int],
             for s, extra in zip(spent, split_budget(total - used, weights))]
 
 
+def chunk_budgets(reader: ChunkedArchiveReader, fidelity: Fidelity,
+                  state: Optional[ChunkedRetrievalState] = None,
+                  ) -> Optional[List[int]]:
+    """Per-chunk cumulative byte budgets for a byte/bitrate fidelity, or
+    None when the fidelity has no byte target (error-bound / full).
+
+    Splits proportionally to element count via :func:`refine_budgets`,
+    crediting each chunk's already-read bytes from ``state`` — the exact
+    split ``_retrieve_chunked`` uses, exported so the serving tier's
+    per-chunk job plans match in-session plans byte for byte.
+    """
+    m = reader.meta
+    total_bytes = fidelity.target_bytes(m.n_elements)
+    if total_bytes is None:
+        return None
+    sub_ns = [reader.chunk_reader(i).meta.n_elements
+              for i in range(len(m.chunks))]
+    spent = [cs.bytes_read if cs is not None else 0
+             for cs in state.chunk_states] if state is not None \
+        else [0] * len(m.chunks)
+    return refine_budgets(total_bytes, sub_ns, spent)
+
+
+def sub_fidelity(fidelity: Fidelity, budgets: Optional[List[int]],
+                 i: int) -> Fidelity:
+    """The per-chunk fidelity a global request induces on chunk ``i``:
+    error bounds pass straight through (per-chunk L_inf <= E implies the
+    global bound), byte targets take the chunk's split budget, full stays
+    full."""
+    if fidelity.kind == spec.ERROR_BOUND:
+        return fidelity
+    if budgets is not None:
+        return Fidelity.max_bytes(budgets[i])
+    return Fidelity.full()
+
+
+def decode_group(readers: List[ArchiveReader],
+                 states: List[Optional[RetrievalState]],
+                 keeps: List[List[int]], ctx: spec.ExecContext,
+                 propagation: str = loader.SAFE,
+                 cache=None, counters=None) -> List[RetrievalState]:
+    """Execute a group of equal-shape chunk decode jobs as one batched
+    launch sequence; returns the updated per-job states (same order).
+
+    This is the group executor shared by the in-session scheduler
+    (:func:`_retrieve_group`) and the serving tier's cross-request
+    coalescer (``repro.serving.server``): each job is (sub-reader,
+    prior state or None, planned keep_planes).  Jobs may come from
+    different sessions — and, through ``cache``/equal ``cache_scope``,
+    reuse or deduplicate each other's decoded prefixes — without that
+    ever changing any job's bits: the batch axis is an execution detail.
+    Falls back to the scalar helpers for singleton groups or batch-less
+    backends, bit-identically.
+    """
+    bk = ctx.bk
+    batched = ctx.batch_decode and len(readers) > 1
+    if not batched:
+        out = []
+        for r, st, keep in zip(readers, states, keeps):
+            if st is None:
+                st = initial_state(r, bk, counters=counters)
+            delta_y, any_new = load_level_deltas(st, keep, bk, cache=cache,
+                                                 counters=counters)
+            if any_new:
+                push_delta(st, delta_y, bk, counters=counters)
+            update_achieved_bound(st, propagation)
+            out.append(st)
+        return out
+    states = list(states)
+    fresh = [p for p, st in enumerate(states) if st is None]
+    if fresh:
+        sts = initial_state_batch([readers[p] for p in fresh], ctx,
+                                  counters=counters)
+        for p, st in zip(fresh, sts):
+            states[p] = st
+    delta_ys, any_new = load_level_deltas_batch(states, keeps, ctx,
+                                                cache=cache,
+                                                counters=counters)
+    live = [p for p, new in enumerate(any_new) if new]
+    if live:
+        push_delta_batch([states[p] for p in live],
+                         [delta_ys[p] for p in live], ctx,
+                         counters=counters)
+    for st in states:
+        update_achieved_bound(st, propagation)
+    return states
+
+
 def _retrieve_chunked(reader: ChunkedArchiveReader, fidelity: Fidelity,
                       propagation: str,
                       state: Optional[ChunkedRetrievalState],
-                      policy: ExecPolicy,
+                      policy: ExecPolicy, cache=None, counters=None,
                       ) -> Tuple[np.ndarray, ChunkedRetrievalState]:
     """Shape-group scheduled per-chunk plan + reconstruct; the global bound
     is the chunk max.
@@ -274,14 +372,7 @@ def _retrieve_chunked(reader: ChunkedArchiveReader, fidelity: Fidelity,
     if state is None:
         state = ChunkedRetrievalState(reader=reader,
                                       chunk_states=[None] * len(m.chunks))
-    budgets = None
-    total_bytes = fidelity.target_bytes(m.n_elements)
-    if total_bytes is not None:
-        sub_ns = [reader.chunk_reader(i).meta.n_elements
-                  for i in range(len(m.chunks))]
-        spent = [cs.bytes_read if cs is not None else 0
-                 for cs in state.chunk_states]
-        budgets = refine_budgets(total_bytes, sub_ns, spent)
+    budgets = chunk_budgets(reader, fidelity, state)
     # per-chunk scalar fallback: v1 sub-archives, so the mesh (which only
     # applies to the chunk grid as a whole) is stripped from the policy
     sub_policy = policy.unsharded()
@@ -289,18 +380,14 @@ def _retrieve_chunked(reader: ChunkedArchiveReader, fidelity: Fidelity,
                              max_group=group_cap(ctx.mesh)):
         if ctx.batch_decode and len(idxs) > 1:
             _retrieve_group(reader, idxs, fidelity, budgets, propagation,
-                            state, ctx)
+                            state, ctx, cache=cache, counters=counters)
         else:
             for i in idxs:
-                if fidelity.kind == spec.ERROR_BOUND:
-                    sub_fid = fidelity
-                elif budgets is not None:
-                    sub_fid = Fidelity.max_bytes(budgets[i])
-                else:
-                    sub_fid = Fidelity.full()
-                _, st = read_archive(reader.chunk_reader(i), sub_fid,
+                _, st = read_archive(reader.chunk_reader(i),
+                                     sub_fidelity(fidelity, budgets, i),
                                      sub_policy, propagation=propagation,
-                                     state=state.chunk_states[i])
+                                     state=state.chunk_states[i],
+                                     cache=cache, counters=counters)
                 state.chunk_states[i] = st
     out = np.empty(m.shape, np.dtype(m.dtype))
     for i, cm in enumerate(m.chunks):
@@ -314,38 +401,22 @@ def _retrieve_chunked(reader: ChunkedArchiveReader, fidelity: Fidelity,
 def _retrieve_group(reader: ChunkedArchiveReader, idxs: List[int],
                     fidelity: Fidelity, budgets: Optional[List[int]],
                     propagation: str, state: ChunkedRetrievalState,
-                    ctx: spec.ExecContext) -> None:
+                    ctx: spec.ExecContext, cache=None,
+                    counters=None) -> None:
     """One equal-shape chunk group through the batched retrieval steps.
 
-    Mirrors the scalar ``read_archive`` body per chunk — plan (host DP,
-    each chunk's own tables), initial state if fresh, delta load, delta
-    push, achieved-bound update — with the reconstructions and plane
-    decodes stacked across the group (and, when the context carries a
-    mesh, that stack split across the devices of the 1-D codec mesh).
-    Per-chunk states and reader accounting come out identical to the
-    loop; only the dispatch count (and its device fan-out) changes.
+    Plans each chunk against its induced :func:`sub_fidelity` (host DP,
+    each chunk's own tables) and hands the group to the shared
+    :func:`decode_group` executor — the same one the serving tier's
+    cross-request coalescer drives.  Per-chunk states and reader
+    accounting come out identical to the scalar loop; only the dispatch
+    count (and its device fan-out) changes.
     """
     subs = [reader.chunk_reader(i) for i in idxs]
-    keeps = []
-    for i, sub in zip(idxs, subs):
-        sm = sub.meta
-        if fidelity.kind == spec.ERROR_BOUND:
-            plan = loader.plan_error_mode(sm, fidelity.value, propagation)
-        elif budgets is not None:
-            plan = loader.plan_bitrate_mode(sm, budgets[i], propagation)
-        else:
-            plan = loader.plan_full(sm)
-        keeps.append(plan.keep_planes)
-    fresh = [p for p, i in enumerate(idxs) if state.chunk_states[i] is None]
-    if fresh:
-        sts = initial_state_batch([subs[p] for p in fresh], ctx)
-        for p, st in zip(fresh, sts):
-            state.chunk_states[idxs[p]] = st
-    group_states = [state.chunk_states[i] for i in idxs]
-    delta_ys, any_new = load_level_deltas_batch(group_states, keeps, ctx)
-    live = [p for p, new in enumerate(any_new) if new]
-    if live:
-        push_delta_batch([group_states[p] for p in live],
-                         [delta_ys[p] for p in live], ctx)
-    for st in group_states:
-        update_achieved_bound(st, propagation)
+    keeps = [plan_retrieval(sub.meta, sub_fidelity(fidelity, budgets, i),
+                            propagation).keep_planes
+             for i, sub in zip(idxs, subs)]
+    sts = decode_group(subs, [state.chunk_states[i] for i in idxs], keeps,
+                       ctx, propagation, cache=cache, counters=counters)
+    for i, st in zip(idxs, sts):
+        state.chunk_states[i] = st

@@ -20,6 +20,28 @@ Pallas kernels exactly like a cold retrieval.
 
 :class:`ChunkedRetrievalState` is the v2-archive twin: one per-chunk state
 plus aggregated accounting.
+
+Two optional cross-cutting hooks thread through every helper (both are
+``None`` by default and cost nothing when absent):
+
+``cache``
+    A shared *plane cache* (``repro.serving.PlaneCache`` protocol:
+    ``get(key) -> array | None`` / ``put(key, array)`` /
+    ``saved_fetch(nbytes)``) keyed ``(reader.cache_scope, level, prefix)``.
+    Decoded truncated-negabinary prefixes are deterministic functions of
+    the archive bytes, so concurrent sessions at different fidelities can
+    reuse each other's decodes: a hit skips both the plane-blob fetches
+    and the unpack kernel, never changing reconstruction bits (a session's
+    ``bytes_read`` may shrink — that is the serving win, see
+    ``docs/architecture.md`` §8).  Readers opt in by carrying a non-None
+    ``cache_scope`` (see ``container.ArchiveReader``).
+
+``counters``
+    A plain dict accumulating backend-primitive invocation counts
+    (``decode_level`` / ``reconstruct`` / ``dedup_reuse``), one unit per
+    primitive call whether scalar, batched, or sharded — the
+    serving tier's dispatch accounting, backend-independent (the kernel
+    layer's ``kernels.dispatch`` only counts Pallas launches).
 """
 from __future__ import annotations
 
@@ -56,6 +78,33 @@ class ChunkedRetrievalState:
     bytes_read: int = 0
 
 
+def _count(counters, name: str, k: int = 1) -> None:
+    """Accumulate a backend-primitive invocation into ``counters`` (no-op
+    when the caller did not ask for accounting)."""
+    if counters is not None:
+        counters[name] = counters.get(name, 0) + k
+
+
+def _cache_key(reader, level_idx: int, prefix: int):
+    """Plane-cache key for a decoded prefix, or None when the reader is
+    not cache-scoped."""
+    scope = getattr(reader, "cache_scope", None)
+    if scope is None:
+        return None
+    return (scope, level_idx, prefix)
+
+
+def _freeze(arr: np.ndarray) -> np.ndarray:
+    """Mark a decoded stream immutable before it is shared across
+    sessions (cache entries / dedup fan-out).  ``nb_partial`` streams are
+    only ever *replaced*, never written in place, so sharing is safe."""
+    try:
+        arr.flags.writeable = False
+    except ValueError:
+        pass  # views of external buffers may already be locked
+    return arr
+
+
 def _unpack_escapes(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
     """Inverse of ``encode._pack_escapes``: blob -> (flat idx, exact values)."""
     if not blob:
@@ -67,7 +116,8 @@ def _unpack_escapes(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
     return idx, val
 
 
-def initial_state(reader: ArchiveReader, bk: CodecBackend) -> RetrievalState:
+def initial_state(reader: ArchiveReader, bk: CodecBackend,
+                  counters=None) -> RetrievalState:
     """Coarsest approximation: anchors + escapes only, zero bitplanes."""
     m = reader.meta
     anchors = reader.anchors()
@@ -78,6 +128,7 @@ def initial_state(reader: ArchiveReader, bk: CodecBackend) -> RetrievalState:
         overrides.append((idx, val))
     xhat = bk.reconstruct(m.shape, m.interp, anchors, yhat,
                           overrides=overrides)
+    _count(counters, "reconstruct")
     full_err = m.eb + sum(
         float(lv.delta_table[lv.nbits]) *
         loader._prop_factor(m, lv.level, loader.SAFE)
@@ -91,7 +142,8 @@ def initial_state(reader: ArchiveReader, bk: CodecBackend) -> RetrievalState:
 
 
 def load_level_deltas(state: RetrievalState, keep_planes: List[int],
-                      bk: CodecBackend) -> Tuple[List[np.ndarray], bool]:
+                      bk: CodecBackend, cache=None,
+                      counters=None) -> Tuple[List[np.ndarray], bool]:
     """Fetch + decode the planes the plan adds; return residual deltas.
 
     Per level: refinement never drops planes, so the target is
@@ -100,6 +152,12 @@ def load_level_deltas(state: RetrievalState, keep_planes: List[int],
     ranges; re-reads of the same tag are not double-counted).  The returned
     stream is the *difference* of dequantized residuals — the input of the
     zero-anchor cascade in :func:`push_delta`.
+
+    With a ``cache`` and a cache-scoped reader, the decoded prefix is
+    looked up under ``(scope, level, prefix)`` first: a hit skips the
+    plane fetches *and* the decode (crediting the avoided fetch bytes to
+    the cache accounting); a miss decodes as usual and publishes the
+    result for other sessions.
     """
     m = state.reader.meta
     delta_y: List[np.ndarray] = []
@@ -109,10 +167,21 @@ def load_level_deltas(state: RetrievalState, keep_planes: List[int],
         want = max(have, keep_planes[li])
         if want > have:
             any_new = True
-            blobs: List[Optional[bytes]] = [None] * lv.nbits
-            for i in range(want):
-                blobs[i] = state.reader.plane(li, i)
-            nb_new = bk.decode_level(blobs, lv.nbits, lv.n)
+            key = _cache_key(state.reader, li, want) \
+                if cache is not None else None
+            nb_new = cache.get(key) if key is not None else None
+            if nb_new is None:
+                blobs: List[Optional[bytes]] = [None] * lv.nbits
+                for i in range(want):
+                    blobs[i] = state.reader.plane(li, i)
+                nb_new = bk.decode_level(blobs, lv.nbits, lv.n)
+                _count(counters, "decode_level")
+                if key is not None:
+                    cache.put(key, _freeze(nb_new))
+            else:
+                cache.saved_fetch(sum(
+                    lv.plane_sizes[i] for i in range(want)
+                    if not state.reader.plane_fetched(li, i)))
             dq = negabinary.from_negabinary(nb_new) - \
                 negabinary.from_negabinary(state.nb_partial[li])
             delta_y.append(dq.astype(np.float64) * 2.0 * m.eb)
@@ -124,7 +193,7 @@ def load_level_deltas(state: RetrievalState, keep_planes: List[int],
 
 
 def push_delta(state: RetrievalState, delta_y: List[np.ndarray],
-               bk: CodecBackend) -> None:
+               bk: CodecBackend, counters=None) -> None:
     """Algorithm 2 core: reconstruct the residual deltas through the sweep
     with zero anchors (linearity) and add onto the previous ``xhat``.
     Escaped points are exact from the first pass: their delta is pinned 0."""
@@ -133,6 +202,7 @@ def push_delta(state: RetrievalState, delta_y: List[np.ndarray],
     zero_ovr = [(idx, np.zeros(idx.size)) for idx in state.esc_idx]
     delta = bk.reconstruct(m.shape, m.interp, zero_anchors, delta_y,
                            overrides=zero_ovr)
+    _count(counters, "reconstruct")
     state.xhat = state.xhat + delta
 
 
@@ -182,13 +252,14 @@ def _stack_reconstruct(ctx: ExecContext, shape, interp, anchors, yhat,
 
 
 def initial_state_batch(readers: List[ArchiveReader],
-                        ctx: ExecContext) -> List[RetrievalState]:
+                        ctx: ExecContext,
+                        counters=None) -> List[RetrievalState]:
     """Coarsest approximation for B equal-shape chunks: one batched
     (optionally mesh-sharded) reconstruct builds every initial ``xhat``."""
     bk = ctx.bk
     if ((bk.reconstruct_batch is None and bk.reconstruct_sharded is None)
             or len(readers) == 1):
-        return [initial_state(r, bk) for r in readers]
+        return [initial_state(r, bk, counters=counters) for r in readers]
     m0 = readers[0].meta
     anchors = np.stack([r.anchors() for r in readers])
     yhat = [np.zeros((len(readers), lv.n), np.float64) for lv in m0.levels]
@@ -196,6 +267,7 @@ def initial_state_batch(readers: List[ArchiveReader],
                   for li in range(len(r.meta.levels))] for r in readers]
     xhat = _stack_reconstruct(ctx, m0.shape, m0.interp, anchors, yhat,
                               overrides)
+    _count(counters, "reconstruct")
     states = []
     for b, r in enumerate(readers):
         m = r.meta
@@ -213,7 +285,7 @@ def initial_state_batch(readers: List[ArchiveReader],
 
 def load_level_deltas_batch(states: List[RetrievalState],
                             keep_planes_list: List[List[int]],
-                            ctx: ExecContext,
+                            ctx: ExecContext, cache=None, counters=None,
                             ) -> Tuple[List[List[np.ndarray]], List[bool]]:
     """Batched :func:`load_level_deltas` over B equal-shape chunk states.
 
@@ -223,6 +295,14 @@ def load_level_deltas_batch(states: List[RetrievalState],
     one batched ``decode_level`` dispatch (mesh-sharded across devices
     when the context carries a mesh).  Returns per-chunk delta streams
     and per-chunk any-new flags, exactly like B scalar calls.
+
+    Cross-session serving hooks: with a ``cache``, each job first probes
+    the shared plane cache (a hit skips the fetch and leaves the batch);
+    and jobs from *different sessions over the same archive bytes* (equal
+    ``cache_scope``) wanting the same prefix are deduplicated — one leader
+    decodes, followers share the immutable result (``dedup_reuse`` in
+    ``counters``).  Chunks within one session always have distinct scopes,
+    so single-request behaviour is unchanged.
     """
     bk, mesh = ctx.bk, ctx.mesh
     m0 = states[0].reader.meta
@@ -239,10 +319,32 @@ def load_level_deltas_batch(states: List[RetrievalState],
                 jobs.append((b, want))
             else:
                 delta_ys[b][li] = np.zeros(lv0.n, np.float64)
-        groups: dict = {}                    # (nbits, want) -> [chunk pos]
+        # resolve cache hits and dedupe same-(scope, prefix) decode jobs
+        resolved: dict = {}                  # chunk pos -> decoded stream
+        decode_jobs: List[Tuple[int, int]] = []
+        leaders: dict = {}                   # cache key -> leader pos
+        followers: dict = {}                 # leader pos -> [follower pos]
         for b, want in jobs:
-            key = (states[b].reader.meta.levels[li].nbits, want)
-            groups.setdefault(key, []).append(b)
+            key = _cache_key(states[b].reader, li, want)
+            nb = cache.get(key) if (cache is not None and key is not None) \
+                else None
+            if nb is not None:
+                lv = states[b].reader.meta.levels[li]
+                cache.saved_fetch(sum(
+                    lv.plane_sizes[i] for i in range(want)
+                    if not states[b].reader.plane_fetched(li, i)))
+                resolved[b] = nb
+            elif key is not None and key in leaders:
+                followers.setdefault(leaders[key], []).append(b)
+                _count(counters, "dedup_reuse")
+            else:
+                if key is not None:
+                    leaders[key] = b
+                decode_jobs.append((b, want))
+        groups: dict = {}                    # (nbits, want) -> [chunk pos]
+        for b, want in decode_jobs:
+            gk = (states[b].reader.meta.levels[li].nbits, want)
+            groups.setdefault(gk, []).append(b)
         for (nbits, want), bs in groups.items():
             blob_lists = []
             for b in bs:
@@ -254,26 +356,38 @@ def load_level_deltas_batch(states: List[RetrievalState],
             if (mesh is not None and bk.decode_level_sharded is not None
                     and len(bs) > 1):
                 nbs = bk.decode_level_sharded(blob_lists, nbits, lv0.n, mesh)
+                _count(counters, "decode_level")
             elif bk.decode_level_batch is not None and len(bs) > 1:
                 nbs = bk.decode_level_batch(blob_lists, nbits, lv0.n)
+                _count(counters, "decode_level")
             else:
                 nbs = [bk.decode_level(bl, nbits, lv0.n)
                        for bl in blob_lists]
+                _count(counters, "decode_level", len(bs))
             for b, nb_new in zip(bs, nbs):
-                st = states[b]
-                dq = negabinary.from_negabinary(nb_new) - \
-                    negabinary.from_negabinary(st.nb_partial[li])
-                delta_ys[b][li] = dq.astype(np.float64) * \
-                    2.0 * st.reader.meta.eb
-                st.nb_partial[li] = nb_new
-                st.planes_loaded[li] = want
-                any_new[b] = True
+                nb_new = _freeze(np.asarray(nb_new))
+                key = _cache_key(states[b].reader, li, want)
+                if cache is not None and key is not None:
+                    cache.put(key, nb_new)
+                resolved[b] = nb_new
+                for fb in followers.get(b, ()):
+                    resolved[fb] = nb_new
+        for b, want in jobs:
+            nb_new = resolved[b]
+            st = states[b]
+            dq = negabinary.from_negabinary(nb_new) - \
+                negabinary.from_negabinary(st.nb_partial[li])
+            delta_ys[b][li] = dq.astype(np.float64) * \
+                2.0 * st.reader.meta.eb
+            st.nb_partial[li] = nb_new
+            st.planes_loaded[li] = want
+            any_new[b] = True
     return delta_ys, any_new
 
 
 def push_delta_batch(states: List[RetrievalState],
                      delta_ys: List[List[np.ndarray]],
-                     ctx: ExecContext) -> None:
+                     ctx: ExecContext, counters=None) -> None:
     """Batched :func:`push_delta`: one zero-anchor cascade reconstructs
     every chunk's delta in a single stack (escape deltas pinned 0 per
     chunk, as in the scalar path), mesh-sharded when the context carries
@@ -282,7 +396,7 @@ def push_delta_batch(states: List[RetrievalState],
     if ((bk.reconstruct_batch is None and bk.reconstruct_sharded is None)
             or len(states) == 1):
         for st, dy in zip(states, delta_ys):
-            push_delta(st, dy, bk)
+            push_delta(st, dy, bk, counters=counters)
         return
     m0 = states[0].reader.meta
     B = len(states)
@@ -293,5 +407,6 @@ def push_delta_batch(states: List[RetrievalState],
                  for st in states]
     delta = _stack_reconstruct(ctx, m0.shape, m0.interp, zero_anchors,
                                yhat, overrides)
+    _count(counters, "reconstruct")
     for b, st in enumerate(states):
         st.xhat = st.xhat + delta[b]

@@ -1,0 +1,9 @@
+"""Archive serving tier: continuous-batching retrieval over progressive
+archives (queue -> coalescer -> plane cache -> batched kernels; see
+``docs/architecture.md`` §8 and ``benchmarks/serve_bench.py``)."""
+from .cache import PlaneCache
+from .server import (DONE, FAILED, QUEUED, RUNNING, RetrievalServer,
+                     ServeRequest)
+
+__all__ = ["PlaneCache", "RetrievalServer", "ServeRequest",
+           "QUEUED", "RUNNING", "DONE", "FAILED"]

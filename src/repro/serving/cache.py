@@ -1,0 +1,140 @@
+"""Shared plane cache: decoded bitplane prefixes reused across sessions.
+
+The progressive container stores each level as an ordered stream of XOR
+predictive-coded bitplanes; what a session actually consumes is the
+*decoded* truncated-negabinary prefix (``pipeline.state.nb_partial``), a
+pure function of (archive bytes, level, prefix length).  Concurrent
+readers at different fidelities therefore walk the same small set of
+prefixes — the sharing structure the paper's progressive representation
+creates and the serving tier exploits (``docs/architecture.md`` §8).
+
+:class:`PlaneCache` is that sharing made explicit: an LRU-bounded map
+``(cache_scope, level, prefix) -> frozen uint32 stream`` with hit/miss/
+byte accounting.  The contract consumed by ``pipeline.state`` is three
+methods — ``get`` / ``put`` / ``saved_fetch`` — so tests can substitute
+plain recording fakes.  Entries are immutable (``state._freeze``) and a
+hit never changes reconstruction bits: the cached stream is exactly what
+the decode would have produced.  Thread-safe; eviction is LRU by entry
+byte size under ``max_bytes``.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+
+class PlaneCache:
+    """LRU cache of decoded plane prefixes with byte accounting.
+
+    ``max_bytes``
+        Eviction cap on the summed ``nbytes`` of cached streams; None =
+        unbounded.  A single entry larger than the cap is not admitted
+        (caching it would immediately evict everything else for a
+        one-shot entry).
+
+    Accounting (all monotone counters, read via :meth:`stats`):
+
+    * ``hits`` / ``misses`` — ``get`` outcomes;
+    * ``hit_bytes`` — decoded bytes served from cache (decode work
+      avoided);
+    * ``fetch_bytes_saved`` — compressed plane bytes whose *fetch* a hit
+      made unnecessary, credited by the consumer via
+      :meth:`saved_fetch` (the consumer knows which planes its reader
+      had already pulled for shallower prefixes);
+    * ``evictions`` / ``insertions`` and the live ``bytes_cached``.
+    """
+
+    def __init__(self, max_bytes: Optional[int] = None):
+        if max_bytes is not None and max_bytes <= 0:
+            raise ValueError(f"max_bytes must be positive, got {max_bytes}")
+        self.max_bytes = max_bytes
+        self._entries: "OrderedDict" = OrderedDict()
+        self._lock = threading.Lock()
+        self.bytes_cached = 0
+        self.hits = 0
+        self.misses = 0
+        self.hit_bytes = 0
+        self.fetch_bytes_saved = 0
+        self.evictions = 0
+        self.insertions = 0
+
+    # ---- the consumer protocol (pipeline.state)
+
+    def get(self, key) -> Optional[np.ndarray]:
+        """The cached stream for ``key``, or None.  A hit refreshes the
+        entry's LRU position."""
+        with self._lock:
+            arr = self._entries.get(key)
+            if arr is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            self.hit_bytes += arr.nbytes
+            return arr
+
+    def put(self, key, arr: np.ndarray) -> None:
+        """Publish a decoded stream (expected frozen read-only); evicts
+        LRU entries until the byte cap holds again."""
+        with self._lock:
+            if key in self._entries:
+                return  # decode is deterministic: same key, same bytes
+            if self.max_bytes is not None and arr.nbytes > self.max_bytes:
+                return
+            self._entries[key] = arr
+            self.bytes_cached += arr.nbytes
+            self.insertions += 1
+            while (self.max_bytes is not None
+                   and self.bytes_cached > self.max_bytes):
+                _, old = self._entries.popitem(last=False)
+                self.bytes_cached -= old.nbytes
+                self.evictions += 1
+
+    def saved_fetch(self, nbytes: int) -> None:
+        """Credit ``nbytes`` of plane fetches a cache hit avoided."""
+        with self._lock:
+            self.fetch_bytes_saved += int(nbytes)
+
+    # ---- introspection
+
+    @property
+    def hit_rate(self) -> float:
+        """hits / (hits + misses); 0.0 before any lookup."""
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def stats(self) -> dict:
+        """Snapshot of every counter (plain dict, JSON-serializable)."""
+        return {
+            "entries": len(self._entries),
+            "bytes_cached": self.bytes_cached,
+            "max_bytes": self.max_bytes,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hit_rate,
+            "hit_bytes": self.hit_bytes,
+            "fetch_bytes_saved": self.fetch_bytes_saved,
+            "evictions": self.evictions,
+            "insertions": self.insertions,
+        }
+
+    def clear(self) -> None:
+        """Drop every entry (counters are kept — they are lifetime
+        accounting, not occupancy)."""
+        with self._lock:
+            self._entries.clear()
+            self.bytes_cached = 0
+
+    def __repr__(self) -> str:
+        cap = "unbounded" if self.max_bytes is None else f"{self.max_bytes}B"
+        return (f"PlaneCache({len(self._entries)} entries, "
+                f"{self.bytes_cached}B/{cap}, hit_rate={self.hit_rate:.2f})")

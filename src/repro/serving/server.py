@@ -1,0 +1,354 @@
+"""Continuous-batching retrieval server over progressive archives.
+
+The production shape of the paper's workload (ROADMAP item 1): many
+concurrent readers ask for the *same* archives at *different* fidelities,
+and progressive bytes are shared ordered streams — so both the decoded
+prefixes and the kernel launches are shareable across requests.  The
+server realizes both:
+
+* a request queue of ``(archive_id, Fidelity)`` jobs
+  (:meth:`RetrievalServer.submit`), drained in scheduler ticks
+  (:meth:`run_tick` / :meth:`drain`) — the structural twin of the model
+  decode loop in ``launch.serve``, with bitplane prefixes in place of KV
+  caches;
+* a shared :class:`~.cache.PlaneCache` (``plane cache``): requests that
+  reach a (chunk, prefix) another session already decoded skip the fetch
+  *and* the unpack kernel;
+* **cross-request coalescing**: each tick, the per-chunk decode jobs of
+  *all* runnable requests are grouped by shape signature and executed
+  through :func:`~repro.core.pipeline.decode.decode_group` — the same
+  batched executor in-session chunk groups use — so one
+  ``decode_level_batch`` / ``reconstruct_batch`` launch serves chunks
+  from many requests at once (``coalesce=False`` keeps groups
+  per-request, for A/B dispatch accounting).
+
+Requests are isolated: a planner error (e.g. an infeasible
+``Fidelity.max_bytes``) fails that request with the error message and
+the tick goes on.  Reconstruction bits are identical to a private
+uncached session per request — caching, dedup, and coalescing are
+execution details (pinned by ``tests/test_serve_tier.py`` and the
+``benchmarks/serve_bench.py`` parity check).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..api import Archive, ExecPolicy, Fidelity
+from ..core import loader
+from ..core.pipeline import decode, spec
+from ..core.pipeline.encode import group_cap
+from ..core.pipeline.state import ChunkedRetrievalState, RetrievalState
+from .cache import PlaneCache
+
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+FAILED = "failed"
+
+
+@dataclass
+class ServeRequest:
+    """One queued retrieval: target fidelity against a registered archive.
+
+    The server fills in lifecycle fields as the request moves
+    ``queued -> done | failed``; ``result`` is the reconstruction,
+    ``bytes_read`` / ``err_bound`` the session accounting, ``latency_s``
+    wall time from submit to completion.  ``refine_of`` chains onto a
+    finished request's progressive state: the child fetches only the
+    planes its tighter fidelity adds (Algorithm 2, across requests).
+    """
+    req_id: int
+    archive_id: str
+    fidelity: Fidelity
+    propagation: str = loader.SAFE
+    refine_of: Optional["ServeRequest"] = None
+    status: str = QUEUED
+    result: Optional[np.ndarray] = None
+    error: Optional[str] = None
+    bytes_read: int = 0
+    err_bound: float = float("inf")
+    submitted_s: float = field(default_factory=time.perf_counter)
+    latency_s: float = 0.0
+    # session internals (reader + progressive state), server-managed
+    _reader: object = None
+    _state: object = None
+
+
+@dataclass
+class _Job:
+    """One chunk decode unit: the coalescer's currency."""
+    req: ServeRequest
+    chunk_idx: Optional[int]          # None = v1 archive (single slab)
+    sub_reader: object
+    prior_state: Optional[RetrievalState]
+    keep_planes: List[int]
+    new_state: Optional[RetrievalState] = None
+
+
+def _shape_sig(meta) -> tuple:
+    """Batch-compatibility signature: jobs with equal signatures may share
+    one stacked kernel launch (same contract as ``encode.shape_groups``
+    plus the level/anchor structure ``*_batch`` helpers assume)."""
+    return (tuple(meta.shape), meta.interp,
+            tuple(lv.n for lv in meta.levels),
+            tuple(meta.anchors_shape))
+
+
+class RetrievalServer:
+    """Continuous-batching server over a registry of progressive archives.
+
+    ``policy``
+        :class:`ExecPolicy` executing every tick (default
+        ``spec.DEFAULT_POLICY``); like sessions, the policy never changes
+        reconstruction bits — only dispatch counts and speed.
+    ``cache``
+        A shared :class:`PlaneCache` (None disables prefix reuse).
+    ``coalesce``
+        True (default) groups decode jobs across requests; False keeps
+        each request's jobs in their own groups — the per-request
+        baseline the benchmark compares dispatch counts against.
+    ``propagation``
+        Default error-propagation model for requests that don't pick one.
+
+    Dispatch accounting lives in :attr:`counters`
+    (``decode_level`` / ``reconstruct`` / ``dedup_reuse`` primitive
+    invocations, backend-independent — see ``pipeline.state``).
+    """
+
+    def __init__(self, policy: Optional[ExecPolicy] = None,
+                 cache: Optional[PlaneCache] = None, coalesce: bool = True,
+                 propagation: str = loader.SAFE):
+        self.policy = policy if policy is not None else spec.DEFAULT_POLICY
+        self.cache = cache
+        self.coalesce = coalesce
+        self.propagation = propagation
+        self.counters: Dict[str, int] = {}
+        self.ticks = 0
+        self._archives: Dict[str, Archive] = {}
+        self._queue: List[ServeRequest] = []
+        self._next_id = 0
+        self._done = 0
+        self._failed = 0
+
+    # ---- registry / queue
+
+    def add_archive(self, archive_id: str, archive: Archive) -> None:
+        """Register ``archive`` under ``archive_id``.
+
+        The id becomes the plane-cache scope for every session the server
+        opens on it, so it must be stable: rebinding an id to *different*
+        bytes would poison cache keys and is rejected (idempotent
+        re-registration of equal bytes is fine).
+        """
+        prev = self._archives.get(archive_id)
+        if prev is not None and prev != archive:
+            raise ValueError(
+                f"archive_id {archive_id!r} is already bound to different "
+                "bytes; cache scopes require a stable id -> bytes mapping")
+        self._archives[archive_id] = archive
+
+    def submit(self, archive_id: str, fidelity: Optional[Fidelity] = None,
+               propagation: Optional[str] = None,
+               refine_of: Optional[ServeRequest] = None) -> ServeRequest:
+        """Enqueue a retrieval; returns the live :class:`ServeRequest`.
+
+        ``refine_of`` chains onto an earlier request for the same
+        archive: once the parent is DONE, the child reuses its
+        progressive state and fetches only the additional planes.
+        """
+        if archive_id not in self._archives:
+            raise KeyError(f"unknown archive_id {archive_id!r}; "
+                           "add_archive() it first")
+        if refine_of is not None and refine_of.archive_id != archive_id:
+            raise ValueError(
+                f"refine_of targets archive {refine_of.archive_id!r}, "
+                f"not {archive_id!r}")
+        req = ServeRequest(
+            req_id=self._next_id, archive_id=archive_id,
+            fidelity=fidelity if fidelity is not None else Fidelity.full(),
+            propagation=propagation if propagation is not None
+            else self.propagation,
+            refine_of=refine_of)
+        self._next_id += 1
+        self._queue.append(req)
+        return req
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ---- scheduling
+
+    def _runnable(self) -> List[ServeRequest]:
+        """Dequeue requests whose refine parent (if any) has settled;
+        failed parents fail their children immediately."""
+        ready, still = [], []
+        for req in self._queue:
+            parent = req.refine_of
+            if parent is None or parent.status == DONE:
+                ready.append(req)
+            elif parent.status == FAILED:
+                req.status = FAILED
+                req.error = (f"refine parent request {parent.req_id} "
+                             f"failed: {parent.error}")
+                req.latency_s = time.perf_counter() - req.submitted_s
+                self._failed += 1
+            else:
+                still.append(req)
+        self._queue = still
+        return ready
+
+    def _plan_jobs(self, req: ServeRequest) -> List[_Job]:
+        """Open/reuse the request's session and plan its chunk jobs.
+
+        Planner errors (infeasible byte targets, bounds below eb) raise —
+        the tick isolates them to this request.
+        """
+        archive = self._archives[req.archive_id]
+        if req._reader is None:
+            if req.refine_of is not None:
+                req._reader = req.refine_of._reader
+                req._state = req.refine_of._state
+            else:
+                req._reader = archive.new_reader(cache_scope=req.archive_id)
+        reader, state = req._reader, req._state
+        prop = req.propagation
+        if not archive.chunked:
+            keep = decode.plan_retrieval(reader.meta, req.fidelity,
+                                         prop).keep_planes
+            return [_Job(req, None, reader, state, keep)]
+        budgets = decode.chunk_budgets(reader, req.fidelity, state)
+        if state is None:
+            state = req._state = ChunkedRetrievalState(
+                reader=reader,
+                chunk_states=[None] * len(reader.meta.chunks))
+        jobs = []
+        for i in range(len(reader.meta.chunks)):
+            sub = reader.chunk_reader(i)
+            keep = decode.plan_retrieval(
+                sub.meta, decode.sub_fidelity(req.fidelity, budgets, i),
+                prop).keep_planes
+            jobs.append(_Job(req, i, sub, state.chunk_states[i], keep))
+        return jobs
+
+    def run_tick(self) -> List[ServeRequest]:
+        """One scheduler tick: plan every runnable request, coalesce the
+        chunk jobs into shape groups, execute each group as one batched
+        launch sequence, assemble per-request results.  Returns the
+        requests that settled (DONE or FAILED) this tick.
+        """
+        self.ticks += 1
+        ready = self._runnable()
+        settled: List[ServeRequest] = []
+        groups: Dict[tuple, List[_Job]] = {}
+        by_req: Dict[int, List[_Job]] = {}
+        for req in ready:
+            req.status = RUNNING
+            try:
+                jobs = self._plan_jobs(req)
+            except Exception as e:  # planner rejection: isolate to request
+                req.status = FAILED
+                req.error = f"{type(e).__name__}: {e}"
+                req.latency_s = time.perf_counter() - req.submitted_s
+                self._failed += 1
+                settled.append(req)
+                continue
+            by_req[req.req_id] = jobs
+            for job in jobs:
+                sig = _shape_sig(job.sub_reader.meta) + (req.propagation,)
+                if not self.coalesce:
+                    sig = sig + (req.req_id,)
+                groups.setdefault(sig, []).append(job)
+        ctx = self.policy.bind(chunked=True, encode=False)
+        cap = group_cap(ctx.mesh)
+        for sig, jobs in groups.items():
+            for lo in range(0, len(jobs), cap):
+                part = jobs[lo:lo + cap]
+                # requests sharing a group share a propagation (in sig)
+                sts = decode.decode_group(
+                    [j.sub_reader for j in part],
+                    [j.prior_state for j in part],
+                    [j.keep_planes for j in part],
+                    ctx, sig[4], cache=self.cache, counters=self.counters)
+                for job, st in zip(part, sts):
+                    job.new_state = st
+        for req in ready:
+            if req.status == FAILED:
+                continue
+            self._assemble(req, by_req[req.req_id])
+            settled.append(req)
+        return settled
+
+    def _assemble(self, req: ServeRequest, jobs: List[_Job]) -> None:
+        """Merge a request's finished chunk states into its result and
+        session accounting (mirrors ``decode._retrieve_chunked``'s
+        epilogue)."""
+        reader = req._reader
+        m = reader.meta
+        if jobs[0].chunk_idx is None:
+            st = jobs[0].new_state
+            req._state = st
+            req.result = st.xhat.astype(np.dtype(m.dtype))
+            req.err_bound = st.err_bound
+            req.bytes_read = reader.bytes_read
+        else:
+            state: ChunkedRetrievalState = req._state
+            for job in jobs:
+                state.chunk_states[job.chunk_idx] = job.new_state
+            out = np.empty(m.shape, np.dtype(m.dtype))
+            for i, cm in enumerate(m.chunks):
+                out[cm.start:cm.stop] = \
+                    state.chunk_states[i].xhat.astype(np.dtype(m.dtype))
+            state.err_bound = max(cs.err_bound
+                                  for cs in state.chunk_states)
+            state.bytes_read = reader.bytes_read
+            req.result = out
+            req.err_bound = state.err_bound
+            req.bytes_read = state.bytes_read
+        req.status = DONE
+        req.latency_s = time.perf_counter() - req.submitted_s
+        self._done += 1
+
+    def drain(self, max_ticks: int = 1000) -> List[ServeRequest]:
+        """Run ticks until the queue is empty; returns every request that
+        settled.  ``max_ticks`` guards against a stuck dependency chain
+        (a child whose parent never settles)."""
+        settled: List[ServeRequest] = []
+        while self._queue:
+            if self.ticks >= max_ticks:
+                raise RuntimeError(
+                    f"drain exceeded {max_ticks} ticks with "
+                    f"{len(self._queue)} requests still queued")
+            progressed = self.run_tick()
+            if not progressed and self._queue:
+                raise RuntimeError(
+                    "scheduler stalled: queued requests have unsatisfied "
+                    "refine dependencies")
+            settled.extend(progressed)
+        return settled
+
+    # ---- introspection
+
+    def stats(self) -> dict:
+        """Lifetime accounting snapshot (JSON-serializable)."""
+        out = {
+            "ticks": self.ticks,
+            "pending": len(self._queue),
+            "done": self._done,
+            "failed": self._failed,
+            "coalesce": self.coalesce,
+            "counters": dict(self.counters),
+            "archives": len(self._archives),
+        }
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        return out
+
+    def __repr__(self) -> str:
+        return (f"RetrievalServer({len(self._archives)} archives, "
+                f"{len(self._queue)} queued, {self._done} done, "
+                f"{self._failed} failed, coalesce={self.coalesce})")

@@ -1,0 +1,123 @@
+"""Loader-planner regression suite: propagation parity + infeasible
+byte budgets.
+
+Two planner bugs pinned here:
+
+* ``plan_full`` hardcoded the PAPER propagation model for its reported
+  ``err_bound`` while sessions default to SAFE — every plan mode must
+  now report the *same* bound the session's ``update_achieved_bound``
+  recomputes after executing the plan, under either propagation model.
+* ``plan_bitrate_mode`` with a budget below the plan floor (escape
+  channels always travel with their level) silently returned a plan
+  whose ``loaded_bytes`` exceeded ``max_bytes`` — it must raise a clear
+  ValueError instead, on v1 and chunked v2 alike; a budget exactly at
+  the floor stays feasible.
+"""
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro import Archive, Codec, Fidelity
+from repro.core import container, loader
+from repro.core.pipeline import decode
+
+X = smooth_field((40, 37), seed=5)
+
+#: forces escape channels: isolated extreme outliers blow the quantizer
+#: range so the encoder stores them losslessly (esc_size > 0)
+X_ESC = X.copy()
+X_ESC[13, 17] = 1e15
+X_ESC[0, 0] = -1e15
+
+
+def _meta(x, **codec_kw):
+    arc = Codec(**codec_kw).compress(x)
+    return container.open_reader(arc.tobytes()).meta, arc
+
+
+FIDELITIES = [Fidelity.error_bound(1e-2), Fidelity.error_bound(1e-4),
+              Fidelity.max_bytes(2500), Fidelity.bitrate(4.0),
+              Fidelity.full()]
+_F_IDS = ["eb1e-2", "eb1e-4", "bytes2500", "bitrate4", "full"]
+
+
+@pytest.mark.parametrize("propagation", [loader.PAPER, loader.SAFE])
+@pytest.mark.parametrize("fidelity", FIDELITIES, ids=_F_IDS)
+def test_plan_bound_matches_achieved_bound(fidelity, propagation):
+    """Every plan mode's reported err_bound equals the bound the session
+    recomputes from the loaded planes, under the same propagation —
+    planner and accountant share one model (plan_full used to hardcode
+    PAPER)."""
+    meta, arc = _meta(X, eb=1e-5)
+    plan = decode.plan_retrieval(meta, fidelity, propagation)
+    reader = arc.new_reader()
+    _, st = decode.read_archive(reader, fidelity, propagation=propagation)
+    assert st.planes_loaded == plan.keep_planes
+    assert st.err_bound == plan.err_bound
+
+
+def test_plan_full_threads_propagation():
+    """plan_full accepts and forwards the propagation model (its cost
+    tables must be the requested model's, not PAPER's)."""
+    meta, _ = _meta(X, eb=1e-5)
+    for prop in (loader.PAPER, loader.SAFE):
+        plan = loader.plan_full(meta, prop)
+        errs, _ = loader._level_cost_tables(meta, prop)
+        want = meta.eb + sum(float(e[0]) for e in errs)
+        assert plan.err_bound == want
+        assert plan.keep_planes == [lv.nbits for lv in meta.levels]
+    # and the Fidelity dispatcher passes the model through
+    assert decode.plan_retrieval(meta, Fidelity.full(),
+                                 loader.SAFE).err_bound == \
+        loader.plan_full(meta, loader.SAFE).err_bound
+
+
+def test_bitrate_below_floor_raises_v1():
+    """A byte budget below the escape-channel floor is infeasible and
+    raises (the old silent behaviour returned loaded_bytes > max_bytes)."""
+    meta, _ = _meta(X_ESC, eb=1e-7)
+    floor = sum(lv.esc_size for lv in meta.levels)
+    assert floor > 0, "fixture must force escape channels"
+    with pytest.raises(ValueError, match="infeasible"):
+        loader.plan_bitrate_mode(meta, floor - 1)
+    # exactly at the floor: feasible, minimal plan, contract holds
+    plan = loader.plan_bitrate_mode(meta, floor)
+    assert plan.keep_planes == [0] * len(meta.levels)
+    assert plan.loaded_bytes == floor <= floor
+
+
+def test_bitrate_floor_plan_respects_max_bytes():
+    """Any feasible budget must come back with loaded_bytes <= max_bytes
+    (the violated contract of the original bug)."""
+    meta, _ = _meta(X_ESC, eb=1e-7)
+    floor = sum(lv.esc_size for lv in meta.levels)
+    for budget in (floor, floor + 1, floor + 500, 10 ** 9):
+        plan = loader.plan_bitrate_mode(meta, budget)
+        assert plan.loaded_bytes <= budget
+
+
+def test_bitrate_below_floor_raises_through_session_v1():
+    _, arc = _meta(X_ESC, eb=1e-7)
+    with pytest.raises(ValueError, match="infeasible"):
+        arc.open().read(Fidelity.max_bytes(1))
+
+
+def test_bitrate_below_floor_raises_through_session_v2():
+    """Chunked archives split the budget per chunk; a chunk whose share
+    falls below its escape floor surfaces the same clear error."""
+    _, arc = _meta(X_ESC, eb=1e-7, chunk_elems=370)
+    assert arc.chunked
+    with pytest.raises(ValueError, match="infeasible"):
+        arc.open().read(Fidelity.max_bytes(1))
+
+
+def test_zero_budget_without_escapes_is_feasible():
+    """With no escape channels the plan floor is zero bytes: max_bytes=0
+    returns the anchors-only plan instead of raising."""
+    meta, arc = _meta(X, eb=1e-5)
+    assert all(lv.esc_size == 0 for lv in meta.levels)
+    plan = loader.plan_bitrate_mode(meta, 0)
+    assert plan.keep_planes == [0] * len(meta.levels)
+    assert plan.loaded_bytes == 0
+    out = arc.open().read(Fidelity.max_bytes(0))
+    assert out.shape == X.shape

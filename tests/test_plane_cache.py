@@ -1,0 +1,173 @@
+"""Plane-cache behaviour: LRU accounting, eviction, and the structural
+invariant that caching never changes reconstruction bits.
+
+The cache stores decoded truncated-negabinary prefixes — deterministic
+functions of (archive bytes, level, prefix) — so sharing them across
+sessions is an execution detail: hits may shrink a session's
+``bytes_read`` (the serving win) but bits and achieved bounds are
+untouchable (see also the policy-matrix extension in
+``test_policy_matrix.py``).
+"""
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro import Codec, ExecPolicy, Fidelity
+from repro.serving import PlaneCache
+
+X = smooth_field((48, 40), seed=9)
+V1 = Codec(eb=1e-5)
+V2 = Codec(eb=1e-5, chunk_elems=512)
+
+LADDER = (Fidelity.error_bound(1e-2), Fidelity.error_bound(1e-4),
+          Fidelity.full())
+
+
+def _arr(nbytes, fill=1):
+    return np.full(nbytes // 4, fill, np.uint32)
+
+
+# ---- unit behaviour of the LRU map
+
+def test_get_put_roundtrip_and_stats():
+    c = PlaneCache()
+    assert c.get("k") is None
+    a = _arr(64)
+    c.put("k", a)
+    got = c.get("k")
+    assert got is a
+    assert c.hits == 1 and c.misses == 1
+    assert c.hit_bytes == a.nbytes
+    assert c.bytes_cached == a.nbytes
+    assert c.hit_rate == 0.5
+    s = c.stats()
+    assert s["entries"] == 1 and s["insertions"] == 1
+
+
+def test_duplicate_put_is_idempotent():
+    c = PlaneCache()
+    c.put("k", _arr(64))
+    c.put("k", _arr(64, fill=2))  # decode is deterministic: ignored
+    assert int(c.get("k")[0]) == 1
+    assert c.insertions == 1 and c.bytes_cached == 64
+
+
+def test_lru_eviction_under_byte_cap():
+    c = PlaneCache(max_bytes=256)
+    for i in range(4):
+        c.put(i, _arr(64, fill=i))
+    c.get(0)                      # refresh 0: 1 becomes the LRU entry
+    c.put(4, _arr(64, fill=4))
+    assert 1 not in c and 0 in c and 4 in c
+    assert c.evictions == 1
+    assert c.bytes_cached <= 256
+
+
+def test_oversized_entry_not_admitted():
+    c = PlaneCache(max_bytes=128)
+    c.put("small", _arr(64))
+    c.put("huge", _arr(512))      # would evict everything for one entry
+    assert "huge" not in c and "small" in c
+    assert c.bytes_cached == 64
+
+
+def test_saved_fetch_accumulates():
+    c = PlaneCache()
+    c.saved_fetch(100)
+    c.saved_fetch(23)
+    assert c.fetch_bytes_saved == 123
+
+
+def test_clear_keeps_lifetime_counters():
+    c = PlaneCache()
+    c.put("k", _arr(64))
+    c.get("k")
+    c.clear()
+    assert len(c) == 0 and c.bytes_cached == 0
+    assert c.hits == 1 and c.insertions == 1
+
+
+def test_invalid_cap_rejected():
+    with pytest.raises(ValueError):
+        PlaneCache(max_bytes=0)
+
+
+# ---- sessions sharing a cache
+
+@pytest.mark.parametrize("codec", [V1, V2], ids=["v1", "v2"])
+def test_interleaved_sessions_share_prefixes(codec):
+    """Two sessions over equal archives: the second's reads hit the
+    first's decoded prefixes (hit/miss accounting moves), interleaving
+    rungs freely; bits and bounds match cache-off sessions exactly."""
+    arc = codec.compress(X)
+    cache = PlaneCache()
+    a = arc.open(plane_cache=cache)
+    b = arc.open(plane_cache=cache)
+    ref = arc.open()
+    for fid in LADDER:
+        out_a = a.read(fid)
+        hits_before = cache.hits
+        out_b = b.read(fid)          # same prefix, decoded moments ago
+        out_ref = ref.read(fid)
+        assert cache.hits > hits_before
+        assert np.array_equal(out_a, out_ref)
+        assert np.array_equal(out_b, out_ref)
+        assert a.achieved_bound == b.achieved_bound == ref.achieved_bound
+    # the hitting session skipped plane fetches: strictly fewer bytes
+    assert b.bytes_read < a.bytes_read == ref.bytes_read
+    assert cache.fetch_bytes_saved > 0
+    assert cache.hit_bytes > 0
+
+
+def test_cache_entries_are_frozen():
+    arc = V1.compress(X)
+    cache = PlaneCache()
+    arc.open(plane_cache=cache).read(Fidelity.full())
+    assert len(cache) > 0
+    for arr in cache._entries.values():
+        assert not arr.flags.writeable
+
+
+@pytest.mark.parametrize("codec", [V1, V2], ids=["v1", "v2"])
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_cache_on_off_bit_identical(codec, backend):
+    """The whole ladder, cache on vs off, both backends: identical bits
+    and bounds at every rung (bytes_read may only shrink with the
+    cache)."""
+    arc = codec.compress(X)
+    policy = ExecPolicy(backend=backend)
+    cache = PlaneCache()
+    arc.open(policy, plane_cache=cache).read(Fidelity.full())  # warm
+    on = arc.open(policy, plane_cache=cache)
+    off = arc.open(policy)
+    for fid in LADDER:
+        assert np.array_equal(on.read(fid), off.read(fid))
+        assert on.achieved_bound == off.achieved_bound
+        assert on.bytes_read <= off.bytes_read
+
+
+def test_eviction_during_session_keeps_bits():
+    """A cache too small to hold the working set evicts mid-ladder and
+    later reads decode afresh — still bit-identical."""
+    arc = V2.compress(X)
+    cache = PlaneCache(max_bytes=4096)
+    on = arc.open(plane_cache=cache)
+    off = arc.open()
+    for fid in LADDER:
+        assert np.array_equal(on.read(fid), off.read(fid))
+    arc.open(plane_cache=cache).read(Fidelity.full())
+    assert cache.evictions > 0
+    assert cache.bytes_cached <= 4096
+
+
+def test_distinct_archives_never_collide():
+    """Different archive bytes get different cache scopes even in one
+    shared cache: reads stay correct for both."""
+    y = smooth_field((48, 40), seed=10)
+    arc_x, arc_y = V1.compress(X), V1.compress(y)
+    cache = PlaneCache()
+    sx = arc_x.open(plane_cache=cache)
+    sy = arc_y.open(plane_cache=cache)
+    out_x, out_y = sx.read(Fidelity.full()), sy.read(Fidelity.full())
+    assert np.abs(out_x - X).max() <= 1e-5
+    assert np.abs(out_y - y).max() <= 1e-5

@@ -98,6 +98,34 @@ def test_mixed_policy_session_equals_fixed_policy_session():
         assert fixed.achieved_bound == mixed.achieved_bound
 
 
+@pytest.mark.parametrize("policy",
+                         [ExecPolicy(), ExecPolicy(backend="jax"),
+                          ExecPolicy(backend="jax", batch_chunks=True)],
+                         ids=["default", "jax", "jax-batched"])
+@pytest.mark.parametrize("codec", [V1, V2], ids=["v1", "v2"])
+def test_plane_cache_never_changes_bits(codec, policy):
+    """Caching is an ExecPolicy-class concern: a shared plane cache (the
+    serving tier's cross-session reuse, ``repro.serving.PlaneCache``)
+    must never change reconstruction bits or achieved bounds — only
+    ``bytes_read`` may shrink, when a hit skips already-decoded plane
+    fetches."""
+    from repro.serving import PlaneCache
+    ref_bytes, ref_trace = _REF[codec]
+    cache = PlaneCache()
+    arc = Archive.frombytes(ref_bytes)
+    arc.open(policy, plane_cache=cache).read(Fidelity.full())  # warm peer
+    session = arc.open(policy, plane_cache=cache)
+    for fid, (rout, rrd, rbound) in zip(LADDER, ref_trace):
+        out = session.read(fid)
+        assert np.array_equal(out, rout), \
+            "reconstruction bits depend on the plane cache"
+        assert session.achieved_bound == rbound, \
+            "achieved bound depends on the plane cache"
+        assert session.bytes_read <= rrd, \
+            "a cache hit may only shrink bytes_read"
+    assert cache.hits > 0, "the warmed cache must actually serve the session"
+
+
 def test_writer_reader_policy_independence():
     """An archive written under any policy is read identically under any
     other (the format records nothing about the writer's policy)."""

@@ -1,0 +1,181 @@
+"""Serving-tier behaviour: the continuous-batching RetrievalServer.
+
+Pins the tentpole contracts: served reconstructions are bit-identical
+to private uncached sessions at the same fidelity, cross-request
+coalescing strictly reduces dispatch counts, the shared plane cache sees
+real reuse with byte accounting, refine chains ride earlier requests'
+progressive state, and a planner rejection fails only its own request.
+"""
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro import Codec, ExecPolicy, Fidelity
+from repro.serving import (DONE, FAILED, PlaneCache, RetrievalServer,
+                           ServeRequest)
+
+X = smooth_field((48, 40), seed=2)
+Y = smooth_field((32, 32), seed=4)
+V2 = Codec(eb=1e-5, chunk_elems=512)
+V1 = Codec(eb=1e-5)
+
+MIX = (Fidelity.error_bound(1e-2), Fidelity.error_bound(1e-4),
+       Fidelity.bitrate(4.0), Fidelity.full())
+
+
+def _server(**kw):
+    srv = RetrievalServer(**kw)
+    srv.add_archive("x2", V2.compress(X))
+    srv.add_archive("y2", V2.compress(Y))
+    srv.add_archive("x1", V1.compress(X))
+    return srv
+
+
+def _mixed_wave(srv):
+    return [srv.submit(aid, fid)
+            for aid in ("x2", "y2", "x1") for fid in MIX]
+
+
+@pytest.mark.parametrize("coalesce", [True, False], ids=["coal", "percall"])
+@pytest.mark.parametrize("cached", [True, False], ids=["cache", "nocache"])
+def test_served_bits_match_private_sessions(coalesce, cached):
+    """Every (coalesce, cache) corner serves the exact bits a private
+    uncached session produces, with the same achieved bound."""
+    srv = _server(cache=PlaneCache() if cached else None, coalesce=coalesce)
+    reqs = _mixed_wave(srv)
+    srv.drain()
+    for req in reqs:
+        assert req.status == DONE, req.error
+        session = srv._archives[req.archive_id].open()
+        ref = session.read(req.fidelity)
+        assert np.array_equal(req.result, ref)
+        assert req.err_bound == session.achieved_bound
+        assert req.bytes_read <= session.bytes_read
+
+
+def test_coalescing_reduces_dispatches():
+    """Same workload, jax backend (batched decode slots): coalesced
+    groups run strictly fewer backend primitives than per-request
+    groups."""
+    policy = ExecPolicy(backend="jax")
+    counts = {}
+    for coalesce in (False, True):
+        srv = _server(policy=policy, coalesce=coalesce)
+        _mixed_wave(srv)
+        srv.drain()
+        counts[coalesce] = sum(v for k, v in srv.counters.items()
+                               if k != "dedup_reuse")
+    assert counts[True] < counts[False]
+
+
+def test_cache_reuse_across_requests():
+    cache = PlaneCache()
+    srv = _server(cache=cache)
+    reqs = _mixed_wave(srv)
+    # a second identical wave: every prefix is already decoded
+    hits_before = cache.hits
+    again = _mixed_wave(srv)
+    srv.drain()
+    assert cache.hits > hits_before
+    assert cache.hit_bytes > 0 and cache.bytes_cached > 0
+    assert cache.fetch_bytes_saved > 0
+    for first, second in zip(reqs, again):
+        assert np.array_equal(first.result, second.result)
+        # the repeat request fetched fewer bytes than the first
+        assert second.bytes_read <= first.bytes_read
+
+
+def test_refine_chain_rides_parent_state():
+    """A refine_of child reuses the parent's progressive state: bits
+    equal a private session walking the same ladder, and the chain's
+    total bytes stay below two cold reads."""
+    srv = _server(cache=PlaneCache())
+    parent = srv.submit("x2", Fidelity.error_bound(1e-2))
+    child = srv.submit("x2", Fidelity.full(), refine_of=parent)
+    srv.drain()
+    assert parent.status == DONE and child.status == DONE
+    session = srv._archives["x2"].open()
+    session.read(Fidelity.error_bound(1e-2))
+    ref = session.read(Fidelity.full())
+    assert np.array_equal(child.result, ref)
+    assert child.bytes_read <= session.bytes_read
+
+
+def test_planner_rejection_isolated_to_request():
+    """An infeasible byte budget (below the escape-channel floor) fails
+    its own request with the planner's message; the rest of the tick
+    completes."""
+    x = X.copy()
+    x[13, 17] = 1e15          # escape outlier -> nonzero plan floor
+    srv = RetrievalServer()
+    srv.add_archive("esc", Codec(eb=1e-7).compress(x))
+    bad = srv.submit("esc", Fidelity.max_bytes(1))
+    good = srv.submit("esc", Fidelity.error_bound(1e-2))
+    srv.drain()
+    assert bad.status == FAILED and "infeasible" in bad.error
+    assert good.status == DONE
+    assert srv.stats()["failed"] == 1 and srv.stats()["done"] == 1
+
+
+def test_failed_parent_fails_child():
+    x = X.copy()
+    x[13, 17] = 1e15
+    srv = RetrievalServer()
+    srv.add_archive("esc", Codec(eb=1e-7).compress(x))
+    parent = srv.submit("esc", Fidelity.max_bytes(1))
+    child = srv.submit("esc", Fidelity.full(), refine_of=parent)
+    srv.drain()
+    assert parent.status == FAILED
+    assert child.status == FAILED and "parent" in child.error
+
+
+def test_registry_guards():
+    srv = _server()
+    with pytest.raises(KeyError):
+        srv.submit("nope", Fidelity.full())
+    # idempotent re-registration of equal bytes is fine
+    srv.add_archive("x2", V2.compress(X))
+    # rebinding an id to different bytes would poison cache scopes
+    with pytest.raises(ValueError, match="different"):
+        srv.add_archive("x2", V2.compress(Y))
+    a = srv.submit("x2", Fidelity.full())
+    with pytest.raises(ValueError, match="refine_of"):
+        srv.submit("y2", Fidelity.full(), refine_of=a)
+
+
+def test_request_lifecycle_and_stats():
+    srv = _server(cache=PlaneCache())
+    reqs = _mixed_wave(srv)
+    assert srv.pending == len(reqs)
+    settled = srv.drain()
+    assert srv.pending == 0
+    assert {r.req_id for r in settled} == {r.req_id for r in reqs}
+    s = srv.stats()
+    assert s["done"] == len(reqs) and s["failed"] == 0
+    assert s["ticks"] >= 1
+    assert s["counters"]["decode_level"] > 0
+    assert s["cache"]["hits"] > 0
+    for r in reqs:
+        assert r.latency_s > 0
+        assert isinstance(r, ServeRequest)
+
+
+def test_duplicate_fidelity_requests_share_work():
+    """N identical requests in one tick: with coalescing + jax batching
+    the same-prefix decodes deduplicate (one leader decode, N-1
+    reuses)."""
+    srv = _server(policy=ExecPolicy(backend="jax"), coalesce=True)
+    reqs = [srv.submit("x2", Fidelity.error_bound(1e-3))
+            for _ in range(3)]
+    srv.drain()
+    assert srv.counters.get("dedup_reuse", 0) > 0
+    assert all(np.array_equal(reqs[0].result, r.result) for r in reqs[1:])
+
+
+def test_drain_guard_on_stuck_dependencies():
+    srv = _server()
+    phantom = ServeRequest(req_id=10 ** 6, archive_id="x2",
+                           fidelity=Fidelity.full())   # never scheduled
+    srv.submit("x2", Fidelity.full(), refine_of=phantom)
+    with pytest.raises(RuntimeError, match="stalled"):
+        srv.drain()
