@@ -233,6 +233,19 @@ class ArchiveReader:
         fetch bytes a cache hit avoids."""
         return f"L{level_idx}P{plane_idx}" in self._fetched
 
+    def fork(self) -> "ArchiveReader":
+        """An independent accounting branch of this reader: same bytes and
+        meta, same fetched-range history and cumulative ``bytes_read`` at
+        the fork point — after which the two readers count independently.
+        This is how a refine that branches off a shared session keeps its
+        own retrieval-volume ledger (cumulative over its whole ancestry)
+        without sibling branches bleeding fetches into each other."""
+        dup = ArchiveReader(self.buf, meta=self.meta)
+        dup.bytes_read = self.bytes_read
+        dup._fetched = set(self._fetched)
+        dup.cache_scope = self.cache_scope
+        return dup
+
     def anchors(self) -> np.ndarray:
         m = self.meta
         raw = self.read(m.anchors_offset, m.anchors_size, "anchors")
@@ -351,6 +364,16 @@ class ChunkedArchiveReader:
         if self.cache_scope is not None and sub.cache_scope is None:
             sub.cache_scope = (self.cache_scope, i)
         return sub
+
+    def fork(self) -> "ChunkedArchiveReader":
+        """Independent accounting branch (see :meth:`ArchiveReader.fork`):
+        every already-opened chunk sub-reader is forked with its fetch
+        history, so the branch's aggregated ``bytes_read`` starts at the
+        fork point and diverges independently."""
+        dup = ChunkedArchiveReader(self.buf, meta=self.meta)
+        dup.cache_scope = self.cache_scope
+        dup._readers = {i: r.fork() for i, r in self._readers.items()}
+        return dup
 
     @property
     def bytes_read(self) -> int:

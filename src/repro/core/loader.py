@@ -22,8 +22,9 @@ adversarial property tests.
 Chunked (v2) archives run this planner per chunk: error mode passes the
 requested bound straight through (per-chunk L_inf <= E implies the global
 bound), byte/bitrate budgets are pre-split across chunks proportionally to
-element count with largest-remainder rounding (see
-``pipeline.decode._retrieve_chunked`` / ``split_budget``).
+element count with largest-remainder rounding, after reserving each
+chunk's escape-channel plan floor (see
+``pipeline.decode._retrieve_chunked`` / ``refine_budgets``).
 """
 from __future__ import annotations
 

@@ -25,10 +25,12 @@ per-chunk L_inf bound implies the global one) and ``bytes_read``
 aggregates across chunks.  Byte/bitrate budgets are split across chunks
 proportionally to element count by largest-remainder assignment
 (:func:`split_budget`), so the total allocated budget equals the request
-exactly — no silent remainder loss; on a refine, each chunk first keeps
-the bytes it already read and only the *remaining* budget is split
-(:func:`refine_budgets`), so no chunk is starved for having consumed its
-share earlier.
+exactly — no silent remainder loss; each chunk's escape-channel plan
+floor is reserved before the proportional split, so a globally feasible
+budget never starves an escape-heavy chunk into infeasibility; on a
+refine, each chunk first keeps the bytes it already read and only the
+*remaining* budget is split (:func:`refine_budgets`), so no chunk is
+starved for having consumed its share earlier.
 
 Execution over the chunk grid is scheduled in equal-shape groups: when
 the backend ships batched primitives (``decode_level_batch`` /
@@ -237,7 +239,8 @@ def split_budget(total: int, weights: Sequence[int]) -> List[int]:
 
 
 def refine_budgets(total: int, weights: Sequence[int],
-                   spent: Sequence[int]) -> List[int]:
+                   spent: Sequence[int],
+                   floors: Optional[Sequence[int]] = None) -> List[int]:
     """Cumulative per-chunk byte budgets for a refine step.
 
     Each chunk keeps the bytes it already read (``spent``, from its
@@ -248,13 +251,30 @@ def refine_budgets(total: int, weights: Sequence[int],
     a silent no-op, starving it of further planes while the request still
     had budget to give.  With no prior spending this reduces exactly to
     :func:`split_budget`.
+
+    ``floors`` are per-chunk minimum feasible budgets (the escape-channel
+    plan floors of ``loader.plan_bitrate_mode``): each chunk is allocated
+    ``max(spent, floor)`` *first* and only the remainder is split
+    proportionally, so a globally feasible ``total`` (>= the summed
+    floors) can never starve one escape-heavy chunk below its floor and
+    fail the whole read.  ``total`` below the summed floors is infeasible
+    and raises.
     """
     spent = [int(s) for s in spent]
-    used = sum(spent)
-    if total - used <= 0:
+    floors = [0] * len(spent) if floors is None else [int(f) for f in floors]
+    if total - sum(spent) <= 0 and \
+            all(s >= f for s, f in zip(spent, floors)):
         return spent  # budget exhausted: every plan stays at what's loaded
-    return [s + extra
-            for s, extra in zip(spent, split_budget(total - used, weights))]
+    base = [max(s, f) for s, f in zip(spent, floors)]
+    need = sum(base)
+    if total < need:
+        raise ValueError(
+            f"max_bytes={total} is infeasible across the chunk grid: the "
+            f"smallest per-chunk plans load {need} bytes together (escape "
+            "channels are always loaded with their level); request at "
+            "least that many bytes or use an error-bound target")
+    return [b + extra
+            for b, extra in zip(base, split_budget(total - need, weights))]
 
 
 def chunk_budgets(reader: ChunkedArchiveReader, fidelity: Fidelity,
@@ -264,20 +284,23 @@ def chunk_budgets(reader: ChunkedArchiveReader, fidelity: Fidelity,
     None when the fidelity has no byte target (error-bound / full).
 
     Splits proportionally to element count via :func:`refine_budgets`,
-    crediting each chunk's already-read bytes from ``state`` — the exact
-    split ``_retrieve_chunked`` uses, exported so the serving tier's
-    per-chunk job plans match in-session plans byte for byte.
+    crediting each chunk's already-read bytes from ``state`` and
+    reserving each chunk's escape-channel plan floor before the
+    proportional split — the exact split ``_retrieve_chunked`` uses,
+    exported so the serving tier's per-chunk job plans match in-session
+    plans byte for byte.
     """
     m = reader.meta
     total_bytes = fidelity.target_bytes(m.n_elements)
     if total_bytes is None:
         return None
-    sub_ns = [reader.chunk_reader(i).meta.n_elements
-              for i in range(len(m.chunks))]
+    subs = [reader.chunk_reader(i) for i in range(len(m.chunks))]
+    sub_ns = [s.meta.n_elements for s in subs]
+    floors = [sum(lv.esc_size for lv in s.meta.levels) for s in subs]
     spent = [cs.bytes_read if cs is not None else 0
              for cs in state.chunk_states] if state is not None \
         else [0] * len(m.chunks)
-    return refine_budgets(total_bytes, sub_ns, spent)
+    return refine_budgets(total_bytes, sub_ns, spent, floors=floors)
 
 
 def sub_fidelity(fidelity: Fidelity, budgets: Optional[List[int]],

@@ -78,6 +78,43 @@ class ChunkedRetrievalState:
     bytes_read: int = 0
 
 
+def fork_state(state):
+    """Branch an independent progressive session off ``state``.
+
+    Returns a new :class:`RetrievalState` / :class:`ChunkedRetrievalState`
+    carrying the same loaded planes, reconstruction, and cumulative byte
+    accounting, backed by *forked* readers
+    (:meth:`~..container.ArchiveReader.fork`) — so several refinements can
+    branch off one finished session concurrently, each fetching only the
+    planes its own target adds, without sharing a mutable state or
+    ledger.  Cheap: ``nb_partial`` streams are immutable-by-contract
+    (replaced, never written in place) and ``xhat`` is only ever
+    reassigned, so the arrays themselves are shared.
+    """
+    if isinstance(state, ChunkedRetrievalState):
+        reader = state.reader.fork()
+        chunk_states = [
+            None if cs is None else RetrievalState(
+                reader=reader.chunk_reader(i),
+                planes_loaded=list(cs.planes_loaded),
+                nb_partial=list(cs.nb_partial),
+                esc_idx=list(cs.esc_idx),
+                xhat=cs.xhat, err_bound=cs.err_bound,
+                bytes_read=cs.bytes_read)
+            for i, cs in enumerate(state.chunk_states)]
+        return ChunkedRetrievalState(reader=reader,
+                                     chunk_states=chunk_states,
+                                     err_bound=state.err_bound,
+                                     bytes_read=state.bytes_read)
+    reader = state.reader.fork()
+    return RetrievalState(reader=reader,
+                          planes_loaded=list(state.planes_loaded),
+                          nb_partial=list(state.nb_partial),
+                          esc_idx=list(state.esc_idx),
+                          xhat=state.xhat, err_bound=state.err_bound,
+                          bytes_read=state.bytes_read)
+
+
 def _count(counters, name: str, k: int = 1) -> None:
     """Accumulate a backend-primitive invocation into ``counters`` (no-op
     when the caller did not ask for accounting)."""

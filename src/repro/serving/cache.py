@@ -81,7 +81,10 @@ class PlaneCache:
         LRU entries until the byte cap holds again."""
         with self._lock:
             if key in self._entries:
-                return  # decode is deterministic: same key, same bytes
+                # decode is deterministic: same key, same bytes — but the
+                # re-publish is still a use, so refresh recency like get()
+                self._entries.move_to_end(key)
+                return
             if self.max_bytes is not None and arr.nbytes > self.max_bytes:
                 return
             self._entries[key] = arr
@@ -100,32 +103,40 @@ class PlaneCache:
 
     # ---- introspection
 
-    @property
-    def hit_rate(self) -> float:
-        """hits / (hits + misses); 0.0 before any lookup."""
+    def _hit_rate_locked(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    @property
+    def hit_rate(self) -> float:
+        """hits / (hits + misses); 0.0 before any lookup."""
+        with self._lock:
+            return self._hit_rate_locked()
+
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     def stats(self) -> dict:
-        """Snapshot of every counter (plain dict, JSON-serializable)."""
-        return {
-            "entries": len(self._entries),
-            "bytes_cached": self.bytes_cached,
-            "max_bytes": self.max_bytes,
-            "hits": self.hits,
-            "misses": self.misses,
-            "hit_rate": self.hit_rate,
-            "hit_bytes": self.hit_bytes,
-            "fetch_bytes_saved": self.fetch_bytes_saved,
-            "evictions": self.evictions,
-            "insertions": self.insertions,
-        }
+        """Consistent snapshot of every counter, taken under the lock
+        (plain dict, JSON-serializable)."""
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "bytes_cached": self.bytes_cached,
+                "max_bytes": self.max_bytes,
+                "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": self._hit_rate_locked(),
+                "hit_bytes": self.hit_bytes,
+                "fetch_bytes_saved": self.fetch_bytes_saved,
+                "evictions": self.evictions,
+                "insertions": self.insertions,
+            }
 
     def clear(self) -> None:
         """Drop every entry (counters are kept — they are lifetime

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -41,7 +41,8 @@ from ..api import Archive, ExecPolicy, Fidelity
 from ..core import loader
 from ..core.pipeline import decode, spec
 from ..core.pipeline.encode import group_cap
-from ..core.pipeline.state import ChunkedRetrievalState, RetrievalState
+from ..core.pipeline.state import (ChunkedRetrievalState, RetrievalState,
+                                   fork_state)
 from .cache import PlaneCache
 
 QUEUED = "queued"
@@ -58,8 +59,10 @@ class ServeRequest:
     ``queued -> done | failed``; ``result`` is the reconstruction,
     ``bytes_read`` / ``err_bound`` the session accounting, ``latency_s``
     wall time from submit to completion.  ``refine_of`` chains onto a
-    finished request's progressive state: the child fetches only the
-    planes its tighter fidelity adds (Algorithm 2, across requests).
+    finished request's progressive state: the child branches a private
+    copy of it (forked reader accounting included) and fetches only the
+    planes its tighter fidelity adds (Algorithm 2, across requests);
+    sibling refinements of one parent are fully independent sessions.
     """
     req_id: int
     archive_id: str
@@ -157,8 +160,9 @@ class RetrievalServer:
         """Enqueue a retrieval; returns the live :class:`ServeRequest`.
 
         ``refine_of`` chains onto an earlier request for the same
-        archive: once the parent is DONE, the child reuses its
-        progressive state and fetches only the additional planes.
+        archive: once the parent is DONE, the child branches a private
+        copy of its progressive state and fetches only the additional
+        planes.
         """
         if archive_id not in self._archives:
             raise KeyError(f"unknown archive_id {archive_id!r}; "
@@ -183,24 +187,31 @@ class RetrievalServer:
 
     # ---- scheduling
 
-    def _runnable(self) -> List[ServeRequest]:
-        """Dequeue requests whose refine parent (if any) has settled;
-        failed parents fail their children immediately."""
-        ready, still = [], []
+    def _runnable(self) -> Tuple[List[ServeRequest], List[ServeRequest]]:
+        """Dequeue requests whose refine parent (if any) has settled.
+
+        Returns ``(ready, failed)``: runnable requests, plus the children
+        of FAILED parents — failed immediately here, and returned so
+        ``run_tick`` reports them as settled this tick."""
+        ready, still, failed = [], [], []
         for req in self._queue:
             parent = req.refine_of
             if parent is None or parent.status == DONE:
                 ready.append(req)
             elif parent.status == FAILED:
-                req.status = FAILED
-                req.error = (f"refine parent request {parent.req_id} "
-                             f"failed: {parent.error}")
-                req.latency_s = time.perf_counter() - req.submitted_s
-                self._failed += 1
+                self._fail(req, f"refine parent request {parent.req_id} "
+                           f"failed: {parent.error}")
+                failed.append(req)
             else:
                 still.append(req)
         self._queue = still
-        return ready
+        return ready, failed
+
+    def _fail(self, req: ServeRequest, error: str) -> None:
+        req.status = FAILED
+        req.error = error
+        req.latency_s = time.perf_counter() - req.submitted_s
+        self._failed += 1
 
     def _plan_jobs(self, req: ServeRequest) -> List[_Job]:
         """Open/reuse the request's session and plan its chunk jobs.
@@ -211,8 +222,13 @@ class RetrievalServer:
         archive = self._archives[req.archive_id]
         if req._reader is None:
             if req.refine_of is not None:
-                req._reader = req.refine_of._reader
-                req._state = req.refine_of._state
+                # branch a PRIVATE session off the parent: siblings that
+                # refine the same parent in the same tick must not alias
+                # one mutable state/reader, or the later sibling's delta
+                # would be computed against the earlier sibling's planes
+                # (breaking per-request bit parity with private sessions)
+                req._state = fork_state(req.refine_of._state)
+                req._reader = req._state.reader
             else:
                 req._reader = archive.new_reader(cache_scope=req.archive_id)
         reader, state = req._reader, req._state
@@ -242,8 +258,7 @@ class RetrievalServer:
         requests that settled (DONE or FAILED) this tick.
         """
         self.ticks += 1
-        ready = self._runnable()
-        settled: List[ServeRequest] = []
+        ready, settled = self._runnable()
         groups: Dict[tuple, List[_Job]] = {}
         by_req: Dict[int, List[_Job]] = {}
         for req in ready:
@@ -251,21 +266,36 @@ class RetrievalServer:
             try:
                 jobs = self._plan_jobs(req)
             except Exception as e:  # planner rejection: isolate to request
-                req.status = FAILED
-                req.error = f"{type(e).__name__}: {e}"
-                req.latency_s = time.perf_counter() - req.submitted_s
-                self._failed += 1
+                self._fail(req, f"{type(e).__name__}: {e}")
                 settled.append(req)
                 continue
             by_req[req.req_id] = jobs
             for job in jobs:
-                sig = _shape_sig(job.sub_reader.meta) + (req.propagation,)
+                # v1 slabs never group with v2 chunks: they bind the
+                # policy differently (no chunk grid to place on a mesh)
+                sig = (job.chunk_idx is not None,) \
+                    + _shape_sig(job.sub_reader.meta) + (req.propagation,)
                 if not self.coalesce:
                     sig = sig + (req.req_id,)
                 groups.setdefault(sig, []).append(job)
-        ctx = self.policy.bind(chunked=True, encode=False)
-        cap = group_cap(ctx.mesh)
+        # one bound context per archive kind, mirroring read_archive: v1
+        # jobs run under chunked=False (an explicit mesh is rejected there
+        # exactly as it is for sessions — isolated to the v1 requests)
+        ctxs: Dict[bool, object] = {}
         for sig, jobs in groups.items():
+            chunked, prop = sig[0], jobs[0].req.propagation
+            try:
+                if chunked not in ctxs:
+                    ctxs[chunked] = self.policy.bind(chunked=chunked,
+                                                     encode=False)
+            except Exception as e:
+                for job in jobs:
+                    if job.req.status != FAILED:
+                        self._fail(job.req, f"{type(e).__name__}: {e}")
+                        settled.append(job.req)
+                continue
+            ctx = ctxs[chunked]
+            cap = group_cap(ctx.mesh)
             for lo in range(0, len(jobs), cap):
                 part = jobs[lo:lo + cap]
                 # requests sharing a group share a propagation (in sig)
@@ -273,7 +303,7 @@ class RetrievalServer:
                     [j.sub_reader for j in part],
                     [j.prior_state for j in part],
                     [j.keep_planes for j in part],
-                    ctx, sig[4], cache=self.cache, counters=self.counters)
+                    ctx, prop, cache=self.cache, counters=self.counters)
                 for job, st in zip(part, sts):
                     job.new_state = st
         for req in ready:

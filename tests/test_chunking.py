@@ -117,6 +117,23 @@ def test_refine_budgets_subtracts_spent_bytes():
     assert refine_budgets(260, [3, 1], [100, 100]) == [145, 115]
 
 
+def test_refine_budgets_reserves_floors_first():
+    """Per-chunk plan floors (escape channels) are allocated before the
+    proportional split, so a globally feasible total never starves an
+    escape-heavy chunk below its floor — and an infeasible total raises a
+    clear error instead of failing deep inside one chunk's DP."""
+    # pure proportional would give chunk 0 only 40 < its 90-byte floor
+    assert refine_budgets(120, [1, 1, 1], [0, 0, 0],
+                          floors=[90, 0, 0]) == [100, 10, 10]
+    # spent above the floor already covers the reservation
+    assert refine_budgets(120, [1, 1], [50, 10],
+                          floors=[30, 0]) == [80, 40]
+    # exhausted budget with floors covered: plans stay at what's loaded
+    assert refine_budgets(50, [1, 1], [40, 20], floors=[10, 0]) == [40, 20]
+    with pytest.raises(ValueError, match="infeasible"):
+        refine_budgets(80, [1, 1, 1], [0, 0, 0], floors=[90, 0, 0])
+
+
 def test_chunked_refine_byte_budget_feeds_overspent_chunks():
     """End-to-end regression: chunk 0 is far less compressible, so an
     error-bound retrieval loads it well past its element-proportional

@@ -111,6 +111,26 @@ def test_bitrate_below_floor_raises_through_session_v2():
         arc.open().read(Fidelity.max_bytes(1))
 
 
+def test_chunked_feasible_budget_never_starves_escape_chunk():
+    """A budget at or above the summed per-chunk escape floors succeeds
+    even when the escape bytes concentrate in few chunks: each chunk's
+    floor is reserved before the proportional element-count split.  (The
+    old proportional-only split handed the escape-heavy chunk less than
+    its floor and failed the whole — globally feasible — read.)"""
+    _, arc = _meta(X_ESC, eb=1e-7, chunk_elems=370)
+    r = container.open_reader(arc.tobytes())
+    floors = [sum(lv.esc_size for lv in r.chunk_reader(i).meta.levels)
+              for i in range(len(r.meta.chunks))]
+    assert max(floors) > 0 and min(floors) == 0, \
+        "fixture must concentrate escapes in a subset of chunks"
+    total = sum(floors) + max(floors) // 2
+    # the regression precondition: a pure proportional split would hand
+    # the escape-heaviest chunk less than its own floor
+    assert total // len(floors) < max(floors)
+    out = arc.open().read(Fidelity.max_bytes(total))
+    assert out.shape == X_ESC.shape
+
+
 def test_zero_budget_without_escapes_is_feasible():
     """With no escape channels the plan floor is zero bytes: max_bytes=0
     returns the anchors-only plan instead of raising."""

@@ -52,6 +52,18 @@ def test_duplicate_put_is_idempotent():
     assert c.insertions == 1 and c.bytes_cached == 64
 
 
+def test_duplicate_put_refreshes_recency():
+    """Re-publishing an already-cached key is a use: it refreshes the
+    entry's LRU position exactly like a get()."""
+    c = PlaneCache(max_bytes=256)
+    for i in range(4):
+        c.put(i, _arr(64, fill=i))
+    c.put(0, _arr(64))            # duplicate put: 1 becomes the LRU entry
+    c.put(4, _arr(64, fill=4))
+    assert 1 not in c and 0 in c and 4 in c
+    assert c.evictions == 1
+
+
 def test_lru_eviction_under_byte_cap():
     c = PlaneCache(max_bytes=256)
     for i in range(4):

@@ -124,9 +124,67 @@ def test_failed_parent_fails_child():
     srv.add_archive("esc", Codec(eb=1e-7).compress(x))
     parent = srv.submit("esc", Fidelity.max_bytes(1))
     child = srv.submit("esc", Fidelity.full(), refine_of=parent)
-    srv.drain()
+    settled = srv.drain()
     assert parent.status == FAILED
     assert child.status == FAILED and "parent" in child.error
+    # both settle THROUGH the tick contract: drain reports each exactly
+    # once (parent-failure children used to vanish from the settled list)
+    assert sorted(r.req_id for r in settled) == [parent.req_id,
+                                                 child.req_id]
+    assert child.latency_s > 0
+    assert srv.stats()["failed"] == 2
+
+
+@pytest.mark.parametrize("aid", ["x2", "x1"], ids=["v2", "v1"])
+@pytest.mark.parametrize("order", ["tight-first", "loose-first"])
+def test_sibling_refines_are_private_sessions(aid, order):
+    """Two refine_of children of one parent, runnable in the same tick,
+    each serve exactly their own fidelity's bits.  (Siblings used to
+    alias the parent's mutable state/reader: the later job computed its
+    delta against the earlier sibling's planes, so a Fidelity.full()
+    sibling could silently regress and all siblings returned identical
+    bits.)"""
+    fids = (Fidelity.full(), Fidelity.error_bound(1e-4))
+    if order == "loose-first":
+        fids = fids[::-1]
+    srv = _server()
+    parent = srv.submit(aid, Fidelity.error_bound(1e-2))
+    kids = [srv.submit(aid, f, refine_of=parent) for f in fids]
+    srv.drain()
+    assert parent.status == DONE
+    for child in kids:
+        assert child.status == DONE, child.error
+        session = srv._archives[aid].open()
+        session.read(Fidelity.error_bound(1e-2))
+        ref = session.read(child.fidelity)
+        assert np.array_equal(child.result, ref)
+        assert child.err_bound == session.achieved_bound
+    # private branches: no shared mutable state anywhere in the family
+    assert kids[0]._state is not kids[1]._state
+    assert all(k._state is not parent._state for k in kids)
+    assert all(k._reader is not parent._reader for k in kids)
+    # the parent's own result is untouched by its children's refinements
+    session = srv._archives[aid].open()
+    assert np.array_equal(parent.result,
+                          session.read(Fidelity.error_bound(1e-2)))
+
+
+def test_v1_requests_bind_unsharded():
+    """An explicit mesh policy: v2 requests run sharded over the chunk
+    grid, a v1 request fails with the same error a session raises (v1
+    has no chunks to place on the mesh) — server dispatch semantics never
+    diverge from the session path, and the failure is isolated."""
+    from repro.parallel import codec_mesh
+    policy = ExecPolicy(backend="jax", shard=codec_mesh.codec_mesh())
+    srv = _server(policy=policy)
+    ok = srv.submit("x2", Fidelity.error_bound(1e-3))
+    bad = srv.submit("x1", Fidelity.error_bound(1e-3))
+    settled = srv.drain()
+    assert ok.status == DONE, ok.error
+    assert bad.status == FAILED and "chunk" in bad.error
+    assert {r.req_id for r in settled} == {ok.req_id, bad.req_id}
+    session = srv._archives["x2"].open()
+    assert np.array_equal(ok.result, session.read(Fidelity.error_bound(1e-3)))
 
 
 def test_registry_guards():
