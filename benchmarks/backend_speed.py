@@ -7,7 +7,12 @@ execution modes — the per-chunk loop and the batched shape-group engine
 the roadmap's equal-shape chunk batching, plus — whenever more than one
 device is visible — a sharded entry (``ExecPolicy(shard="auto")``) that
 runs the chunk grid data-parallel over the local device mesh and records
-sharded vs single-device MB/s and per-device launch fan-out.  Everything
+sharded vs single-device MB/s and per-device launch fan-out, plus a
+fused-decode entry that races the ``jax`` backend's decode megakernel
+(one ``decode_fused`` + one whole-level recon launch per level) against
+the pre-fusion ``jax_unfused`` baseline, recording MB/s, dispatches,
+launches per level, and per-kernel HBM bytes (the roofline report's
+input).  Everything
 drives the object API (``Codec`` / ``Archive`` / ``Fidelity`` /
 ``ExecPolicy``), so the benchmark doubles as its smoke test.  Kernel
 dispatch counts for all modes come from ``repro.kernels.dispatch``, so the
@@ -103,6 +108,67 @@ def _decode_rows(x: np.ndarray, eb: float, buf: bytes, case: str,
         records.append(dict(case=case, backend=bk, op="refine",
                             seconds=dt, mbps=mbps,
                             bytes_read=int(session.bytes_read)))
+
+
+def _fused_rows(x: np.ndarray, eb: float, buf: bytes, rows, checks,
+                dec_records):
+    """The fused-decode megakernel entry: ``jax`` (fused decode path) vs
+    ``jax_unfused`` (the pre-fusion per-phase pipeline, kept registered as
+    the baseline) on the v1 2^20 archive.  Records MB/s, total dispatches,
+    per-kernel launch counts and HBM bytes, and launches per level — the
+    inputs of ``benchmarks/roofline_report.py``.  The fused path must
+    issue strictly FEWER dispatches (a structural property, asserted even
+    in interpret mode) and reach >= 2x the unfused MB/s on this case.
+    """
+    from repro.core import open_archive
+
+    archive = Archive(buf)
+    L = open_archive(buf).meta.L
+    stats, outs = {}, {}
+    for bk in ("jax_unfused", "jax"):
+        policy = ExecPolicy(backend=bk)
+        archive.open(policy).read()  # warm jit caches out of the timing
+        warm = archive.open(policy)
+        warm.read(Fidelity.error_bound(REFINE_COARSE * eb))
+        warm.refine(Fidelity.error_bound(REFINE_FINE * eb))
+        with dispatch.measure() as d, dispatch.measure_bytes() as db:
+            outs[bk], dt = timed(lambda: archive.open(policy).read(),
+                                 repeat=1)
+        nd = sum(d.values())
+        mbps = x.nbytes / dt / 1e6
+        rows.append(csv_row(f"backend_speed/fused_decode/{bk}/decompress",
+                            dt * 1e6, f"MBps={mbps:.1f};dispatches={nd};"
+                            f"per_level={nd / L:.1f}"))
+        print(rows[-1])
+        dec_records.append(dict(case="fused_decode", backend=bk,
+                                op="decompress", seconds=dt, mbps=mbps,
+                                dispatches=nd, levels=L,
+                                dispatches_per_level=nd / L,
+                                dispatches_by_kernel=dict(d),
+                                kernel_bytes=dict(db)))
+        stats[bk] = (mbps, nd)
+
+        session = archive.open(policy)
+        session.read(Fidelity.error_bound(REFINE_COARSE * eb))
+        with dispatch.measure() as d, dispatch.measure_bytes() as db:
+            _, dt = timed(session.refine,
+                          Fidelity.error_bound(REFINE_FINE * eb), repeat=1)
+        nd = sum(d.values())
+        mbps = x.nbytes / dt / 1e6
+        rows.append(csv_row(f"backend_speed/fused_decode/{bk}/refine",
+                            dt * 1e6, f"MBps={mbps:.1f};dispatches={nd}"))
+        print(rows[-1])
+        dec_records.append(dict(case="fused_decode", backend=bk, op="refine",
+                                seconds=dt, mbps=mbps, dispatches=nd,
+                                levels=L, dispatches_per_level=nd / L,
+                                dispatches_by_kernel=dict(d),
+                                kernel_bytes=dict(db)))
+    checks.append(("fused_parity_bits", "fused_decode", "decompress",
+                   bool(np.array_equal(outs["jax"], outs["jax_unfused"]))))
+    checks.append(("fused_fewer_dispatches", "fused_decode", "decompress",
+                   stats["jax"][1] < stats["jax_unfused"][1]))
+    checks.append(("fused_2x_mbps", "fused_decode", "decompress",
+                   stats["jax"][0] >= 2.0 * stats["jax_unfused"][0]))
 
 
 def _chunk_batch_rows(x: np.ndarray, eb: float, rows, checks,
@@ -254,6 +320,9 @@ def run(scale=None, n: int = 1 << 20, smoke: bool = True,
     for case, by_bk in outs.items():
         checks.append(("decode_parity_bits", case, "decompress",
                        bool(np.array_equal(by_bk["numpy"], by_bk["jax"]))))
+
+    # fused decode megakernel vs the pre-fusion jax baseline
+    _fused_rows(x, eb, bufs["numpy"], rows, checks, records)
 
     # chunk-batch speed entry: batched vs looped dispatch counts + MB/s
     _chunk_batch_rows(x, eb, rows, checks, comp_records, records)

@@ -1,66 +1,97 @@
-"""Render EXPERIMENTS.md §Roofline tables from dryrun_results.json.
+"""Codec-kernel roofline report from ``BENCH_decode.json``.
 
-  PYTHONPATH=src python -m benchmarks.roofline_report dryrun_results.json
+The codec kernels are memory-bound: a few integer/fma ops per element
+against streaming plane words, negabinary states, and f64 residuals.  The
+meaningful roofline axis is therefore BYTES PER SECOND, not flops —
+``kernels.dispatch`` meters the HBM bytes every wrapper moves per launch
+(``measure_bytes``), ``benchmarks/backend_speed.py`` records them next to
+the wall-clock of each decode op, and this report divides the two:
+
+    achieved bytes/s per kernel  vs  the substrate's peak bandwidth
+
+Interpret-mode CPU numbers are tiny fractions of any roofline — that is
+expected and still useful as a *trend* (a regression that doubles bytes
+moved per launch shows up regardless of the substrate).  On compiled
+TPU/XLA runs the fraction becomes the real utilization figure.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline_report BENCH_decode.json \
+      [--peak-gbs 819]
+
+``--peak-gbs`` sets the roofline (defaults to TPU v5e HBM, 819 GB/s; pass
+your host's STREAM number for CPU runs).
 """
 from __future__ import annotations
 
+import argparse
 import json
-import sys
 
 
-def _fix(r: dict) -> dict:
-    return r
+def kernel_rows(records):
+    """Aggregate per-kernel (dispatches, bytes, seconds) over every record
+    that carries the ``kernel_bytes`` meter.
+
+    A record's wall-clock covers all its kernels, so per-kernel seconds
+    attribute the op's time proportionally to bytes moved — exact enough
+    for a bandwidth trend, and it keeps the report free of per-launch
+    timers the wrappers do not have.
+    """
+    agg: dict = {}
+    for r in records:
+        kb = r.get("kernel_bytes")
+        if not kb:
+            continue
+        total_b = sum(kb.values()) or 1
+        for k, nb in kb.items():
+            disp = r.get("dispatches_by_kernel", {}).get(k, 0)
+            a = agg.setdefault(k, dict(dispatches=0, nbytes=0, seconds=0.0))
+            a["dispatches"] += disp
+            a["nbytes"] += nb
+            a["seconds"] += r["seconds"] * (nb / total_b)
+    return agg
 
 
-_ADVICE = {
-    "compute": "raise MXU utilization: cut remat recompute / skip masked "
-               "attention tiles (causal block skipping)",
-    "memory": "cut HBM traffic: fuse residual+norm, larger attention tiles, "
-              "bf16 loss accumulation, weight-stationary decode batching",
-    "collective": "shrink wire bytes: compressed grad all-reduce, overlap "
-                  "reduce-scatter with backward, 2D-shard the vocab matmul",
-}
-
-
-def render(results, mesh_filter="16x16"):
-    rows = [r for r in results
-            if r.get("status") == "ok" and r.get("mesh") == mesh_filter]
-    skips = [r for r in results
-             if r.get("status") == "skipped" and r.get("mesh") == mesh_filter]
-    out = []
-    if rows and "t_compute" not in rows[0]:
-        # multi-pod pass: compile + fits proof only (roofline is single-pod)
-        out.append("| arch | shape | compile (s) | bytes/device | status |")
+def render(results: dict, peak_gbs: float) -> str:
+    agg = kernel_rows(results.get("records", []))
+    out = [f"### Codec kernel roofline (peak {peak_gbs:.0f} GB/s)", ""]
+    out.append("| kernel | dispatches | bytes moved | bytes/launch | "
+               "achieved GB/s | roofline frac |")
+    out.append("|---|---|---|---|---|---|")
+    for k in sorted(agg, key=lambda k: -agg[k]["nbytes"]):
+        a = agg[k]
+        per_launch = a["nbytes"] / max(a["dispatches"], 1)
+        gbs = a["nbytes"] / max(a["seconds"], 1e-12) / 1e9
+        out.append(f"| {k} | {a['dispatches']} | {a['nbytes'] / 1e6:.1f} MB "
+                   f"| {per_launch / 1e3:.1f} kB | {gbs:.3f} | "
+                   f"{gbs / peak_gbs:.5f} |")
+    if len(out) == 4:
+        out.append("| (no kernel_bytes records — rerun "
+                   "benchmarks.backend_speed) | — | — | — | — | — |")
+    out.append("")
+    fused = [r for r in results.get("records", [])
+             if r.get("case") == "fused_decode"]
+    if fused:
+        out.append("### Fused vs unfused decode (2^20 case)")
+        out.append("")
+        out.append("| backend | op | MB/s | dispatches | launches/level |")
         out.append("|---|---|---|---|---|")
-        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
-            gb = r.get("bytes_per_device", -1) / 1e9
-            out.append(f"| {r['arch']} | {r['shape']} | {r['compile_s']} | "
-                       f"{gb:.2f} GB | compiled |")
-        for r in sorted(skips, key=lambda r: (r["arch"], r["shape"])):
-            out.append(f"| {r['arch']} | {r['shape']} | — | — | "
-                       f"{r['reason']} |")
-        return "\n".join(out)
-    out.append("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
-               "bottleneck | MODEL/HLO flops | roofline frac | next lever |")
-    out.append("|---|---|---|---|---|---|---|---|---|")
-    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
-        out.append(
-            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} | "
-            f"{r['t_memory']:.3e} | {r['t_collective']:.3e} | "
-            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
-            f"{r['roofline_fraction']:.3f} | {_ADVICE[r['bottleneck']]} |")
-    for r in sorted(skips, key=lambda r: (r["arch"], r["shape"])):
-        out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — "
-                   f"| — | {r['reason']} |")
+        for r in fused:
+            out.append(f"| {r['backend']} | {r['op']} | {r['mbps']:.1f} | "
+                       f"{r['dispatches']} | "
+                       f"{r.get('dispatches_per_level', 0):.1f} |")
     return "\n".join(out)
 
 
 def main():
-    results = json.load(open(sys.argv[1]))
-    print("### Single-pod mesh 16x16 (256 chips)\n")
-    print(render(results, "16x16"))
-    print("\n### Multi-pod mesh 2x16x16 (512 chips)\n")
-    print(render(results, "2x16x16"))
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("bench_json", help="BENCH_decode.json from "
+                   "benchmarks.backend_speed")
+    p.add_argument("--peak-gbs", type=float, default=819.0,
+                   help="roofline bandwidth in GB/s (default: TPU v5e HBM)")
+    args = p.parse_args()
+    with open(args.bench_json) as f:
+        results = json.load(f)
+    print(render(results, args.peak_gbs))
 
 
 if __name__ == "__main__":

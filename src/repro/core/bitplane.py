@@ -13,12 +13,57 @@ independently decodable (the "blocks" of Fig. 2).
 """
 from __future__ import annotations
 
+import os
 import zlib
 from typing import List, Optional, Tuple
 
 import numpy as np
 
+#: default zlib compression level; override per process with
+#: ``IPCOMP_ZLIB_LEVEL`` (0–9).  Both backends read the same knob, so the
+#: byte-identical-archive invariant holds at every setting.
 ZLEVEL = 6
+
+ZLEVEL_ENV = "IPCOMP_ZLIB_LEVEL"
+
+
+def zlib_level() -> int:
+    """Resolve the encode-side zlib level (env knob, default :data:`ZLEVEL`).
+
+    Read per call so tests and long-lived servers can flip the knob without
+    reimporting; an out-of-range or non-integer value is an error, not a
+    silent fallback.
+    """
+    v = os.environ.get(ZLEVEL_ENV)
+    if v is None:
+        return ZLEVEL
+    lvl = int(v)
+    if not 0 <= lvl <= 9:
+        raise ValueError(f"{ZLEVEL_ENV} must be in 0..9, got {lvl}")
+    return lvl
+
+
+class Raw(bytes):
+    """In-memory marker: a plane payload that is ALREADY the raw packed-bit
+    stream, not a zlib blob.  The archive format never stores this — it
+    exists so cache layers and tests can hand pre-inflated payloads to the
+    decoders and :func:`inflate` can skip the decompressobj round-trip.
+    """
+    __slots__ = ()
+
+
+def inflate(blob) -> bytes:
+    """Shared blob -> raw packed-bit stream helper for every decode path.
+
+    Falsy (``b''`` all-zero convention / None) -> ``b''``; :class:`Raw`
+    payloads pass through without touching zlib; anything else is a stored
+    zlib blob and is decompressed.
+    """
+    if not blob:
+        return b""
+    if isinstance(blob, Raw):
+        return bytes(blob)
+    return zlib.decompress(blob)
 
 
 def split_planes(nb: np.ndarray, nbits: int) -> List[np.ndarray]:
@@ -65,13 +110,13 @@ def compress_plane(bits: np.ndarray) -> bytes:
     """Pack a 0/1 uint8 array and zlib it. All-zero planes compress to b''."""
     if bits.size == 0 or not bits.any():
         return b""
-    return zlib.compress(np.packbits(bits).tobytes(), ZLEVEL)
+    return zlib.compress(np.packbits(bits).tobytes(), zlib_level())
 
 
 def decompress_plane(blob: bytes, n: int) -> np.ndarray:
     if not blob:
         return np.zeros(n, np.uint8)
-    raw = np.frombuffer(zlib.decompress(blob), np.uint8)
+    raw = np.frombuffer(inflate(blob), np.uint8)
     return np.unpackbits(raw, count=n)
 
 
@@ -112,7 +157,7 @@ def blobs_from_packed(packed: np.ndarray, n: int) -> Tuple[List[bytes], int]:
             blobs.append(b"")  # all-zero plane: same convention as compress_plane
             continue
         raw = packed[k].astype(">u4").tobytes()[:nbytes]
-        blobs.append(zlib.compress(raw, ZLEVEL))
+        blobs.append(zlib.compress(raw, zlib_level()))
     return blobs, nbits
 
 

@@ -63,6 +63,7 @@ from . import bitplane, interpolation, quantize
 
 NUMPY = "numpy"
 JAX = "jax"
+JAX_UNFUSED = "jax_unfused"
 AUTO = "auto"
 
 
@@ -312,9 +313,17 @@ def _loaded_prefix(blobs) -> int:
     return want
 
 
+def _inflate(blob) -> bytes:
+    """Blob -> raw packed-bit stream (``bitplane.inflate``): b''/None pass
+    through, :class:`~repro.core.bitplane.Raw` payloads skip zlib entirely
+    (cache layers hand pre-inflated planes through this seam), stored
+    blobs are decompressed."""
+    return bitplane.inflate(blob)
+
+
 def _fill_plane_words(words: np.ndarray, blobs, want: int,
                       nbits: int) -> None:
-    """Unzlib a loaded blob prefix into the unpack kernel's word rows.
+    """Inflate a loaded blob prefix into the unpack kernel's word rows.
 
     ``words`` is one stream's (32, nw) destination; row k holds negabinary
     digit k's packed words (32 consecutive elements per word, element 0 at
@@ -322,17 +331,43 @@ def _fill_plane_words(words: np.ndarray, blobs, want: int,
     the scalar and batched decoders so the b'' convention and padding
     cannot drift between them.
     """
-    import zlib
-
     for i in range(want):
-        blob = blobs[i]
-        if not blob:
+        raw = _inflate(blobs[i])  # np.packbits stream, element 0 at MSB
+        if not raw:
             continue  # all-zero encoded plane: b'' convention
-        raw = zlib.decompress(blob)  # np.packbits stream, element 0 at MSB
         if len(raw) % 4:
             raw += b"\0" * (4 - len(raw) % 4)
         w = np.frombuffer(raw, ">u4")
         words[nbits - 1 - i, : w.size] = w
+
+
+def inflate_level(blobs, nbits: int, n: int) -> Tuple[np.ndarray, int]:
+    """Host zlib stage of one level's decode, split out so it can run on a
+    worker thread while the device decodes the PREVIOUS level (the two-slot
+    prefetch in ``pipeline.state``).  Returns ``(words, want)``: the (32,
+    ceil(n/32)) uint32 word grid the unpack/fused kernels consume and the
+    loaded-prefix length.  Pure host work (zlib + numpy) — thread-safe.
+    """
+    want = _loaded_prefix(blobs)
+    words = np.zeros((32, (n + 31) // 32), np.uint32)
+    if nbits and n and want:
+        _fill_plane_words(words, blobs, want, nbits)
+    return words, want
+
+
+def inflate_level_batch(blob_lists, nbits: int, n: int,
+                        ) -> Tuple[np.ndarray, List[int]]:
+    """Batched :func:`inflate_level`: B blob prefixes -> ((B, 32, nw) word
+    stack, per-chunk prefix lengths)."""
+    B = len(blob_lists)
+    words = np.zeros((B, 32, (n + 31) // 32), np.uint32)
+    wants = []
+    for b, blobs in enumerate(blob_lists):
+        want = _loaded_prefix(blobs)
+        wants.append(want)
+        if nbits and n and want:
+            _fill_plane_words(words[b], blobs, want, nbits)
+    return words, wants
 
 
 def decode_level(blobs, nbits: int, n: int,
@@ -361,38 +396,32 @@ def decode_level(blobs, nbits: int, n: int,
 def decode_level_batch(blob_lists, nbits: int, n: int,
                        interpret: bool | None = None,
                        mesh=None) -> List[np.ndarray]:
-    """Batched twin of :func:`decode_level` for equal-(nbits, prefix) groups.
+    """Batched twin of :func:`decode_level` for equal-``nbits`` groups.
 
-    ``blob_lists`` holds B chunks' MSB-first blob prefixes, all with the
-    same ``nbits`` and the same loaded-prefix length (the scheduler groups
-    by exactly that key, since ``low_zero`` is a static kernel argument;
-    mixed prefixes raise ValueError — decoding them with one low_zero
-    would silently corrupt the shorter streams).  One vmapped unpack
-    launch decodes every stream; each returned truncated negabinary array
-    is bit-identical to an unbatched call.  With ``mesh``, the stream
-    stack is split over the 1-D codec mesh (one launch per device;
+    ``blob_lists`` holds B chunks' MSB-first blob prefixes with the same
+    ``nbits``; the loaded-prefix length may DIFFER per chunk — ``low_zero``
+    is a runtime operand of the unpack kernel, so every stream carries its
+    own truncation mask inside the one vmapped launch (no more one launch
+    per ``(nbits, prefix)`` bucket).  Each returned truncated negabinary
+    array is bit-identical to an unbatched call.  With ``mesh``, the
+    stream stack is split over the 1-D codec mesh (one launch per device;
     :func:`decode_level_sharded` is the registry-facing alias).
     """
     from ..kernels.bitplane_pack import (bitplane_unpack_batch,
                                          bitplane_unpack_sharded)
 
     B = len(blob_lists)
-    wants = [_loaded_prefix(blobs) for blobs in blob_lists]
-    want = wants[0]
-    if any(w != want for w in wants):
-        raise ValueError("batched decode_level needs equal loaded-plane "
-                         f"prefixes; got {sorted(set(wants))}")
-    if nbits == 0 or n == 0 or want == 0:
+    words, wants = inflate_level_batch(blob_lists, nbits, n)
+    if nbits == 0 or n == 0 or all(w == 0 for w in wants):
         return [np.zeros(n, np.uint32) for _ in range(B)]
-    words = np.zeros((B, 32, (n + 31) // 32), np.uint32)
-    for b, blobs in enumerate(blob_lists):
-        _fill_plane_words(words[b], blobs, want, nbits)
+    # a want-0 stream has all-zero words, so it decodes to zero whatever
+    # its mask is; 31 keeps the shift within uint32 range
+    lz = [nbits - w if w else 31 for w in wants]
     if mesh is not None:
-        _, nb = bitplane_unpack_sharded(words, n=n, mesh=mesh,
-                                        low_zero=nbits - want,
+        _, nb = bitplane_unpack_sharded(words, n=n, mesh=mesh, low_zero=lz,
                                         with_nb=True, interpret=interpret)
     else:
-        _, nb = bitplane_unpack_batch(words, n=n, low_zero=nbits - want,
+        _, nb = bitplane_unpack_batch(words, n=n, low_zero=lz,
                                       with_nb=True, interpret=interpret)
     nb = np.asarray(nb, np.uint32)
     return [nb[b] for b in range(B)]
@@ -405,18 +434,178 @@ def decode_level_sharded(blob_lists, nbits: int, n: int, mesh,
                               mesh=mesh)
 
 
+def decode_level_fused(blobs, nbits: int, n: int, nb_old: np.ndarray,
+                       eb: float, interpret: bool | None = None,
+                       words=None) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused progressive decode of one level: ONE kernel launch replaces
+    ``decode_level`` plus the three host passes of the delta cascade.
+
+    ``nb_old`` is the session's current truncated negabinary stream for
+    the level; returns ``(nb_new, delta)`` where ``delta`` is the
+    dequantized residual increment ``(bin_new - bin_old) * 2 * eb``,
+    bit-identical to the unfused host arithmetic.  ``words`` optionally
+    carries a pre-inflated ``(words, want)`` pair from
+    :func:`inflate_level` (the two-slot prefetch hands the worker thread's
+    result through here).
+    """
+    from ..kernels.decode_fused import decode_fused
+
+    if words is None:
+        words = inflate_level(blobs, nbits, n)
+    wgrid, want = words
+    if nbits == 0 or n == 0 or want == 0:
+        return np.asarray(nb_old, np.uint32), np.zeros(n, np.float64)
+    nb_new, delta = decode_fused(wgrid, np.asarray(nb_old, np.uint32), n,
+                                 eb=eb, low_zero=nbits - want,
+                                 interpret=interpret)
+    return np.asarray(nb_new, np.uint32), np.asarray(delta, np.float64)
+
+
+def decode_level_fused_batch(blob_lists, nbits: int, n: int, nb_olds,
+                             ebs, interpret: bool | None = None,
+                             mesh=None, words=None,
+                             ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Batched twin of :func:`decode_level_fused` for equal-``nbits``
+    groups with per-chunk prefixes AND per-chunk error bounds (both are
+    runtime kernel operands).  Returns B ``(nb_new, delta)`` pairs from
+    one vmapped launch; with ``mesh``, the stack is split over the 1-D
+    codec mesh.  ``words`` optionally carries the prefetched
+    ``(word stack, wants)`` from :func:`inflate_level_batch`.
+    """
+    from ..kernels.decode_fused import decode_fused_batch
+
+    B = len(blob_lists)
+    if words is None:
+        words = inflate_level_batch(blob_lists, nbits, n)
+    wstack, wants = words
+    olds = np.stack([np.asarray(o, np.uint32) for o in nb_olds])
+    eb_list = list(ebs) if np.ndim(ebs) else [float(ebs)] * B
+    if nbits == 0 or n == 0 or all(w == 0 for w in wants):
+        return [(olds[b], np.zeros(n, np.float64)) for b in range(B)]
+    lz = [nbits - w if w else 31 for w in wants]
+    nb_new, delta = decode_fused_batch(wstack, olds, n, eb=eb_list,
+                                       low_zero=lz, interpret=interpret,
+                                       mesh=mesh)
+    nb_new = np.asarray(nb_new, np.uint32)
+    delta = np.asarray(delta, np.float64)
+    out = []
+    for b in range(B):
+        if wants[b] == 0:  # nothing loaded: state and delta are untouched
+            out.append((olds[b], np.zeros(n, np.float64)))
+        else:
+            out.append((nb_new[b], delta[b]))
+    return out
+
+
+def decode_level_fused_sharded(blob_lists, nbits: int, n: int, nb_olds,
+                               ebs, mesh, interpret: bool | None = None,
+                               words=None,
+                               ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Sharded fused decode: :func:`decode_level_fused_batch` over a mesh."""
+    return decode_level_fused_batch(blob_lists, nbits, n, nb_olds, ebs,
+                                    interpret=interpret, mesh=mesh,
+                                    words=words)
+
+
+def _dense_override(oidx, ovals, lo: int, cnt: int, block_shape):
+    """Level-global escape records -> a dense (mask, values) pair for one
+    phase block, or None when the block has no escapes.  The fused level
+    kernel applies ``mask != 0 -> value`` inside the launch — same
+    semantics as the host writeback ``block.reshape(-1)[idx] = vals``."""
+    sel = (oidx >= lo) & (oidx < lo + cnt)
+    if not sel.any():
+        return None
+    m = np.zeros(cnt, np.int32)
+    v = np.zeros(cnt, np.float64)
+    m[oidx[sel] - lo] = 1
+    v[oidx[sel] - lo] = ovals[sel]
+    return m.reshape(block_shape), v.reshape(block_shape)
+
+
+def _level_blocks(shape, s: int):
+    """Static geometry of one 2-D level on its stride-s subgrid.
+
+    Returns (Ms, Ns, T0, T1, Nse): subgrid extents, phase target counts
+    (T0 odd rows, T1 odd columns) and the even-column count Nse.  The
+    phase residual blocks are (T0, Nse) and (Ms, T1) in stream C-order —
+    consecutive in the level stream, phase 0 first, matching
+    ``interpolation.iter_phases`` exactly (empty target sets drop the
+    phase there; here the count is simply 0).
+    """
+    M, N = shape
+    Ms = (M - 1) // s + 1
+    Ns = (N - 1) // s + 1
+    return Ms, Ns, Ms // 2, Ns // 2, -(-Ns // 2)
+
+
 def reconstruct(shape, interp: str, anchors: np.ndarray,
                 yhat_per_level: List[np.ndarray],
                 overrides=None, out_dtype=np.float64,
                 interpret: bool | None = None) -> np.ndarray:
     """Kernel-backed twin of ``interpolation.reconstruct`` (Algorithm 1).
 
-    Same routine, in fact: the traversal, offset accounting, and escape
-    override writeback run in ``interpolation.reconstruct`` itself — this
-    function only supplies the per-phase block primitive (the backend
-    seam), which moves the sweep axis onto lanes and runs the fused
-    predict+add-residual kernel.  Bit-exact with the numpy sweep: the
-    prediction code is shared with the encode kernel.
+    For 2-D data the traversal is fused per LEVEL: both (level, dim) phase
+    sweeps plus the escape overrides of the level run as one
+    ``interp_recon_level`` launch on the level's stride-s subgrid
+    (``xhat[::s, ::s]`` — level-s traversal touches only s-multiples, and
+    on the subgrid the stride becomes 1 with identical boundary masks, so
+    bits cannot change).  L launches total instead of 2L plus host
+    override scatters.  Other ranks fall back to the per-phase sweep
+    (:func:`reconstruct_unfused`).
+    """
+    if len(shape) != 2:
+        return reconstruct_unfused(shape, interp, anchors, yhat_per_level,
+                                   overrides=overrides, out_dtype=out_dtype,
+                                   interpret=interpret)
+    import jax
+
+    from ..kernels.interp_recon import interp_recon_level
+
+    L = interpolation.num_levels(shape)
+    xhat = np.zeros(shape, np.float64)
+    xhat[interpolation.anchor_slices(shape, L)] = anchors
+    with jax.experimental.enable_x64():
+        for level in range(L, 0, -1):
+            s = 1 << (level - 1)
+            li = L - level
+            Ms, Ns, T0, T1, Nse = _level_blocks(shape, s)
+            if T0 == 0 and T1 == 0:
+                continue
+            stream = np.asarray(yhat_per_level[li], np.float64)
+            oidx, ovals = overrides[li] if overrides is not None else \
+                (np.zeros(0, np.int64), np.zeros(0, np.float64))
+            res0 = res1 = ov0 = ov1 = None
+            lo = 0
+            if T0 > 0:
+                cnt0 = T0 * Nse
+                res0 = stream[lo:lo + cnt0].reshape(T0, Nse)
+                ov0 = _dense_override(oidx, ovals, lo, cnt0, (T0, Nse))
+                lo += cnt0
+            if T1 > 0:
+                cnt1 = Ms * T1
+                res1 = stream[lo:lo + cnt1].reshape(Ms, T1)
+                ov1 = _dense_override(oidx, ovals, lo, cnt1, (Ms, T1))
+                lo += cnt1
+            g = np.ascontiguousarray(xhat[::s, ::s])
+            out = interp_recon_level(g, res0, res1, interp=interp, ov0=ov0,
+                                     ov1=ov1, interpret=interpret)
+            xhat[::s, ::s] = np.asarray(out, np.float64)
+    return xhat.astype(out_dtype)
+
+
+def reconstruct_unfused(shape, interp: str, anchors: np.ndarray,
+                        yhat_per_level: List[np.ndarray],
+                        overrides=None, out_dtype=np.float64,
+                        interpret: bool | None = None) -> np.ndarray:
+    """Per-phase kernel reconstruction (the pre-fusion jax path, kept as
+    the ``jax_unfused`` backend and the any-rank fallback).
+
+    The traversal, offset accounting, and escape override writeback run in
+    ``interpolation.reconstruct`` itself — this function only supplies the
+    per-phase block primitive (the backend seam), which moves the sweep
+    axis onto lanes and runs the fused predict+add-residual kernel.
+    Bit-exact with the numpy sweep: the prediction code is shared with the
+    encode kernel.
     """
     import jax
 
@@ -453,15 +642,87 @@ def reconstruct_batch(shape, interp: str, anchors: np.ndarray,
                       mesh=None) -> np.ndarray:
     """Batched twin of :func:`reconstruct` over B equal-``shape`` items.
 
+    2-D stacks take the fused per-level path: ONE vmapped (optionally
+    mesh-sharded) ``interp_recon_level`` launch per level covers both
+    phase sweeps and every item's escape overrides (dense per-item mask
+    planes).  Per-item outputs are bit-identical to B scalar
+    :func:`reconstruct` calls.  Other ranks fall back to the per-phase
+    sweep (:func:`reconstruct_batch_unfused`).
+    """
+    if len(shape) != 2:
+        return reconstruct_batch_unfused(shape, interp, anchors,
+                                         yhat_per_level, overrides=overrides,
+                                         out_dtype=out_dtype,
+                                         interpret=interpret, mesh=mesh)
+    import jax
+
+    from ..kernels.interp_recon import (interp_recon_level_batch,
+                                        interp_recon_level_sharded)
+
+    B = anchors.shape[0]
+    L = interpolation.num_levels(shape)
+    xhat = np.zeros((B,) + tuple(shape), np.float64)
+    xhat[(slice(None),) + interpolation.anchor_slices(shape, L)] = anchors
+
+    def stack_override(li, lo, cnt, block_shape):
+        if overrides is None:
+            return None
+        pairs = [_dense_override(*overrides[b][li], lo, cnt, block_shape)
+                 for b in range(B)]
+        if all(p is None for p in pairs):
+            return None
+        zm = np.zeros(block_shape, np.int32)
+        zv = np.zeros(block_shape, np.float64)
+        return (np.stack([p[0] if p else zm for p in pairs]),
+                np.stack([p[1] if p else zv for p in pairs]))
+
+    with jax.experimental.enable_x64():
+        for level in range(L, 0, -1):
+            s = 1 << (level - 1)
+            li = L - level
+            Ms, Ns, T0, T1, Nse = _level_blocks(shape, s)
+            if T0 == 0 and T1 == 0:
+                continue
+            stream = np.asarray(yhat_per_level[li], np.float64)
+            res0 = res1 = ov0 = ov1 = None
+            lo = 0
+            if T0 > 0:
+                cnt0 = T0 * Nse
+                res0 = stream[:, lo:lo + cnt0].reshape(B, T0, Nse)
+                ov0 = stack_override(li, lo, cnt0, (T0, Nse))
+                lo += cnt0
+            if T1 > 0:
+                cnt1 = Ms * T1
+                res1 = stream[:, lo:lo + cnt1].reshape(B, Ms, T1)
+                ov1 = stack_override(li, lo, cnt1, (Ms, T1))
+                lo += cnt1
+            g = np.ascontiguousarray(xhat[:, ::s, ::s])
+            if mesh is not None:
+                out = interp_recon_level_sharded(g, res0, res1, mesh=mesh,
+                                                 interp=interp, ov0=ov0,
+                                                 ov1=ov1, interpret=interpret)
+            else:
+                out = interp_recon_level_batch(g, res0, res1, interp=interp,
+                                               ov0=ov0, ov1=ov1,
+                                               interpret=interpret)
+            xhat[:, ::s, ::s] = np.asarray(out, np.float64)
+    return xhat.astype(out_dtype)
+
+
+def reconstruct_batch_unfused(shape, interp: str, anchors: np.ndarray,
+                              yhat_per_level: List[np.ndarray],
+                              overrides=None, out_dtype=np.float64,
+                              interpret: bool | None = None,
+                              mesh=None) -> np.ndarray:
+    """Per-phase batched reconstruction (the pre-fusion jax path, kept as
+    the ``jax_unfused`` backend and the any-rank fallback).
+
     Same seam as the scalar path: traversal, offset accounting, and the
     per-item escape writeback run in ``interpolation.reconstruct_batch``;
     this function only supplies the batched per-phase block primitive —
     one vmapped ``interp_recon`` launch per phase for the whole stack.
-    Per-item outputs are bit-identical to B scalar :func:`reconstruct`
-    calls (the vmapped kernel computes each batch element exactly like a
-    lone call).  With ``mesh``, each phase launch is ``shard_map``-ed over
-    the 1-D codec mesh (:func:`reconstruct_sharded` is the registry-facing
-    alias); bits still do not change.
+    With ``mesh``, each phase launch is ``shard_map``-ed over the 1-D
+    codec mesh; bits still do not change.
     """
     import jax
 
@@ -509,3 +770,13 @@ def reconstruct_sharded(shape, interp: str, anchors: np.ndarray,
     return reconstruct_batch(shape, interp, anchors, yhat_per_level,
                              overrides=overrides, out_dtype=out_dtype,
                              interpret=interpret, mesh=mesh)
+
+
+def reconstruct_sharded_unfused(shape, interp: str, anchors: np.ndarray,
+                                yhat_per_level: List[np.ndarray], mesh,
+                                overrides=None, out_dtype=np.float64,
+                                interpret: bool | None = None) -> np.ndarray:
+    """Sharded per-phase reconstruction (``jax_unfused`` backend slot)."""
+    return reconstruct_batch_unfused(shape, interp, anchors, yhat_per_level,
+                                     overrides=overrides, out_dtype=out_dtype,
+                                     interpret=interpret, mesh=mesh)

@@ -51,6 +51,30 @@ every mesh device executes the batched primitive on its local chunks:
   reconstruct_sharded(shape, interp, anchors, yhat, mesh, overrides=,
       out_dtype=)                                  -> as reconstruct_batch
 
+Decode-side FUSED slots (all optional, adopted by the progressive session
+scheduler in ``pipeline/state.py`` when present):
+
+  inflate_level(blobs, nbits, n) -> ((32, ceil(n/32)) uint32 words, want)
+      host-side zlib inflate + word packing of one level's loaded blob
+      prefix — the CPU half the scheduler can overlap with device work;
+  inflate_level_batch(blob_lists, nbits, n) -> ((B, 32, nw) words, wants)
+  decode_level_fused(blobs, nbits, n, nb_old, eb, words=) ->
+      (nb_new uint32, delta f64): ONE launch fusing plane-unpack +
+      negabinary dequantize + the Algorithm 2 delta against the session's
+      previous truncation ``nb_old`` (delta = (q_new - q_old) * 2 * eb,
+      bit-identical to the host spelling); ``words=`` accepts a prefetched
+      ``inflate_level`` result so the zlib work can run ahead of time;
+  decode_level_fused_batch(blob_lists, nbits, n, nb_olds, ebs, words=)
+      -> B-list of (nb_new, delta) with PER-CHUNK loaded prefixes and
+      per-chunk error bounds (mixed prefixes in one dispatch);
+  decode_level_fused_sharded(..., mesh=) — same over the 1-D codec mesh.
+
+``dynamic_low_zero=True`` declares that the batched decode paths accept
+*mixed* loaded-plane prefixes in one dispatch (the truncation mask is a
+runtime operand, not a trace constant) — the scheduler then groups chunk
+jobs by ``(nbits,)`` instead of ``(nbits, prefix)``, collapsing what used
+to be one dispatch per distinct prefix into one per level.
+
 ``None`` slots mean "no batched/sharded form": the pipeline falls back to
 the next-simpler execution (sharded -> batched -> per-chunk loop over the
 scalar primitive), so the numpy reference needs no batch code and
@@ -62,10 +86,13 @@ AND sharded results must be bit-identical to the loop: the batch axis and
 the mesh are execution details, never a format change (the chunk-batching
 and sharded-codec test suites pin this).
 
-Selection: ``"numpy"`` | ``"jax"`` | ``"auto"``/None.  "auto" picks jax only
-where the kernels actually compile (TPU); on GPU/CPU they would run in the
-(slow) Pallas interpreter — valid for parity testing, so request it
-explicitly with ``backend="jax"`` rather than have "auto" silently emulate.
+Selection: ``"numpy"`` | ``"jax"`` | ``"jax_unfused"`` | ``"auto"``/None.
+"auto" picks jax only where the kernels actually compile (TPU); on GPU/CPU
+they would run in the (slow) Pallas interpreter — valid for parity testing,
+so request it explicitly with ``backend="jax"`` rather than have "auto"
+silently emulate.  ``"jax_unfused"`` is the pre-fusion jax path (per-phase
+reconstruction, per-prefix decode grouping, no fused decode slots), kept
+registered as the benchmark baseline the fused path is measured against.
 """
 from __future__ import annotations
 
@@ -77,7 +104,7 @@ import numpy as np
 from .. import bitplane, interpolation, jax_backend, negabinary, quantize
 # single source for the backend-name constants (the reverse import would be
 # circular: jax_backend.resolve delegates here function-locally)
-from ..jax_backend import AUTO, JAX, NUMPY
+from ..jax_backend import AUTO, JAX, JAX_UNFUSED, NUMPY
 
 
 @dataclass(frozen=True)
@@ -100,6 +127,18 @@ class CodecBackend:
     encode_level_sharded: Optional[Callable] = None
     decode_level_sharded: Optional[Callable] = None
     reconstruct_sharded: Optional[Callable] = None
+    # fused decode megakernel family (see module docstring): one launch per
+    # level fusing plane-unpack + dequantize + the Algorithm 2 delta, plus
+    # the host-side inflate half the scheduler overlaps with device work
+    decode_level_fused: Optional[Callable] = None
+    decode_level_fused_batch: Optional[Callable] = None
+    decode_level_fused_sharded: Optional[Callable] = None
+    inflate_level: Optional[Callable] = None
+    inflate_level_batch: Optional[Callable] = None
+    #: batched decode accepts mixed loaded-plane prefixes in one dispatch
+    #: (truncation mask is a runtime operand) -> scheduler groups by
+    #: ``(nbits,)`` instead of ``(nbits, prefix)``
+    dynamic_low_zero: bool = False
 
     @property
     def batches_encode(self) -> bool:
@@ -217,4 +256,30 @@ register(CodecBackend(
     encode_level_sharded=_jax_encode_level_sharded,
     decode_level_sharded=jax_backend.decode_level_sharded,
     reconstruct_sharded=jax_backend.reconstruct_sharded,
+    decode_level_fused=jax_backend.decode_level_fused,
+    decode_level_fused_batch=jax_backend.decode_level_fused_batch,
+    decode_level_fused_sharded=jax_backend.decode_level_fused_sharded,
+    inflate_level=jax_backend.inflate_level,
+    inflate_level_batch=jax_backend.inflate_level_batch,
+    dynamic_low_zero=True,
+))
+
+# the pre-fusion jax path: identical encode side and archives, but decode
+# runs the separate unpack / host-dequantize / per-phase recon pipeline with
+# per-prefix dispatch grouping.  Kept registered (and so selectable through
+# ExecPolicy) as the measured baseline for the fused megakernel benchmarks.
+register(CodecBackend(
+    name=JAX_UNFUSED,
+    decorrelate=jax_backend.decorrelate,
+    encode_level=_jax_encode_level,
+    decode_level=jax_backend.decode_level,
+    reconstruct=jax_backend.reconstruct_unfused,
+    decorrelate_batch=jax_backend.decorrelate_batch,
+    encode_level_batch=_jax_encode_level_batch,
+    decode_level_batch=jax_backend.decode_level_batch,
+    reconstruct_batch=jax_backend.reconstruct_batch_unfused,
+    decorrelate_sharded=jax_backend.decorrelate_sharded,
+    encode_level_sharded=_jax_encode_level_sharded,
+    decode_level_sharded=jax_backend.decode_level_sharded,
+    reconstruct_sharded=jax_backend.reconstruct_sharded_unfused,
 ))

@@ -35,11 +35,18 @@ starved for having consumed its share earlier.
 Execution over the chunk grid is scheduled in equal-shape groups: when
 the backend ships batched primitives (``decode_level_batch`` /
 ``reconstruct_batch``), each group's plane decodes and reconstruction
-sweeps run as ONE vmapped kernel dispatch per phase / per (level, prefix)
-key instead of one per chunk — per-chunk plans, states and byte
-accounting are untouched, and a refine still loads only each chunk's
-missing planes (``ExecPolicy(batch_chunks=False)`` forces the per-chunk
-loop; outputs are bit-identical either way).
+sweeps run as ONE vmapped kernel dispatch per phase / per level-group key
+instead of one per chunk — per-chunk plans, states and byte accounting
+are untouched, and a refine still loads only each chunk's missing planes
+(``ExecPolicy(batch_chunks=False)`` forces the per-chunk loop; outputs
+are bit-identical either way).  The level-group key is backend-dependent:
+``dynamic_low_zero`` backends take the loaded-prefix length as a runtime
+kernel operand, so chunks at DIFFERENT fidelities share one ``(nbits,)``
+dispatch; legacy backends bucket by ``(nbits, prefix)``.  Backends with
+the fused decode slots further collapse each group's unpack + dequantize
++ delta cascade into one ``decode_level_fused_batch`` megakernel launch
+per level, with the next level's zlib inflate prefetched on a worker
+thread (see ``state.load_level_deltas_batch``).
 
 ``ExecPolicy(shard=...)`` ("auto" | a 1-D mesh | None, same contract as
 the encode side) additionally splits each group's stack across a device

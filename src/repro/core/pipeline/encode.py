@@ -45,7 +45,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .. import container, interpolation, negabinary
+from .. import bitplane, container, interpolation, negabinary
 from . import backends, spec
 from .spec import ExecPolicy
 
@@ -247,4 +247,4 @@ def _pack_escapes(phase_escs) -> bytes:
     idx = np.concatenate(idx_parts).astype(np.int64)
     val = np.concatenate(val_parts).astype(np.float64)
     raw = np.int64(idx.size).tobytes() + idx.tobytes() + val.tobytes()
-    return zlib.compress(raw, 6)
+    return zlib.compress(raw, bitplane.zlib_level())

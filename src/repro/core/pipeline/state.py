@@ -45,13 +45,12 @@ Two optional cross-cutting hooks thread through every helper (both are
 """
 from __future__ import annotations
 
-import zlib
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .. import loader, negabinary
+from .. import bitplane, loader, negabinary
 from ..container import ArchiveReader, ChunkedArchiveReader
 from .backends import CodecBackend
 from .spec import ExecContext
@@ -143,14 +142,33 @@ def _freeze(arr: np.ndarray) -> np.ndarray:
 
 
 def _unpack_escapes(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
-    """Inverse of ``encode._pack_escapes``: blob -> (flat idx, exact values)."""
+    """Inverse of ``encode._pack_escapes``: blob -> (flat idx, exact values).
+
+    Routed through :func:`~..bitplane.inflate` so pre-inflated
+    (:class:`~..bitplane.Raw`) payloads from cache layers skip zlib."""
     if not blob:
         return np.zeros(0, np.int64), np.zeros(0, np.float64)
-    raw = zlib.decompress(blob)
+    raw = bitplane.inflate(blob)
     n = int(np.frombuffer(raw[:8], np.int64)[0])
     idx = np.frombuffer(raw[8:8 + 8 * n], np.int64)
     val = np.frombuffer(raw[8 + 8 * n:], np.float64)
     return idx, val
+
+
+_INFLATE_POOL = None
+
+
+def _inflate_pool():
+    """Lazy singleton worker for the two-slot inflate prefetch: while the
+    device decodes level k, the NEXT level's zlib inflate (pure host work)
+    runs here, so the serial host stage hides behind the kernel sweep.
+    One worker is enough — there is exactly one level in flight ahead."""
+    global _INFLATE_POOL
+    if _INFLATE_POOL is None:
+        from concurrent.futures import ThreadPoolExecutor
+        _INFLATE_POOL = ThreadPoolExecutor(max_workers=1,
+                                           thread_name_prefix="ipcomp-inflate")
+    return _INFLATE_POOL
 
 
 def initial_state(reader: ArchiveReader, bk: CodecBackend,
@@ -195,37 +213,74 @@ def load_level_deltas(state: RetrievalState, keep_planes: List[int],
     plane fetches *and* the decode (crediting the avoided fetch bytes to
     the cache accounting); a miss decodes as usual and publishes the
     result for other sessions.
+
+    Backends shipping the fused decode slots get two upgrades here: each
+    level's unpack + dequantize + delta runs as ONE
+    ``decode_level_fused`` launch (no host negabinary passes), and the
+    next level's zlib inflate (``inflate_level``) is prefetched on a
+    worker thread while the current level's kernel runs.  Bits are
+    unchanged either way — the fused delta arithmetic is pinned identical
+    to the host spelling by the parity suite.
     """
     m = state.reader.meta
-    delta_y: List[np.ndarray] = []
+    L = len(m.levels)
+    delta_y: List[Optional[np.ndarray]] = [None] * L
     any_new = False
+    fused = bk.decode_level_fused is not None
+    djobs: List[Tuple[int, object, int, object, list]] = []
     for li, lv in enumerate(m.levels):
         have = state.planes_loaded[li]
         want = max(have, keep_planes[li])
-        if want > have:
-            any_new = True
-            key = _cache_key(state.reader, li, want) \
-                if cache is not None else None
-            nb_new = cache.get(key) if key is not None else None
-            if nb_new is None:
-                blobs: List[Optional[bytes]] = [None] * lv.nbits
-                for i in range(want):
-                    blobs[i] = state.reader.plane(li, i)
-                nb_new = bk.decode_level(blobs, lv.nbits, lv.n)
-                _count(counters, "decode_level")
-                if key is not None:
-                    cache.put(key, _freeze(nb_new))
-            else:
-                cache.saved_fetch(sum(
-                    lv.plane_sizes[i] for i in range(want)
-                    if not state.reader.plane_fetched(li, i)))
+        if want <= have:
+            delta_y[li] = np.zeros(lv.n, np.float64)
+            continue
+        any_new = True
+        key = _cache_key(state.reader, li, want) \
+            if cache is not None else None
+        nb_new = cache.get(key) if key is not None else None
+        if nb_new is not None:
+            cache.saved_fetch(sum(
+                lv.plane_sizes[i] for i in range(want)
+                if not state.reader.plane_fetched(li, i)))
             dq = negabinary.from_negabinary(nb_new) - \
                 negabinary.from_negabinary(state.nb_partial[li])
-            delta_y.append(dq.astype(np.float64) * 2.0 * m.eb)
+            delta_y[li] = dq.astype(np.float64) * 2.0 * m.eb
             state.nb_partial[li] = nb_new
             state.planes_loaded[li] = want
+            continue
+        blobs: List[Optional[bytes]] = [None] * lv.nbits
+        for i in range(want):
+            blobs[i] = state.reader.plane(li, i)
+        djobs.append((li, lv, want, key, blobs))
+    prefetch = fused and bk.inflate_level is not None and len(djobs) > 1
+    fut = None
+    for k, (li, lv, want, key, blobs) in enumerate(djobs):
+        words = None
+        if prefetch:
+            words = fut.result() if fut is not None \
+                else bk.inflate_level(blobs, lv.nbits, lv.n)
+            if k + 1 < len(djobs):
+                nli, nlv, _nw, _nk, nblobs = djobs[k + 1]
+                fut = _inflate_pool().submit(bk.inflate_level, nblobs,
+                                             nlv.nbits, nlv.n)
+            else:
+                fut = None
+        if fused:
+            nb_new, dy = bk.decode_level_fused(blobs, lv.nbits, lv.n,
+                                               state.nb_partial[li], m.eb,
+                                               words=words)
         else:
-            delta_y.append(np.zeros(lv.n, np.float64))
+            nb_new = bk.decode_level(blobs, lv.nbits, lv.n)
+            dq = negabinary.from_negabinary(nb_new) - \
+                negabinary.from_negabinary(state.nb_partial[li])
+            dy = dq.astype(np.float64) * 2.0 * m.eb
+        _count(counters, "decode_level")
+        nb_new = np.asarray(nb_new)
+        if key is not None:
+            cache.put(key, _freeze(nb_new))
+        delta_y[li] = dy
+        state.nb_partial[li] = nb_new
+        state.planes_loaded[li] = want
     return delta_y, any_new
 
 
@@ -327,26 +382,41 @@ def load_level_deltas_batch(states: List[RetrievalState],
     """Batched :func:`load_level_deltas` over B equal-shape chunk states.
 
     Plane fetches stay per chunk (each chunk's reader counts its own
-    bytes), but the decode itself is grouped by (nbits, loaded-prefix) —
-    the static configuration of the unpack kernel — and each group runs as
-    one batched ``decode_level`` dispatch (mesh-sharded across devices
-    when the context carries a mesh).  Returns per-chunk delta streams
-    and per-chunk any-new flags, exactly like B scalar calls.
+    bytes), but the decode itself is grouped and each group runs as one
+    batched dispatch (mesh-sharded across devices when the context
+    carries a mesh).  The group key depends on the backend: with
+    ``dynamic_low_zero`` the loaded-prefix length is a *runtime* operand,
+    so jobs group by ``(nbits,)`` alone and chunks at different fidelities
+    share one launch; legacy backends group by ``(nbits, prefix)``.
+    Backends with the fused slots run each group as one
+    ``decode_level_fused_batch`` megakernel launch (per-chunk ``nb_old``
+    and ``eb`` ride along as runtime operands), and the next group's zlib
+    inflate is prefetched on a worker thread while the current group's
+    kernel runs.  Returns per-chunk delta streams and per-chunk any-new
+    flags, exactly like B scalar calls.
 
     Cross-session serving hooks: with a ``cache``, each job first probes
     the shared plane cache (a hit skips the fetch and leaves the batch);
     and jobs from *different sessions over the same archive bytes* (equal
     ``cache_scope``) wanting the same prefix are deduplicated — one leader
     decodes, followers share the immutable result (``dedup_reuse`` in
-    ``counters``).  Chunks within one session always have distinct scopes,
-    so single-request behaviour is unchanged.
+    ``counters``).  Followers and cache hits host-compute their own delta
+    (their ``nb_old`` differs from the leader's), so the fused fast path
+    never changes what they see.  Chunks within one session always have
+    distinct scopes, so single-request behaviour is unchanged.
     """
     bk, mesh = ctx.bk, ctx.mesh
     m0 = states[0].reader.meta
     B = len(states)
+    L = len(m0.levels)
     delta_ys: List[List[Optional[np.ndarray]]] = \
-        [[None] * len(m0.levels) for _ in range(B)]
+        [[None] * L for _ in range(B)]
     any_new = [False] * B
+    fused = bk.decode_level_fused_batch is not None
+    jobs_per_level: List[List[Tuple[int, int]]] = [[] for _ in range(L)]
+    resolved: dict = {}        # (level, chunk pos) -> (nb_new, delta|None)
+    followers: dict = {}       # (level, leader pos) -> [follower pos]
+    calls: list = []           # (level, nbits, [(chunk pos, want)], blobs)
     for li, lv0 in enumerate(m0.levels):
         jobs: List[Tuple[int, int]] = []     # (chunk pos, want)
         for b, st in enumerate(states):
@@ -356,11 +426,10 @@ def load_level_deltas_batch(states: List[RetrievalState],
                 jobs.append((b, want))
             else:
                 delta_ys[b][li] = np.zeros(lv0.n, np.float64)
+        jobs_per_level[li] = jobs
         # resolve cache hits and dedupe same-(scope, prefix) decode jobs
-        resolved: dict = {}                  # chunk pos -> decoded stream
         decode_jobs: List[Tuple[int, int]] = []
         leaders: dict = {}                   # cache key -> leader pos
-        followers: dict = {}                 # leader pos -> [follower pos]
         for b, want in jobs:
             key = _cache_key(states[b].reader, li, want)
             nb = cache.get(key) if (cache is not None and key is not None) \
@@ -370,52 +439,89 @@ def load_level_deltas_batch(states: List[RetrievalState],
                 cache.saved_fetch(sum(
                     lv.plane_sizes[i] for i in range(want)
                     if not states[b].reader.plane_fetched(li, i)))
-                resolved[b] = nb
+                resolved[(li, b)] = (nb, None)
             elif key is not None and key in leaders:
-                followers.setdefault(leaders[key], []).append(b)
+                followers.setdefault((li, leaders[key]), []).append(b)
                 _count(counters, "dedup_reuse")
             else:
                 if key is not None:
                     leaders[key] = b
                 decode_jobs.append((b, want))
-        groups: dict = {}                    # (nbits, want) -> [chunk pos]
+        groups: dict = {}        # (nbits[, want]) -> [(chunk pos, want)]
         for b, want in decode_jobs:
-            gk = (states[b].reader.meta.levels[li].nbits, want)
-            groups.setdefault(gk, []).append(b)
-        for (nbits, want), bs in groups.items():
+            nbits = states[b].reader.meta.levels[li].nbits
+            gk = (nbits,) if bk.dynamic_low_zero else (nbits, want)
+            groups.setdefault(gk, []).append((b, want))
+        for gk, grp in groups.items():
             blob_lists = []
-            for b in bs:
+            for b, want in grp:
                 st = states[b]
-                blobs: List[Optional[bytes]] = [None] * nbits
+                blobs: List[Optional[bytes]] = [None] * gk[0]
                 for i in range(want):
                     blobs[i] = st.reader.plane(li, i)
                 blob_lists.append(blobs)
-            if (mesh is not None and bk.decode_level_sharded is not None
-                    and len(bs) > 1):
-                nbs = bk.decode_level_sharded(blob_lists, nbits, lv0.n, mesh)
-                _count(counters, "decode_level")
-            elif bk.decode_level_batch is not None and len(bs) > 1:
-                nbs = bk.decode_level_batch(blob_lists, nbits, lv0.n)
-                _count(counters, "decode_level")
+            calls.append((li, gk[0], grp, blob_lists))
+
+    # execute the collected group dispatches; with the fused slots, the
+    # NEXT group's host inflate overlaps the current group's kernel
+    prefetch = fused and bk.inflate_level_batch is not None and len(calls) > 1
+    fut = None
+    for k, (li, nbits, grp, blob_lists) in enumerate(calls):
+        n = m0.levels[li].n
+        words = None
+        if prefetch:
+            words = fut.result() if fut is not None \
+                else bk.inflate_level_batch(blob_lists, nbits, n)
+            if k + 1 < len(calls):
+                nli, nnbits, _g, nbl = calls[k + 1]
+                fut = _inflate_pool().submit(bk.inflate_level_batch, nbl,
+                                             nnbits, m0.levels[nli].n)
             else:
-                nbs = [bk.decode_level(bl, nbits, lv0.n)
-                       for bl in blob_lists]
-                _count(counters, "decode_level", len(bs))
-            for b, nb_new in zip(bs, nbs):
-                nb_new = _freeze(np.asarray(nb_new))
-                key = _cache_key(states[b].reader, li, want)
-                if cache is not None and key is not None:
-                    cache.put(key, nb_new)
-                resolved[b] = nb_new
-                for fb in followers.get(b, ()):
-                    resolved[fb] = nb_new
-        for b, want in jobs:
-            nb_new = resolved[b]
+                fut = None
+        bs = [b for b, _ in grp]
+        if fused:
+            nb_olds = [states[b].nb_partial[li] for b in bs]
+            ebs = [states[b].reader.meta.eb for b in bs]
+            if (mesh is not None and bk.decode_level_fused_sharded is not None
+                    and len(bs) > 1):
+                outs = bk.decode_level_fused_sharded(blob_lists, nbits, n,
+                                                     nb_olds, ebs, mesh,
+                                                     words=words)
+            else:
+                outs = bk.decode_level_fused_batch(blob_lists, nbits, n,
+                                                   nb_olds, ebs, words=words)
+            _count(counters, "decode_level")
+        elif (mesh is not None and bk.decode_level_sharded is not None
+                and len(bs) > 1):
+            outs = [(nb, None) for nb in
+                    bk.decode_level_sharded(blob_lists, nbits, n, mesh)]
+            _count(counters, "decode_level")
+        elif bk.decode_level_batch is not None and len(bs) > 1:
+            outs = [(nb, None) for nb in
+                    bk.decode_level_batch(blob_lists, nbits, n)]
+            _count(counters, "decode_level")
+        else:
+            outs = [(bk.decode_level(bl, nbits, n), None)
+                    for bl in blob_lists]
+            _count(counters, "decode_level", len(bs))
+        for (b, want), (nb_new, dy) in zip(grp, outs):
+            nb_new = _freeze(np.asarray(nb_new))
+            key = _cache_key(states[b].reader, li, want)
+            if cache is not None and key is not None:
+                cache.put(key, nb_new)
+            resolved[(li, b)] = (nb_new, dy)
+            for fb in followers.get((li, b), ()):
+                resolved[(li, fb)] = (nb_new, None)
+
+    for li in range(L):
+        for b, want in jobs_per_level[li]:
+            nb_new, dy = resolved[(li, b)]
             st = states[b]
-            dq = negabinary.from_negabinary(nb_new) - \
-                negabinary.from_negabinary(st.nb_partial[li])
-            delta_ys[b][li] = dq.astype(np.float64) * \
-                2.0 * st.reader.meta.eb
+            if dy is None:
+                dq = negabinary.from_negabinary(nb_new) - \
+                    negabinary.from_negabinary(st.nb_partial[li])
+                dy = dq.astype(np.float64) * 2.0 * st.reader.meta.eb
+            delta_ys[b][li] = dy
             st.nb_partial[li] = nb_new
             st.planes_loaded[li] = want
             any_new[b] = True

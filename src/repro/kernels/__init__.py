@@ -1,7 +1,8 @@
 """Pallas TPU kernels for IPComp's compute hot spots.
 
-Two kernel *pairs* cover the profile of the paper's pipeline — one per
-codec direction (everything else is metadata-sized):
+A kernel *quintet* covers the profile of the paper's pipeline — two per
+codec direction plus a fused decode megakernel (everything else is
+metadata-sized):
 
   interp_quant    — fused interpolation-predict + quantize for one dimension
                     sweep (the O(n) inner loop of §4.1); returns (q, pred) so
@@ -9,35 +10,47 @@ codec direction (everything else is metadata-sized):
   interp_recon    — its exact inverse: fused predict + add-residual for one
                     reconstruction sweep (the hot loop of retrieval,
                     Algorithms 1–2); shares the prediction code with
-                    interp_quant so both directions are bit-identical.
+                    interp_quant so both directions are bit-identical.  Its
+                    ``interp_recon_level`` entry runs BOTH (level, dim)
+                    phases of a 2-D level plus the escape overrides in one
+                    launch on the level's stride-s subgrid.
   bitplane_pack   — negabinary conversion + 2-bit-prefix XOR predictive
                     coding + cross-lane bitplane packing (§4.4) in a single
                     VMEM pass (three integer ops per element).
   bitplane_unpack — the inverse: plane-word unpack + closed-form XOR-undo
                     ((1+x+x^2)^-1 over GF(2) = 22 shift/XORs) + negabinary
-                    decode back to int32 bins.
+                    decode back to int32 bins.  The truncation mask
+                    (``low_zero``) is a RUNTIME operand, so batched streams
+                    with different loaded-plane prefixes share one launch.
+  decode_fused    — the progressive-decode megakernel: bitplane_unpack +
+                    negabinary dequantize + Algorithm 2's delta against the
+                    session's previous truncation, one launch per level;
+                    ``low_zero`` and the error bound ride along as runtime
+                    per-row operands.
 
-All four are wired into ``core.jax_backend`` behind the
+All five are wired into ``core.jax_backend`` behind the
 ``core.pipeline.backends`` registry and drive ``compress`` / ``retrieve`` /
 ``refine`` / ``decompress`` with ``backend="jax"``; blobs, bins, and
 reconstructions are byte/bit-identical to the numpy reference pipeline
-(enforced by tests/test_backend_parity.py and tests/test_decode_parity.py).
-Each wrapper also ships a ``jax.vmap``-ed ``*_batch`` entry point over
-stacks of equal-shaped problems — the chunk-batch engine's unit: B chunks,
-one launch — and a ``*_sharded`` entry point that splits the same stack
-over a 1-D device mesh via ``parallel.codec_mesh.shard_vmap`` (every
-device runs the vmapped kernel on its local rows; one logical dispatch,
-mesh-size device launches).  Every launch is counted by
-``kernels.dispatch``, including the sharded per-device fan-out (the
-batched-vs-looped reduction and the sharded accounting are asserted in
-tests and recorded by ``benchmarks/backend_speed.py``).
+(enforced by tests/test_backend_parity.py, tests/test_decode_parity.py and
+tests/test_fused_decode.py).  Each wrapper also ships a ``jax.vmap``-ed
+``*_batch`` entry point over stacks of equal-shaped problems — the
+chunk-batch engine's unit: B chunks, one launch — and a ``*_sharded``
+entry point that splits the same stack over a 1-D device mesh via
+``parallel.codec_mesh.shard_vmap`` (every device runs the vmapped kernel
+on its local rows; one logical dispatch, mesh-size device launches).
+Every launch is counted — and its HBM traffic metered — by
+``kernels.dispatch`` (the batched-vs-looped reduction and the sharded
+accounting are asserted in tests; ``benchmarks/backend_speed.py`` records
+throughput and ``benchmarks/roofline_report.py`` turns the byte meters
+into achieved-vs-peak bandwidth).
 
-  attention       — flash-attention (GQA) forward for the LM serving/training
-                    stack: per-(batch, head, q-tile) programs stream kv tiles
-                    with running-softmax state; O(S^2) never touches HBM.
-
-Each kernel ships with ops.py (jit'd public wrapper, interpret-mode switch)
-and ref.py (pure-jnp oracle used by the allclose test sweeps).  The container
-is CPU-only, so tests run with interpret=True; BlockSpecs are written for
-TPU v5e VMEM tiling (8x128-aligned).
+Each kernel ships with ops.py (jit'd public wrapper, interpret-mode
+switch) and ref.py or a pure-jnp XLA twin in kernel.py (the oracle for
+the parity sweeps).  ``kernels.mode`` selects the substrate per call:
+``IPCOMP_KERNEL_MODE=xla`` routes every wrapper to its jitted pure-jnp
+twin — the same core functions, compiled by XLA on any backend — which is
+what CI's ``compiled`` lane runs on CPU, where Pallas itself is
+interpret-only.  BlockSpecs are written for TPU v5e VMEM tiling
+(8x128-aligned).
 """

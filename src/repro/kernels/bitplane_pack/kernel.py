@@ -16,6 +16,17 @@ the encoded word, the XOR recurrence is undone by its closed-form inverse
 (1+x+x^2)^-1 = sum_k x^{3k}(1+x) over GF(2) — 22 shift/XORs instead of the
 host's 32-step sequential MSB-down recurrence — and the negabinary word is
 decoded back to the int32 quantization bin.
+
+``low_zero`` — the count of absent low negabinary digits a loaded plane
+prefix implies — is a RUNTIME operand (a (1, 1) uint32 array), not a
+static argname: mixed plane prefixes batch into one launch (each vmapped
+element carries its own mask width) instead of fragmenting a chunk group
+into one launch per ``(nbits, prefix)`` bucket, and refine ladders stop
+re-tracing the kernel once per distinct prefix.
+
+``unpack_words`` is the pure-jnp core shared by the Pallas kernel body and
+the jitted XLA twin (``IPCOMP_KERNEL_MODE=xla`` — see ``kernels.mode``):
+one definition, so the two execution modes cannot drift.
 """
 from __future__ import annotations
 
@@ -48,15 +59,19 @@ def _kernel(q_ref, out_ref, *, C: int):
         out_ref[k, :, :] = jnp.sum(bits << shift, axis=-1, dtype=jnp.uint32)
 
 
-def _unpack_kernel(p_ref, q_ref, nb_ref, *, W: int, low_zero: int):
-    R = q_ref.shape[0]
+def unpack_words(planes, lz, *, W: int):
+    """Pure core of the unpack direction: (32, R, W) packed plane words +
+    runtime ``lz`` (uint32 scalar, low digits to mask) -> (q int32, nb
+    uint32), both (R, W*GROUP).  Shared verbatim by the Pallas kernel body
+    and the jitted XLA twin so the two modes stay bit-identical."""
+    R = planes.shape[1]
     # planes -> XOR-encoded word: bit k of element (r, w*32 + j) is bit
     # (31 - j) of word p[k, r, w] (lane 0 = MSB, np.packbits order)
     j = jax.lax.broadcasted_iota(jnp.uint32, (R, W, GROUP), dimension=2)
     shift = jnp.uint32(GROUP - 1) - j
     enc = jnp.zeros((R, W, GROUP), jnp.uint32)
     for k in range(32):
-        w = p_ref[k, :, :].reshape(R, W, 1)
+        w = planes[k].reshape(R, W, 1)
         enc = enc | (((w >> shift) & jnp.uint32(1)) << jnp.uint32(k))
     enc = enc.reshape(R, W * GROUP)
     # XOR-undo: enc = nb ^ (nb>>1) ^ (nb>>2) is multiplication by P(x) =
@@ -70,40 +85,80 @@ def _unpack_kernel(p_ref, q_ref, nb_ref, *, W: int, low_zero: int):
         if k3 + 1 < 32:
             nb = nb ^ (t >> jnp.uint32(1))
     # a loaded prefix of planes means low negabinary digits are absent:
-    # the recurrence below the cutoff would free-run on zero input, so
-    # mask — this IS the truncation the progressive format defines (§4.4)
-    if low_zero > 0:
-        nb = nb & jnp.uint32((0xFFFFFFFF << low_zero) & 0xFFFFFFFF)
+    # the recurrence above would free-run on zero input below the cutoff,
+    # so mask — this IS the truncation the progressive format defines
+    # (§4.4).  lz is a runtime value in [0, 32): shift-by-lz is defined.
+    nb = nb & (jnp.uint32(0xFFFFFFFF) << lz.astype(jnp.uint32))
     # negabinary decode (§4.4.2): x = (nb ^ M) - M, modular in uint32; the
     # truncated word itself is emitted too — it is the canonical progressive
     # state (decode_level's contract), already in register here
-    nb_ref[...] = nb
     u = (nb ^ NEG_M) - NEG_M
-    q_ref[...] = jax.lax.bitcast_convert_type(u, jnp.int32)
+    return jax.lax.bitcast_convert_type(u, jnp.int32), nb
 
 
-@functools.partial(jax.jit, static_argnames=("low_zero", "interpret"))
-def bitplane_unpack_pallas(planes: jax.Array, *, low_zero: int = 0,
+def _unpack_kernel(p_ref, lz_ref, q_ref, nb_ref, *, W: int):
+    q, nb = unpack_words(p_ref[...], lz_ref[0, 0], W=W)
+    nb_ref[...] = nb
+    q_ref[...] = q
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitplane_unpack_pallas(planes: jax.Array, low_zero: jax.Array, *,
                            interpret: bool = True):
     """planes: (32, R, W) uint32 packed plane words (the ``bitplane_pack``
-    layout; unloaded planes all-zero).  Returns (q, nb), both (R, W*32):
-    the int32 bins after XOR-undo + negabinary decode, and the truncated
-    negabinary words themselves, with the ``low_zero`` least-significant
-    digits masked to zero (the progressive truncation of a plane prefix).
+    layout; unloaded planes all-zero); low_zero: (1, 1) uint32 runtime
+    operand.  Returns (q, nb), both (R, W*32): the int32 bins after
+    XOR-undo + negabinary decode, and the truncated negabinary words
+    themselves, with the ``low_zero`` least-significant digits masked to
+    zero (the progressive truncation of a plane prefix).
     """
     P, R, W = planes.shape
     assert P == 32 and R % ROWS_B == 0
     grid = (R // ROWS_B,)
     bspec_out = pl.BlockSpec((ROWS_B, W * GROUP), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_unpack_kernel, W=W, low_zero=low_zero),
+        functools.partial(_unpack_kernel, W=W),
         grid=grid,
-        in_specs=[pl.BlockSpec((32, ROWS_B, W), lambda i: (0, i, 0))],
+        in_specs=[pl.BlockSpec((32, ROWS_B, W), lambda i: (0, i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
         out_specs=[bspec_out, bspec_out],
         out_shape=[jax.ShapeDtypeStruct((R, W * GROUP), jnp.int32),
                    jax.ShapeDtypeStruct((R, W * GROUP), jnp.uint32)],
         interpret=interpret,
-    )(planes)
+    )(planes, low_zero)
+
+
+@jax.jit
+def bitplane_unpack_xla(planes: jax.Array, low_zero: jax.Array):
+    """Jitted XLA twin of :func:`bitplane_unpack_pallas`: the same
+    ``unpack_words`` core over the whole array, compiled by XLA on any
+    backend (the ``IPCOMP_KERNEL_MODE=xla`` path)."""
+    P, R, W = planes.shape
+    return unpack_words(planes, low_zero[0, 0], W=W)
+
+
+def pack_words(q, *, C: int):
+    """Pure core of the pack direction: (R, C) int32 -> (32, R, C//GROUP)
+    uint32 XOR-coded plane words (the XLA twin of ``_kernel``; same
+    arithmetic, stacked output instead of per-plane ref writes)."""
+    u = q.astype(jnp.uint32)
+    nb = (u + NEG_M) ^ NEG_M
+    enc = nb ^ (nb >> jnp.uint32(1)) ^ (nb >> jnp.uint32(2))
+    R = enc.shape[0]
+    g = enc.reshape(R, C // GROUP, GROUP)
+    j = jax.lax.broadcasted_iota(jnp.uint32, g.shape, dimension=2)
+    shift = jnp.uint32(GROUP - 1) - j
+    return jnp.stack([
+        jnp.sum(((g >> jnp.uint32(k)) & jnp.uint32(1)) << shift, axis=-1,
+                dtype=jnp.uint32)
+        for k in range(32)])
+
+
+@jax.jit
+def bitplane_pack_xla(q: jax.Array):
+    """Jitted XLA twin of :func:`bitplane_pack_pallas`."""
+    R, C = q.shape
+    return pack_words(q, C=C)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

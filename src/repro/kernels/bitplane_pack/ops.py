@@ -3,14 +3,28 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .. import dispatch
-from .kernel import (GROUP, ROWS_B, bitplane_pack_pallas,
-                     bitplane_unpack_pallas)
+from .. import dispatch, mode
+from .kernel import (GROUP, ROWS_B, bitplane_pack_pallas, bitplane_pack_xla,
+                     bitplane_unpack_pallas, bitplane_unpack_xla)
 
 # words per row fed to the unpack kernel: 128 lanes of uint32 = 4096
 # elements per row, matching the 1-D pack wrapper's C = 128 * GROUP
 _UNPACK_W = 128
+
+
+def _lz_array(low_zero, B: int | None = None):
+    """Normalize ``low_zero`` to the kernel's runtime-operand layout:
+    (1, 1) uint32 for a scalar call, (B, 1, 1) for a batched one (a lone
+    int broadcasts to every batch row)."""
+    if B is None:
+        return jnp.full((1, 1), int(low_zero), jnp.uint32)
+    lz = np.asarray(low_zero, np.uint32).reshape(-1)
+    if lz.size == 1:
+        lz = np.full(B, lz[0], np.uint32)
+    assert lz.size == B, "per-chunk low_zero must match the batch size"
+    return jnp.asarray(lz).reshape(B, 1, 1)
 
 
 def bitplane_pack(q, *, interpret: bool | None = None):
@@ -33,8 +47,11 @@ def bitplane_pack(q, *, interpret: bool | None = None):
     pr, pc = (-R) % ROWS_B, (-C) % GROUP
     if pr or pc:
         q = jnp.pad(q, ((0, pr), (0, pc)))
-    dispatch.record("bitplane_pack")
-    packed = bitplane_pack_pallas(q, interpret=interpret)
+    dispatch.record("bitplane_pack", nbytes=2 * q.size * 4)
+    if mode.use_xla():
+        packed = bitplane_pack_xla(q)
+    else:
+        packed = bitplane_pack_pallas(q, interpret=interpret)
     return packed, n
 
 
@@ -67,15 +84,20 @@ def bitplane_pack_batch(q, *, interpret: bool | None = None, mesh=None):
     if pr:
         q = jnp.pad(q, ((0, 0), (0, pr), (0, 0)))
 
-    def kernel(a):
-        return bitplane_pack_pallas(a, interpret=interpret)
+    if mode.use_xla():
+        def kernel(a):
+            return bitplane_pack_xla(a)
+    else:
+        def kernel(a):
+            return bitplane_pack_pallas(a, interpret=interpret)
 
+    nbytes = 2 * q.size * 4
     if mesh is None:
-        dispatch.record("bitplane_pack", batch=B)
+        dispatch.record("bitplane_pack", batch=B, nbytes=nbytes)
         packed = jax.vmap(kernel)(q)
     else:
         dispatch.record("bitplane_pack", batch=B,
-                        devices=codec_mesh.shard_count(mesh))
+                        devices=codec_mesh.shard_count(mesh), nbytes=nbytes)
         packed = codec_mesh.shard_vmap(kernel, mesh)(q)
     return packed[:B], n
 
@@ -95,10 +117,12 @@ def bitplane_unpack(plane_words, n: int, *, low_zero: int = 0,
     per word, element 0 at the MSB — the flat stream ``bitplane_pack``
     emits and the archive stores); absent planes are all-zero rows.
     ``low_zero`` masks that many least-significant negabinary digits, i.e.
-    decodes the truncation defined by a loaded MSB-first plane prefix.
-    ``with_nb=True`` returns (q, nb): the kernel holds the truncated
-    negabinary word anyway, and the progressive state stores it — handing
-    it out saves the caller an exactly-cancelling host re-encode.
+    decodes the truncation defined by a loaded MSB-first plane prefix; it
+    is a RUNTIME operand of the kernel, so distinct prefixes share one
+    trace.  ``with_nb=True`` returns (q, nb): the kernel holds the
+    truncated negabinary word anyway, and the progressive state stores it
+    — handing it out saves the caller an exactly-cancelling host
+    re-encode.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -111,22 +135,31 @@ def bitplane_unpack(plane_words, n: int, *, low_zero: int = 0,
     if pad:
         pw = jnp.pad(pw, ((0, 0), (0, pad)))
     pw = pw.reshape(32, R, _UNPACK_W)
-    dispatch.record("bitplane_unpack")
-    q, nb = bitplane_unpack_pallas(pw, low_zero=low_zero,
-                                   interpret=interpret)
+    lz = _lz_array(low_zero)
+    # traffic: packed planes in + (q, nb) out
+    dispatch.record("bitplane_unpack",
+                    nbytes=(pw.size + 2 * R * _UNPACK_W * GROUP) * 4)
+    if mode.use_xla():
+        q, nb = bitplane_unpack_xla(pw, lz)
+    else:
+        q, nb = bitplane_unpack_pallas(pw, lz, interpret=interpret)
     if with_nb:
         return q.reshape(-1)[:n], nb.reshape(-1)[:n]
     return q.reshape(-1)[:n]
 
 
-def bitplane_unpack_batch(plane_words, n: int, *, low_zero: int = 0,
+def bitplane_unpack_batch(plane_words, n: int, *, low_zero=0,
                           with_nb: bool = False,
                           interpret: bool | None = None, mesh=None):
     """(B, 32, NW) stacked per-plane word streams -> (B, n) int32 bins.
 
-    The batched twin of ``bitplane_unpack`` for equal-(n, low_zero) chunk
-    groups: one ``jax.vmap``-ed launch decodes all B streams, each padded
-    exactly like a lone call, so per-chunk outputs are bit-identical.
+    The batched twin of ``bitplane_unpack`` for equal-n chunk groups: one
+    ``jax.vmap``-ed launch decodes all B streams, each padded exactly like
+    a lone call, so per-chunk outputs are bit-identical.  ``low_zero`` may
+    be a single int or a length-B sequence — the mask width is a runtime
+    per-row operand, so chunks with DIFFERENT loaded plane prefixes still
+    share the one launch (the whole point of the dynamic operand: no more
+    one-launch-per-(nbits, prefix) fragmentation).
 
     With ``mesh``, the stream stack is zero-padded to a mesh multiple
     (all-zero pad streams decode to zeros, sliced back off) and split
@@ -149,18 +182,25 @@ def bitplane_unpack_batch(plane_words, n: int, *, low_zero: int = 0,
     if pad or padb:
         pw = jnp.pad(pw, ((0, padb), (0, 0), (0, pad)))
     pw = pw.reshape(B + padb, 32, R, _UNPACK_W)
+    lz = _lz_array(low_zero, B)
+    if padb:
+        lz = jnp.pad(lz, ((0, padb), (0, 0), (0, 0)))
 
-    def kernel(a):
-        return bitplane_unpack_pallas(a, low_zero=low_zero,
-                                      interpret=interpret)
+    if mode.use_xla():
+        def kernel(a, z):
+            return bitplane_unpack_xla(a, z)
+    else:
+        def kernel(a, z):
+            return bitplane_unpack_pallas(a, z, interpret=interpret)
 
+    nbytes = (pw.size + 2 * (B + padb) * R * _UNPACK_W * GROUP) * 4
     if mesh is None:
-        dispatch.record("bitplane_unpack", batch=B)
-        q, nb = jax.vmap(kernel)(pw)
+        dispatch.record("bitplane_unpack", batch=B, nbytes=nbytes)
+        q, nb = jax.vmap(kernel)(pw, lz)
     else:
         dispatch.record("bitplane_unpack", batch=B,
-                        devices=codec_mesh.shard_count(mesh))
-        q, nb = codec_mesh.shard_vmap(kernel, mesh, n_out=2)(pw)
+                        devices=codec_mesh.shard_count(mesh), nbytes=nbytes)
+        q, nb = codec_mesh.shard_vmap(kernel, mesh, n_out=2)(pw, lz)
     q = q.reshape(B + padb, -1)[:B, :n]
     nb = nb.reshape(B + padb, -1)[:B, :n]
     if with_nb:
@@ -168,12 +208,12 @@ def bitplane_unpack_batch(plane_words, n: int, *, low_zero: int = 0,
     return q
 
 
-def bitplane_unpack_sharded(plane_words, n: int, *, mesh, low_zero: int = 0,
+def bitplane_unpack_sharded(plane_words, n: int, *, mesh, low_zero=0,
                             with_nb: bool = False,
                             interpret: bool | None = None):
     """Sharded twin: ``bitplane_unpack_batch`` with the (B, 32, NW) stack
-    split over the 1-D codec ``mesh`` (thin alias; equal-(n, low_zero)
-    groups only, like the batched twin)."""
+    split over the 1-D codec ``mesh`` (thin alias; equal-n groups only,
+    like the batched twin — per-chunk ``low_zero`` rides along)."""
     return bitplane_unpack_batch(plane_words, n, low_zero=low_zero,
                                  with_nb=with_nb, interpret=interpret,
                                  mesh=mesh)

@@ -1,0 +1,5 @@
+from .ops import decode_fused, decode_fused_batch, decode_fused_sharded
+from .ref import decode_fused_ref
+
+__all__ = ["decode_fused", "decode_fused_batch", "decode_fused_sharded",
+           "decode_fused_ref"]

@@ -1,0 +1,129 @@
+"""Public wrappers for the fused progressive-decode megakernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import dispatch, mode
+from ..bitplane_pack.kernel import GROUP, ROWS_B
+from ..bitplane_pack.ops import _UNPACK_W, _lz_array
+from .kernel import decode_fused_pallas, decode_fused_xla
+
+
+def _eb_array(eb, B: int | None = None):
+    """Normalize ``eb`` to the runtime-operand layout ((1, 1) f64 scalar,
+    (B, 1, 1) batched; a lone float broadcasts)."""
+    if B is None:
+        return jnp.full((1, 1), float(eb), jnp.float64)
+    e = np.asarray(eb, np.float64).reshape(-1)
+    if e.size == 1:
+        e = np.full(B, e[0], np.float64)
+    assert e.size == B, "per-chunk eb must match the batch size"
+    return jnp.asarray(e).reshape(B, 1, 1)
+
+
+def decode_fused(plane_words, nb_old, n: int, *, eb: float, low_zero=0,
+                 interpret: bool | None = None):
+    """One launch per level: (32, NW) packed plane words + the previous
+    (n,) negabinary state -> (nb_new (n,) uint32, delta (n,) f64).
+
+    ``delta`` is the dequantized residual increment of Algorithm 2's
+    cascade — ``(bin_new - bin_old) * 2 * eb`` — computed on device, bit-
+    identical to the unfused host arithmetic.  Replaces one unpack launch
+    plus three host passes over the level stream.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    with jax.experimental.enable_x64():
+        pw = jnp.asarray(plane_words, jnp.uint32)
+        P, NW = pw.shape
+        assert P == 32, "expect one row per negabinary digit"
+        need = -(-max(n, 1) // (GROUP * _UNPACK_W))
+        R = -(-need // ROWS_B) * ROWS_B
+        C = R * _UNPACK_W * GROUP
+        pad = R * _UNPACK_W - NW
+        if pad:
+            pw = jnp.pad(pw, ((0, 0), (0, pad)))
+        pw = pw.reshape(32, R, _UNPACK_W)
+        old = jnp.asarray(nb_old, jnp.uint32).reshape(-1)
+        old = jnp.pad(old, (0, C - old.shape[0])).reshape(R, _UNPACK_W * GROUP)
+        lz = _lz_array(low_zero)
+        ebp = _eb_array(eb)
+        # traffic: planes + old words in, new words + f64 delta out
+        dispatch.record("decode_fused", nbytes=pw.size * 4 + C * (4 + 4 + 8))
+        if mode.use_xla():
+            nb_new, delta = decode_fused_xla(pw, old, lz, ebp)
+        else:
+            nb_new, delta = decode_fused_pallas(pw, old, lz, ebp,
+                                                interpret=interpret)
+        return nb_new.reshape(-1)[:n], delta.reshape(-1)[:n]
+
+
+def decode_fused_batch(plane_words, nb_old, n: int, *, eb, low_zero=0,
+                       interpret: bool | None = None, mesh=None):
+    """Batched twin over stacked equal-n chunks: (B, 32, NW) plane words +
+    (B, n) previous states -> ((B, n) nb_new, (B, n) f64 delta), ONE
+    launch.  ``low_zero`` and ``eb`` may be scalars or length-B sequences
+    — both are runtime per-row operands, so chunks with different loaded
+    prefixes AND different level error bounds share the launch.
+
+    With ``mesh``, the stack is zero-padded to a mesh multiple (pad rows
+    decode to zero deltas, sliced back off) and split across the 1-D codec
+    mesh like every other sharded kernel wrapper.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    with jax.experimental.enable_x64():
+        pw = jnp.asarray(plane_words, jnp.uint32)
+        B, P, NW = pw.shape
+        assert P == 32, "expect one row per negabinary digit"
+        need = -(-max(n, 1) // (GROUP * _UNPACK_W))
+        R = -(-need // ROWS_B) * ROWS_B
+        C = R * _UNPACK_W * GROUP
+        pad = R * _UNPACK_W - NW
+        padb = 0
+        if mesh is not None:
+            from ...parallel import codec_mesh
+            padb = codec_mesh.pad_to_shards(B, mesh)
+        if pad or padb:
+            pw = jnp.pad(pw, ((0, padb), (0, 0), (0, pad)))
+        pw = pw.reshape(B + padb, 32, R, _UNPACK_W)
+        old = jnp.asarray(nb_old, jnp.uint32).reshape(B, -1)
+        old = jnp.pad(old, ((0, padb), (0, C - old.shape[1])))
+        old = old.reshape(B + padb, R, _UNPACK_W * GROUP)
+        lz = _lz_array(low_zero, B)
+        ebp = _eb_array(eb, B)
+        if padb:
+            lz = jnp.pad(lz, ((0, padb), (0, 0), (0, 0)))
+            ebp = jnp.pad(ebp, ((0, padb), (0, 0), (0, 0)))
+
+        if mode.use_xla():
+            def kernel(a, o, z, e):
+                return decode_fused_xla(a, o, z, e)
+        else:
+            def kernel(a, o, z, e):
+                return decode_fused_pallas(a, o, z, e, interpret=interpret)
+
+        nbytes = pw.size * 4 + (B + padb) * C * (4 + 4 + 8)
+        if mesh is None:
+            dispatch.record("decode_fused", batch=B, nbytes=nbytes)
+            nb_new, delta = jax.vmap(kernel)(pw, old, lz, ebp)
+        else:
+            dispatch.record("decode_fused", batch=B,
+                            devices=codec_mesh.shard_count(mesh),
+                            nbytes=nbytes)
+            nb_new, delta = codec_mesh.shard_vmap(kernel, mesh,
+                                                  n_out=2)(pw, old, lz, ebp)
+        nb_new = nb_new.reshape(B + padb, -1)[:B, :n]
+        delta = delta.reshape(B + padb, -1)[:B, :n]
+        return nb_new, delta
+
+
+def decode_fused_sharded(plane_words, nb_old, n: int, *, mesh, eb,
+                         low_zero=0, interpret: bool | None = None):
+    """Sharded twin: ``decode_fused_batch`` with the stack split over the
+    1-D codec ``mesh`` (thin alias)."""
+    return decode_fused_batch(plane_words, nb_old, n, eb=eb,
+                              low_zero=low_zero, interpret=interpret,
+                              mesh=mesh)

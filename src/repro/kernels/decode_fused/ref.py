@@ -1,0 +1,27 @@
+"""Numpy oracle for the fused progressive-decode megakernel.
+
+The unfused host pipeline, verbatim: sequential MSB-down plane unpack
+(``bitplane_pack.ref``), negabinary decode of both words on the host, int
+subtraction, ``* 2 * eb`` in the host's association.  The fused kernel
+must match this bit-for-bit — the parity suite pins it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..bitplane_pack.ref import NEG_M
+
+
+def _bins(nb: np.ndarray) -> np.ndarray:
+    """Negabinary word -> int64 bin (the host ``from_negabinary``)."""
+    u = (np.asarray(nb, np.uint32) ^ NEG_M) - NEG_M
+    return u.view(np.int32).astype(np.int64)
+
+
+def decode_fused_ref(nb_new: np.ndarray, nb_old: np.ndarray,
+                     eb: float) -> np.ndarray:
+    """Reference delta for already-unpacked words: the exact host-side
+    arithmetic of the unfused path (int64 bin difference, f64 cast, then
+    ``* 2.0 * eb`` left-to-right)."""
+    dq = _bins(nb_new) - _bins(nb_old)
+    return dq.astype(np.float64) * 2.0 * eb

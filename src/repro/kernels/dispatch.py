@@ -40,18 +40,27 @@ _elements: Counter = Counter()
 #: cumulative per-device launches (launches weighted by mesh size; equals
 #: _counts for unsharded calls)
 _device_counts: Counter = Counter()
+#: cumulative bytes moved per kernel name (each launch's input + output
+#: array bytes, as accounted by its wrapper) — the numerator of the
+#: roofline report's achieved-bytes/s (``benchmarks/roofline_report.py``)
+_bytes: Counter = Counter()
 
 
-def record(name: str, batch: int = 1, devices: int = 1) -> None:
+def record(name: str, batch: int = 1, devices: int = 1,
+           nbytes: int = 0) -> None:
     """Count one kernel launch covering ``batch`` chunk-sized problems.
 
     ``devices`` is the mesh fan-out of the launch: a ``shard_map``-ed call
     is one *logical* dispatch that runs on ``devices`` devices at once
-    (1 = unsharded, the default).
+    (1 = unsharded, the default).  ``nbytes`` is the launch's memory
+    traffic (input + output array bytes, pad included — what the launch
+    actually moves), accumulated for roofline accounting.
     """
     _counts[name] += 1
     _elements[name] += batch
     _device_counts[name] += devices
+    if nbytes:
+        _bytes[name] += nbytes
 
 
 def counts() -> Dict[str, int]:
@@ -73,10 +82,16 @@ def total() -> int:
     return sum(_counts.values())
 
 
+def bytes_counts() -> Dict[str, int]:
+    """Bytes moved per kernel since start/reset (copy)."""
+    return dict(_bytes)
+
+
 def reset() -> None:
     _counts.clear()
     _elements.clear()
     _device_counts.clear()
+    _bytes.clear()
 
 
 @contextmanager
@@ -95,6 +110,22 @@ def measure() -> Iterator[Dict[str, int]]:
         yield out
     finally:
         out.update((_counts - before))
+
+
+@contextmanager
+def measure_bytes() -> Iterator[Dict[str, int]]:
+    """Like :func:`measure`, but collecting bytes moved per kernel.
+
+    The yielded dict maps kernel name to the total input + output array
+    bytes its launches moved inside the block — the numerator of
+    achieved bytes/s in the roofline report.
+    """
+    before = Counter(_bytes)
+    out: Dict[str, int] = {}
+    try:
+        yield out
+    finally:
+        out.update((_bytes - before))
 
 
 @contextmanager

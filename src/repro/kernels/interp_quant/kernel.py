@@ -112,6 +112,20 @@ def _kernel(x_ref, xh_ref, q_ref, pred_ref, *, s: int, eb: float,
     pred_ref[...] = pred.astype(x.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("s", "eb", "interp"))
+def interp_quant_xla(x: jax.Array, xhat: jax.Array, *, s: int, eb: float,
+                     interp: str = "cubic"):
+    """Jitted XLA twin of :func:`interp_quant_pallas`: the shared
+    ``_predict`` core + the same divide-based quantize, compiled on any
+    backend (the ``IPCOMP_KERNEL_MODE=xla`` path)."""
+    R, C = x.shape
+    T = len(range(s, C, 2 * s))
+    pred = _predict(xhat, s=s, interp=interp, C=C, T=T)
+    tgt = x[:, s:s + 2 * s * T:2 * s]
+    q = jnp.rint((tgt - pred) / (2.0 * eb)).astype(jnp.int32)
+    return q, pred.astype(x.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("s", "eb", "interp", "interpret"))
 def interp_quant_pallas(x: jax.Array, xhat: jax.Array, *, s: int, eb: float,
                         interp: str = "cubic", interpret: bool = True):

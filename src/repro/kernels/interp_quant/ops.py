@@ -5,8 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import dispatch
-from .kernel import ROWS_B, interp_quant_pallas
+from .. import dispatch, mode
+from .kernel import ROWS_B, interp_quant_pallas, interp_quant_xla
 
 
 def _on_tpu() -> bool:
@@ -31,9 +31,14 @@ def interp_quant(x, xhat, *, s: int, eb: float, interp: str = "cubic",
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
         xhat = jnp.pad(xhat, ((0, pad), (0, 0)))
-    dispatch.record("interp_quant")
-    q, pred = interp_quant_pallas(x, xhat, s=s, eb=eb, interp=interp,
-                                  interpret=interpret)
+    dispatch.record("interp_quant",
+                    nbytes=(2 * x.size + 2 * R * (x.shape[1] // (2 * s))) *
+                    x.dtype.itemsize)
+    if mode.use_xla():
+        q, pred = interp_quant_xla(x, xhat, s=s, eb=eb, interp=interp)
+    else:
+        q, pred = interp_quant_pallas(x, xhat, s=s, eb=eb, interp=interp,
+                                      interpret=interpret)
     return q[:R], pred[:R]
 
 
@@ -68,16 +73,22 @@ def interp_quant_batch(x, xhat, *, s: int, eb: float, interp: str = "cubic",
         x = jnp.pad(x, ((0, padb), (0, pad), (0, 0)))
         xhat = jnp.pad(xhat, ((0, padb), (0, pad), (0, 0)))
 
-    def kernel(a, b):
-        return interp_quant_pallas(a, b, s=s, eb=eb, interp=interp,
-                                   interpret=interpret)
+    if mode.use_xla():
+        def kernel(a, b):
+            return interp_quant_xla(a, b, s=s, eb=eb, interp=interp)
+    else:
+        def kernel(a, b):
+            return interp_quant_pallas(a, b, s=s, eb=eb, interp=interp,
+                                       interpret=interpret)
 
+    nbytes = (2 * x.size + 2 * x.shape[0] * x.shape[1] *
+              (x.shape[2] // (2 * s))) * x.dtype.itemsize
     if mesh is None:
-        dispatch.record("interp_quant", batch=B)
+        dispatch.record("interp_quant", batch=B, nbytes=nbytes)
         q, pred = jax.vmap(kernel)(x, xhat)
     else:
         dispatch.record("interp_quant", batch=B,
-                        devices=codec_mesh.shard_count(mesh))
+                        devices=codec_mesh.shard_count(mesh), nbytes=nbytes)
         q, pred = codec_mesh.shard_vmap(kernel, mesh, n_out=2)(x, xhat)
     return q[:B, :R], pred[:B, :R]
 

@@ -1,0 +1,42 @@
+"""Kernel execution mode: Pallas launches vs jitted XLA twins.
+
+Pallas on CPU only supports interpret mode (jax refuses ``interpret=False``
+outside TPU), so CI cannot literally compile the kernels on its CPU
+runners.  The ``compiled`` CI lane instead sets ``IPCOMP_KERNEL_MODE=xla``:
+every public kernel wrapper then routes to a ``jax.jit``-ed pure-jnp twin
+of the kernel body — genuinely compiled XLA CPU execution of the same
+arithmetic (the twins share the kernel-body core functions, so bit parity
+cannot drift), with dispatch accounting still recorded at the wrapper
+layer (one wrapper call = one compiled dispatch, same invariant as one
+``pallas_call``).
+
+Modes:
+
+  * ``pallas`` (default) — ``pl.pallas_call``; interpret mode on CPU/GPU,
+    Mosaic-compiled on TPU;
+  * ``xla``             — the jitted pure-jnp core, any backend.
+
+The knob is read per wrapper call (cheap: one env lookup), so tests can
+flip it with ``monkeypatch.setenv`` without reimporting anything.
+"""
+from __future__ import annotations
+
+import os
+
+PALLAS = "pallas"
+XLA = "xla"
+
+ENV = "IPCOMP_KERNEL_MODE"
+
+
+def kernel_mode() -> str:
+    """Resolve the active kernel execution mode from the environment."""
+    m = os.environ.get(ENV, PALLAS).strip().lower() or PALLAS
+    if m not in (PALLAS, XLA):
+        raise ValueError(f"{ENV} must be '{PALLAS}' or '{XLA}', got {m!r}")
+    return m
+
+
+def use_xla() -> bool:
+    """True when wrappers should dispatch the jitted XLA twin."""
+    return kernel_mode() == XLA

@@ -1,0 +1,57 @@
+"""Lossless-backend knobs: the IPCOMP_ZLIB_LEVEL env and the Raw fast path.
+
+Satellite contract: the encode-side zlib level is configurable per process
+(default 6, validated 0..9), archives stay decodable at every setting, and
+``bitplane.inflate`` short-circuits already-raw payloads without a zlib
+round-trip.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro.core import bitplane, compress, decompress, metrics
+
+
+def test_zlib_level_default_and_env(monkeypatch):
+    monkeypatch.delenv(bitplane.ZLEVEL_ENV, raising=False)
+    assert bitplane.zlib_level() == bitplane.ZLEVEL == 6
+    monkeypatch.setenv(bitplane.ZLEVEL_ENV, "9")
+    assert bitplane.zlib_level() == 9
+    monkeypatch.setenv(bitplane.ZLEVEL_ENV, "0")
+    assert bitplane.zlib_level() == 0
+
+
+@pytest.mark.parametrize("bad", ["-1", "10", "fast"])
+def test_zlib_level_rejects_bad_values(monkeypatch, bad):
+    monkeypatch.setenv(bitplane.ZLEVEL_ENV, bad)
+    with pytest.raises(ValueError):
+        bitplane.zlib_level()
+
+
+def test_zlib_level_changes_bytes_not_bits(monkeypatch):
+    """Levels 1 and 9 produce different archive bytes but identical
+    reconstructions — the knob is a size/speed trade, never a fidelity one."""
+    x = smooth_field((40, 37), 7)
+    outs, sizes = [], []
+    for lvl in ("1", "9"):
+        monkeypatch.setenv(bitplane.ZLEVEL_ENV, lvl)
+        buf = compress(x, 1e-6)
+        sizes.append(len(buf))
+        outs.append(decompress(buf))
+    monkeypatch.delenv(bitplane.ZLEVEL_ENV)
+    assert sizes[0] != sizes[1]
+    assert np.array_equal(outs[0], outs[1])
+    assert metrics.linf(x, outs[0]) <= 1e-6
+
+
+def test_inflate_raw_fast_path():
+    payload = bytes(np.arange(64, dtype=np.uint8))
+    # Raw passes through untouched — payload is NOT a valid zlib stream
+    assert bitplane.inflate(bitplane.Raw(payload)) == payload
+    # falsy conventions
+    assert bitplane.inflate(b"") == b""
+    assert bitplane.inflate(None) == b""
+    # plain bytes are a stored zlib blob
+    assert bitplane.inflate(zlib.compress(payload, 1)) == payload

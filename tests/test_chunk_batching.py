@@ -43,16 +43,23 @@ def test_shape_groups_caps_batch_size():
     assert shape_groups([3] * 40, max_group=None) == [list(range(40))]
 
 
-def test_decode_level_batch_rejects_mixed_prefixes():
-    """low_zero is a static kernel argument: mixed loaded prefixes in one
-    batch would decode the shorter streams wrong, so they must raise."""
+def test_decode_level_batch_mixed_prefixes_one_dispatch():
+    """low_zero is a RUNTIME kernel operand now: streams with different
+    loaded prefixes share ONE batched dispatch and each decodes exactly
+    like its scalar call."""
     from repro.core import jax_backend
     q = np.arange(-50, 50, dtype=np.int64)
     blobs, nbits = jax_backend.encode_level(q)
     full = list(blobs)
     shorter = [blobs[i] if i < nbits - 1 else None for i in range(nbits)]
-    with pytest.raises(ValueError, match="equal loaded-plane prefixes"):
-        jax_backend.decode_level_batch([full, shorter], nbits, q.size)
+    shortest = [blobs[i] if i < 2 else None for i in range(nbits)]
+    prefixes = [full, shorter, shortest]
+    with dispatch.measure() as d:
+        out = jax_backend.decode_level_batch(prefixes, nbits, q.size)
+    assert d["bitplane_unpack"] == 1
+    for got, bl in zip(out, prefixes):
+        assert np.array_equal(got, jax_backend.decode_level(bl, nbits,
+                                                            q.size))
 
 
 def test_backend_batch_slots():
@@ -160,8 +167,10 @@ def test_batched_retrieve_fewer_dispatches():
     n_chunks = len(r.meta.chunks)
     n_levels = r.chunk_reader(0).meta.L
     assert bat["interp_recon"] < loop["interp_recon"]
-    assert bat.get("bitplane_unpack", 0) <= loop["bitplane_unpack"]
-    assert bat.get("bitplane_unpack", 0) < n_chunks * n_levels
+    # the jax decode path runs the fused megakernel: plane unpack +
+    # dequantize + delta are one launch per (group, level)
+    assert bat.get("decode_fused", 0) <= loop["decode_fused"]
+    assert bat.get("decode_fused", 0) < n_chunks * n_levels
     assert sum(bat.values()) < sum(loop.values())
 
 

@@ -294,13 +294,14 @@ def test_sharded_dispatch_counts_per_device():
                  shard=mesh)
     assert d_sh == d_bat
     # the reconstruction sweeps always run on the full stack -> exact
-    # mesh fan-out; plane decodes group by (nbits, prefix) and singleton
-    # groups stay scalar IN BOTH MODES (that is why the logical counts
-    # match), so their fan-out is bounded, not exact
+    # mesh fan-out; fused plane decodes group by (nbits,) — prefixes are
+    # runtime operands — and singleton groups stay unsharded IN BOTH MODES
+    # (that is why the logical counts match), so their fan-out is bounded,
+    # not exact
     assert dd_sh["interp_recon"] == d_sh["interp_recon"] * N_DEV
-    assert dd_sh["bitplane_unpack"] <= d_sh["bitplane_unpack"] * N_DEV
+    assert dd_sh["decode_fused"] <= d_sh["decode_fused"] * N_DEV
     if N_DEV > 1:  # at least one multi-chunk decode group got sharded
-        assert dd_sh["bitplane_unpack"] > d_sh["bitplane_unpack"]
+        assert dd_sh["decode_fused"] > d_sh["decode_fused"]
 
 
 @pytest.mark.slow
