@@ -23,6 +23,13 @@ private uncached session at the same fidelity (refine chains compared
 against a private session walking the same ladder).  Results go to
 ``BENCH_serve.json`` (a CI artifact).
 
+A fourth section benchmarks the storage layout itself: the same refine
+ladder over IPC2 (chunk-major) and IPC3 (plane-major) archives of one
+array, with every byte-range request logged through a
+:class:`~repro.core.bytesource.CountingSource`.  Claim checks pin the
+v3 layout win — monotone, single-run contiguous reads, strictly fewer
+coalesced ranges and less seek distance than v2.
+
 CPU caveat (same as ``backend_speed``): off-TPU the jax backend runs
 Pallas in interpret mode, so wall-clock favors numpy and the dispatch /
 cache counters are the trendable metrics.
@@ -39,7 +46,8 @@ import time
 import numpy as np
 
 from .common import csv_row
-from repro import Codec, ExecPolicy, Fidelity
+from repro import Archive, Codec, ExecPolicy, Fidelity
+from repro.core.bytesource import CountingSource
 from repro.kernels import dispatch
 from repro.serving import PlaneCache, RetrievalServer
 
@@ -49,7 +57,8 @@ CACHE_BYTES = 32 << 20
 
 def _archives():
     """Three small archives spanning the container shapes the scheduler
-    handles: uneven chunk grid, even chunk grid, and a v1 single slab."""
+    handles: a v2 uneven chunk grid, a v3 plane-major even grid, and a
+    v1 single slab."""
     rng = np.random.default_rng(11)
     fields = {
         "turb": np.cumsum(rng.standard_normal((96, 96)), axis=0) / 10.0,
@@ -60,7 +69,7 @@ def _archives():
     }
     codecs = {
         "turb": Codec(eb=1e-5, chunk_elems=2048),
-        "wave": Codec(eb=1e-5, chunk_elems=1024),
+        "wave": Codec(eb=1e-5, chunk_elems=1024, version=3),
         "blob": Codec(eb=1e-5),              # v1: single slab
     }
     return {name: codecs[name].compress(x) for name, x in fields.items()}
@@ -147,6 +156,57 @@ def _run_mode(mode, archives, workload, policy):
     return record, [r.result for r in reqs]
 
 
+LAYOUT_LADDER = [1e-2, 1e-3, 1e-4, 1e-5]
+
+
+def _layout_bench():
+    """IPC3 plane-major layout vs IPC2 chunk-major, as the storage tier
+    sees it: the same refine ladder over the same array, with every
+    byte-range request logged by a :class:`CountingSource`.  Recorded per
+    version: request count, coalesced run count, and total backward /
+    gap seek distance over the data section.  The claim is the format's
+    reason to exist — the v3 ladder reads strictly fewer contiguous
+    ranges (one run, monotone) than v2's per-chunk scatter."""
+    rng = np.random.default_rng(23)
+    x = np.cumsum(rng.standard_normal((96, 96)), axis=0) / 10.0
+    fids = [Fidelity.error_bound(E) for E in LAYOUT_LADDER]
+    record, outs = {}, {}
+    for name, codec in (
+            ("v2", Codec(eb=1e-5, chunk_elems=2048)),
+            ("v3", Codec(eb=1e-5, chunk_elems=2048, version=3))):
+        arc = codec.compress(x)
+        cs = CountingSource(arc.tobytes())
+        session = Archive.from_source(cs).open()
+        for f in fids:
+            out = session.read(f)
+        outs[name] = out
+        header_end = arc._meta.header_end
+        data = [r for r in cs.requests if r[0] >= header_end]
+        runs = CountingSource(b"")
+        runs.requests = data
+        record[name] = dict(
+            archive_bytes=arc.nbytes, session_bytes_read=session.bytes_read,
+            data_requests=len(data), coalesced_runs=len(runs.coalesced()),
+            monotone=runs.monotone(), seek_distance=runs.seek_distance)
+    checks = [
+        ("serve_v3_monotone_contiguous", "ladder", "layout",
+         record["v3"]["monotone"] and record["v3"]["coalesced_runs"] == 1),
+        ("serve_v3_fewer_ranges", "ladder", "layout",
+         record["v3"]["coalesced_runs"] < record["v2"]["coalesced_runs"]
+         and record["v3"]["seek_distance"] < record["v2"]["seek_distance"]),
+        ("serve_v3_ladder_bits_bounded", "ladder", "layout",
+         float(np.abs(outs["v3"] - x).max()) <= LAYOUT_LADDER[-1]
+         and float(np.abs(outs["v2"] - x).max()) <= LAYOUT_LADDER[-1]),
+    ]
+    row = csv_row(
+        "serve/layout/v3_vs_v2", 0.0,
+        f"v2_runs={record['v2']['coalesced_runs']};"
+        f"v3_runs={record['v3']['coalesced_runs']};"
+        f"v2_seek={record['v2']['seek_distance']};"
+        f"v3_seek={record['v3']['seek_distance']}")
+    return record, checks, row
+
+
 def run(scale=None, n_requests: int = 18, backend: str = "jax",
         json_out: str = JSON_OUT):
     if n_requests < 16:
@@ -190,6 +250,12 @@ def run(scale=None, n_requests: int = 18, backend: str = "jax",
     checks.append(("serve_cache_byte_accounting", f"{n_requests}req",
                    "serve", cstats["bytes_cached"] > 0
                    and cstats["hit_bytes"] > 0))
+    # (d) IPC3 plane-major layout: strictly fewer, monotone, contiguous
+    # byte ranges than v2 for the same refine ladder
+    layout_record, layout_checks, layout_row = _layout_bench()
+    checks.extend(layout_checks)
+    rows.append(layout_row)
+    print(layout_row)
 
     if json_out:
         with open(json_out, "w") as f:
@@ -197,7 +263,7 @@ def run(scale=None, n_requests: int = 18, backend: str = "jax",
                 requests=n_requests, backend=backend,
                 cache_max_bytes=CACHE_BYTES,
                 workload=[(a, repr(f), c) for a, f, c in workload],
-                records=records,
+                records=records, layout=layout_record,
                 checks=[dict(name=c[0], case=c[1], op=c[2], ok=bool(c[3]))
                         for c in checks]), f, indent=2)
         print(f"wrote {json_out} ({len(records)} mode records)")

@@ -45,6 +45,7 @@ from typing import Iterable, Iterator, Optional, Tuple, Union
 import numpy as np
 
 from .core import container, interpolation, loader
+from .core.bytesource import ByteSource, FileSource, as_source
 from .core.container import CorruptArchiveError
 from .core.pipeline import decode, encode
 from .core.pipeline.spec import (DEFAULT_POLICY, ExecContext, ExecPolicy,
@@ -81,13 +82,20 @@ class Codec:
     ``interp``
         Interpolation predictor: ``"cubic"`` (default) or ``"linear"``.
     ``chunk_elems``
-        None = single v1 archive; N = chunked v2 container of independent
+        None = single v1 archive; N = chunked container of independent
         ~N-element slabs (the unit of batched and sharded execution).
+    ``version``
+        Container framing: 1 (plain), 2 (chunk-major), 3 (plane-major —
+        the streaming/range-read layout, ``docs/format.md`` §3).  None
+        picks the historical default from ``chunk_elems`` (1 unchunked /
+        2 chunked).  The framing regroups identical per-chunk streams, so
+        v2 and v3 archives of one array reconstruct bit-identically.
     """
     eb: float
     interp: str = interpolation.CUBIC
     relative: bool = False
     chunk_elems: Optional[int] = None
+    version: Optional[int] = None
 
     def __post_init__(self):
         if not self.eb > 0:
@@ -99,6 +107,16 @@ class Codec:
         if self.chunk_elems is not None and self.chunk_elems <= 0:
             raise ValueError("chunk_elems must be positive, got "
                              f"{self.chunk_elems}")
+        if self.version is not None:
+            if self.version not in (1, 2, 3):
+                raise ValueError(f"unknown container version "
+                                 f"{self.version!r}; expected 1, 2 or 3")
+            if self.version == 1 and self.chunk_elems is not None:
+                raise ValueError("version=1 cannot hold chunks; drop "
+                                 "chunk_elems or use version 2 or 3")
+            if self.version == 2 and self.chunk_elems is None:
+                raise ValueError("version=2 is the chunked container; "
+                                 "pass chunk_elems (or use version=1)")
 
     def compress(self, x: np.ndarray,
                  policy: Optional[ExecPolicy] = None) -> "Archive":
@@ -109,17 +127,26 @@ class Codec:
         """
         return Archive(encode.encode_array(
             x, self.eb, interp=self.interp, relative=self.relative,
-            chunk_elems=self.chunk_elems, policy=policy))
+            chunk_elems=self.chunk_elems, policy=policy,
+            version=self.version))
 
 
 class Archive:
-    """An IPComp archive: immutable bytes plus the parsed header.
+    """An IPComp archive: an immutable byte source plus the parsed header.
 
-    Wraps either container version (v1 plain / v2 chunked) behind one
-    type; construction validates the buffer (:class:`CorruptArchiveError`
-    on unknown magic, truncation, or undecodable headers), so an Archive
-    in hand is known-well-formed.  Round-trips losslessly through
-    :meth:`tobytes` / :meth:`frombytes` and :meth:`save` / :meth:`load`.
+    Wraps any container version (v1 plain / v2 chunk-major / v3
+    plane-major) behind one type; construction validates the buffer
+    (:class:`CorruptArchiveError` on unknown magic, truncation, or
+    undecodable headers), so an Archive in hand is known-well-formed.
+    Round-trips losslessly through :meth:`tobytes` / :meth:`frombytes`
+    and :meth:`save` / :meth:`load`.
+
+    The backing storage is a pluggable
+    :class:`~repro.core.bytesource.ByteSource`: in-memory bytes (the
+    default), a file opened by :meth:`load` (mmap-backed — header and
+    planned blob ranges are the only bytes ever touched, never a full
+    read), or any caller-provided source via :meth:`from_source` (e.g. a
+    ``CountingSource`` for range accounting).
 
     Reading is a *session*: :meth:`open` returns a
     :class:`ProgressiveReader` owning its own retrieval state and byte
@@ -127,9 +154,10 @@ class Archive:
     independently.
     """
 
-    def __init__(self, data: Union[bytes, bytearray, memoryview]):
-        self._data = bytes(data)
-        self._meta = container.open_reader(self._data).meta  # validates
+    def __init__(self, data: Union[bytes, bytearray, memoryview,
+                                   ByteSource]):
+        self._src = as_source(data)
+        self._meta = container.open_reader(self._src).meta  # validates
 
     # ---- construction / serialization
 
@@ -139,21 +167,40 @@ class Archive:
         """Wrap serialized archive bytes (the :meth:`tobytes` inverse)."""
         return cls(data)
 
+    @classmethod
+    def from_source(cls, src: ByteSource) -> "Archive":
+        """Open an archive over an explicit byte source — a
+        ``FileSource``, a ``CountingSource`` wrapper, or any custom
+        range-read transport satisfying the ``ByteSource`` contract."""
+        return cls(src)
+
     def tobytes(self) -> bytes:
-        """The raw archive bytes (v1 ``IPC1`` or v2 ``IPC2`` container)."""
-        return self._data
+        """The raw archive bytes, materialized (``IPC1``/``IPC2``/``IPC3``
+        container).  On a file-backed archive this reads the whole file —
+        use :meth:`save` to copy without keeping it in memory."""
+        return bytes(self._src.read(0, self._src.size))
+
+    #: streaming block size for save/compare — large enough to amortize
+    #: syscalls, small enough to never matter for memory
+    _BLOCK = 1 << 20
 
     @classmethod
     def load(cls, path: Union[str, "os.PathLike"]) -> "Archive":
-        """Read an archive file written by :meth:`save` (or any producer
-        of the container format)."""
-        with open(path, "rb") as f:
-            return cls(f.read())
+        """Open an archive file written by :meth:`save` (or any producer
+        of the container format).  Accepts ``str`` or ``pathlib.Path``.
+        The file is opened through a mmap-backed ``FileSource``, NOT read
+        into memory: a session over a loaded archive touches only the
+        header and the byte ranges its fidelity plans actually need."""
+        return cls(FileSource(path))
 
     def save(self, path: Union[str, "os.PathLike"]) -> None:
-        """Write the archive bytes to ``path``."""
-        with open(path, "wb") as f:
-            f.write(self._data)
+        """Write the archive bytes to ``path`` (``str`` or
+        ``pathlib.Path``), streaming in blocks — a file-backed archive is
+        copied without ever materializing in memory."""
+        with open(os.fspath(path), "wb") as f:
+            for off in range(0, self._src.size, self._BLOCK):
+                f.write(self._src.read(
+                    off, min(self._BLOCK, self._src.size - off)))
 
     # ---- parsed-header views
 
@@ -178,12 +225,21 @@ class Archive:
     @property
     def nbytes(self) -> int:
         """Total serialized size (the compressed-ratio denominator)."""
-        return len(self._data)
+        return self._src.size
+
+    @property
+    def version(self) -> int:
+        """Container version of the underlying bytes (1, 2 or 3)."""
+        if isinstance(self._meta, container.V3Meta):
+            return 3
+        if isinstance(self._meta, container.ChunkedMeta):
+            return 2
+        return 1
 
     @property
     def n_chunks(self) -> int:
         """Independent slabs: 1 for a v1 archive, the chunk-grid size for
-        v2."""
+        v2/v3."""
         return len(getattr(self._meta, "chunks", ())) or 1
 
     @property
@@ -191,25 +247,44 @@ class Archive:
         return hasattr(self._meta, "chunks")
 
     def __len__(self) -> int:
-        return len(self._data)
+        return self._src.size
 
     def __eq__(self, other) -> bool:
-        return isinstance(other, Archive) and self._data == other._data
+        """Content equality, compared block-wise — file-backed archives
+        compare without materializing (identity and size short-circuit
+        first).  Equality is what makes an Archive a sound plane-cache
+        scope: equal keys imply equal bytes."""
+        if not isinstance(other, Archive):
+            return NotImplemented
+        if self is other or self._src is other._src:
+            return True
+        if self._src.size != other._src.size:
+            return False
+        for off in range(0, self._src.size, self._BLOCK):
+            n = min(self._BLOCK, self._src.size - off)
+            if bytes(self._src.read(off, n)) != \
+                    bytes(other._src.read(off, n)):
+                return False
+        return True
 
     def __hash__(self) -> int:
-        return hash(self._data)
+        # size + header prefix: cheap, stable, and consistent with __eq__
+        # (equal bytes always collide onto the same hash)
+        return hash((self._src.size, bytes(self._src.read(
+            0, min(4096, self._src.size)))))
 
     def __repr__(self) -> str:
-        kind = f"v2[{self.n_chunks} chunks]" if self.chunked else "v1"
+        kind = (f"v{self.version}[{self.n_chunks} chunks]" if self.chunked
+                else "v1")
         return (f"Archive({kind}, shape={self.shape}, dtype={self.dtype}, "
                 f"eb={self.eb:g}, {self.nbytes} bytes)")
 
     # ---- reading
 
     def new_reader(self, cache_scope=None):
-        """A fresh low-level container reader over this archive's bytes
-        (``ArchiveReader`` / ``ChunkedArchiveReader``) with independent
-        fetched-range accounting.
+        """A fresh low-level container reader over this archive's byte
+        source (``ArchiveReader`` / ``ChunkedArchiveReader`` /
+        ``V3ArchiveReader``) with independent fetched-range accounting.
 
         ``cache_scope`` opts the reader into shared plane-cache keying
         (see ``pipeline.state``); equal scopes MUST mean identical
@@ -217,7 +292,7 @@ class Archive:
         opened with a ``plane_cache`` use the Archive itself (Archives
         compare by content, so equal keys imply equal bytes).
         """
-        reader = container.open_reader(self._data, meta=self._meta)
+        reader = container.open_reader(self._src, meta=self._meta)
         reader.cache_scope = cache_scope
         return reader
 

@@ -1,0 +1,239 @@
+"""Pluggable byte-range I/O under the container readers.
+
+The container layer (``container.py``) historically assumed the whole
+archive lived in one in-memory buffer — every ``reader.read(offset,
+size, tag)`` was a slice.  That assumption is wrong for the access
+pattern the format exists to serve: progressive retrieval over
+object-store / HTTP-range / parallel-FS storage reads *byte ranges* of a
+large remote object, and the plane-major v3 layout (``docs/format.md``
+§3) is designed so a fidelity ladder reads monotone contiguous ranges of
+exactly such a source.
+
+:class:`ByteSource` is that seam made explicit: the minimal random-access
+contract (``read(offset, size)`` + ``size``) the readers are rebased
+onto.  Three implementations cover the repo's needs:
+
+* :class:`BufferSource` — zero-copy view over an in-memory buffer
+  (bytes / bytearray / memoryview); the historical behaviour.
+* :class:`FileSource` — mmap-backed file reads: opening an archive from
+  disk touches only the ranges actually requested (header first, then
+  planned blob ranges), never the whole file.
+* :class:`CountingSource` — a transparent wrapper recording every range
+  request in order, with coalesced-range and seek-distance accounting.
+  This is the test double behind the v3 monotone-contiguous-ranges
+  assertions and the ``benchmarks/serve_bench.py`` layout comparison:
+  it measures *how* an archive was read, not just how much.
+
+Any source can be windowed (:meth:`ByteSource.window`): a
+:class:`_Window` forwards reads to the parent at absolute offsets, so a
+chunk sub-reader of a v2 container still surfaces its requests at real
+container positions — which is what makes the range accounting
+comparable across container versions.
+"""
+from __future__ import annotations
+
+import io
+import mmap
+import os
+from typing import List, Optional, Tuple, Union
+
+
+class ByteSource:
+    """Minimal random-access byte contract the container readers consume.
+
+    Subclasses implement :meth:`read` and :attr:`size`.  ``read`` may
+    return ``bytes`` or a ``memoryview`` (consumers — ``np.frombuffer``,
+    ``zlib.decompress`` — accept both); reads are never cached here, the
+    readers own all fetch accounting.
+    """
+
+    def read(self, offset: int, size: int):
+        """The ``size`` bytes at ``offset``.  Short reads are a contract
+        violation — callers request only ranges the header declared and
+        the parser bounds-checked."""
+        raise NotImplementedError
+
+    @property
+    def size(self) -> int:
+        """Total byte length of the underlying archive."""
+        raise NotImplementedError
+
+    def window(self, offset: int, size: int) -> "ByteSource":
+        """A view of ``[offset, offset + size)`` whose position 0 is the
+        parent's ``offset``.  Reads forward to the parent at absolute
+        positions, so range accounting on the parent sees real container
+        offsets."""
+        return _Window(self, offset, size)
+
+    def close(self) -> None:
+        """Release any held OS resources (no-op for memory sources)."""
+
+
+def as_source(obj) -> ByteSource:
+    """Coerce ``obj`` to a :class:`ByteSource`.
+
+    Already-a-source passes through; bytes-like objects wrap in a
+    zero-copy :class:`BufferSource`.  This is the single coercion point
+    every reader/parser entry uses, so the whole container layer accepts
+    either currency.
+    """
+    if isinstance(obj, ByteSource):
+        return obj
+    return BufferSource(obj)
+
+
+class BufferSource(ByteSource):
+    """In-memory source: zero-copy ``memoryview`` slices of one buffer."""
+
+    def __init__(self, buf: Union[bytes, bytearray, memoryview]):
+        self._view = memoryview(buf)
+
+    def read(self, offset: int, size: int):
+        return self._view[offset: offset + size]
+
+    @property
+    def size(self) -> int:
+        return self._view.nbytes
+
+    def tobytes(self) -> bytes:
+        return bytes(self._view)
+
+
+class FileSource(ByteSource):
+    """mmap-backed file source: page cache does the buffering, the
+    process never materializes the whole archive.
+
+    ``Archive.load`` opens file archives through this, so a coarse read
+    of a large on-disk archive touches only the header and the planned
+    blob ranges.  The mapping is read-only and shared; :meth:`close`
+    releases it (reads after close raise).
+    """
+
+    def __init__(self, path: Union[str, "os.PathLike"]):
+        self.path = os.fspath(path)
+        self._f = open(self.path, "rb")
+        self._size = os.fstat(self._f.fileno()).st_size
+        # a zero-length file cannot be mapped; parsers reject it anyway
+        # (every archive needs >= 8 framing bytes), so serve empty reads
+        self._mm = (mmap.mmap(self._f.fileno(), 0, access=mmap.ACCESS_READ)
+                    if self._size else None)
+
+    def read(self, offset: int, size: int):
+        if self._mm is None:
+            return b""
+        return memoryview(self._mm)[offset: offset + size]
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    def close(self) -> None:
+        if self._mm is not None:
+            self._mm.close()
+            self._mm = None
+        if not self._f.closed:
+            self._f.close()
+
+    def __repr__(self) -> str:
+        return f"FileSource({self.path!r}, {self._size} bytes)"
+
+
+class CountingSource(ByteSource):
+    """Transparent wrapper recording every range request, in order.
+
+    The range-accounting test double of the I/O layer: wraps any source
+    and logs ``(offset, size)`` per :meth:`read`, exposing the derived
+    metrics the v3 layout claims are stated in
+    (``docs/format.md`` §3.5):
+
+    * :attr:`requests` — the raw request log, in call order;
+    * :meth:`coalesced` — the log merged greedily *in order*: a request
+      starting exactly at the previous run's end extends it, anything
+      else opens a new run.  A reader whose access pattern is truly
+      streaming produces ONE coalesced run per contiguous sweep.
+    * :attr:`seek_distance` — summed ``|start - previous_end|`` over
+      consecutive requests: 0 for a perfectly sequential reader, large
+      for a scatter-read pattern (the v2-vs-v3 benchmark metric).
+    * :meth:`monotone` — True when request offsets never move backward.
+
+    Zero-byte requests (empty planes, empty escape blobs) are not
+    recorded: they hit no storage and would distort the range counts.
+    """
+
+    def __init__(self, inner):
+        self.inner = as_source(inner)
+        self.requests: List[Tuple[int, int]] = []
+
+    def read(self, offset: int, size: int):
+        if size:
+            self.requests.append((int(offset), int(size)))
+        return self.inner.read(offset, size)
+
+    @property
+    def size(self) -> int:
+        return self.inner.size
+
+    def close(self) -> None:
+        self.inner.close()
+
+    # ---- derived metrics
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.requests)
+
+    @property
+    def bytes_requested(self) -> int:
+        return sum(s for _, s in self.requests)
+
+    def coalesced(self) -> List[Tuple[int, int]]:
+        """In-order greedy coalescing: adjacent-in-time AND
+        adjacent-in-space requests merge into one run."""
+        runs: List[List[int]] = []
+        for off, size in self.requests:
+            if runs and off == runs[-1][0] + runs[-1][1]:
+                runs[-1][1] += size
+            else:
+                runs.append([off, size])
+        return [(o, s) for o, s in runs]
+
+    def monotone(self) -> bool:
+        """Did the request stream ever seek backward?"""
+        return all(b[0] >= a[0] + a[1] or b[0] >= a[0]
+                   for a, b in zip(self.requests, self.requests[1:])) and \
+            all(b[0] >= a[0] for a, b in zip(self.requests,
+                                             self.requests[1:]))
+
+    @property
+    def seek_distance(self) -> int:
+        """Summed absolute gap between consecutive requests (0 = pure
+        streaming)."""
+        return sum(abs(b[0] - (a[0] + a[1]))
+                   for a, b in zip(self.requests, self.requests[1:]))
+
+    def reset(self) -> None:
+        """Drop the log (metrics restart; the wrapped source is kept)."""
+        self.requests = []
+
+    def __repr__(self) -> str:
+        return (f"CountingSource({self.n_requests} requests, "
+                f"{len(self.coalesced())} coalesced ranges, "
+                f"seek_distance={self.seek_distance})")
+
+
+class _Window(ByteSource):
+    """A positioned view over a parent source (see
+    :meth:`ByteSource.window`); reads land on the parent at absolute
+    offsets so accounting wrappers see real container positions."""
+
+    def __init__(self, parent: ByteSource, base: int, size: int):
+        self._parent = parent
+        self._base = int(base)
+        self._size = int(size)
+
+    def read(self, offset: int, size: int):
+        return self._parent.read(self._base + offset, size)
+
+    @property
+    def size(self) -> int:
+        return self._size

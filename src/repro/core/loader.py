@@ -204,6 +204,123 @@ def plan_full(meta: ArchiveMeta, propagation: str = PAPER) -> LoadPlan:
     return _finish(meta, [lv.nbits for lv in meta.levels], errs, mode="full")
 
 
+# ------------------------------------------------ v3 ladder (plane-major)
+#
+# A v3 archive's layout IS its retrieval plan: the writer lays plane
+# segments in one global order and every fidelity resolves to a *prefix
+# length* ``t`` over that order.  The planners below are the two halves:
+# ``ladder_order`` (write time) picks the order, ``ladder_error_mode`` /
+# ``ladder_bitrate_mode`` (read time) walk it.  Unlike the per-chunk
+# knapsack above, the prefix cannot tailor plane counts per chunk — that
+# is the deliberate trade: a slightly less byte-optimal plan in exchange
+# for monotone contiguous range reads (docs/format.md §3).
+
+def ladder_order(chunk_metas: Sequence[ArchiveMeta],
+                 propagation: str = SAFE) -> List[tuple]:
+    """Greedy rate-distortion order of (level index, plane index) over the
+    whole chunk grid: at each step, take the plane segment with the best
+    summed error reduction per byte.
+
+    Within a level the candidate is always the next MSB-first plane (XOR
+    plane coding makes planes order-dependent), so the order interleaves
+    *levels*, never planes within a level.  Scores use the SAFE
+    propagation model by default — the write-time order must serve
+    whichever model retrieval later plans under, and SAFE is the
+    conservative one.  Zero-byte segments score infinite (free error
+    reduction) and drain first; ties break toward the coarser level
+    (lower level index = higher ``LevelMeta.level``), matching the
+    knapsack's tendency to fill coarse levels first.  Deterministic:
+    depends only on the chunk headers.
+    """
+    nlev = max(len(m.levels) for m in chunk_metas)
+    errs = [_level_cost_tables(m, propagation)[0] for m in chunk_metas]
+    nbits_max = [max((m.levels[li].nbits for m in chunk_metas
+                      if li < len(m.levels)), default=0)
+                 for li in range(nlev)]
+    next_k = [0] * nlev
+    order: List[tuple] = []
+    while True:
+        best = None
+        for li in range(nlev):
+            k = next_k[li]
+            if k >= nbits_max[li]:
+                continue
+            gain, size = 0.0, 0
+            for m, e in zip(chunk_metas, errs):
+                if li >= len(m.levels) or k >= m.levels[li].nbits:
+                    continue
+                nb = m.levels[li].nbits
+                gain += float(e[li][nb - k] - e[li][nb - k - 1])
+                size += m.levels[li].plane_sizes[k]
+            score = math.inf if size == 0 else gain / size
+            key = (score, -li)
+            if best is None or key > best[0]:
+                best = (key, li)
+        if best is None:
+            return order
+        li = best[1]
+        order.append((li, next_k[li]))
+        next_k[li] += 1
+
+
+def ladder_error_mode(meta, E: float, propagation: str = PAPER,
+                      t_min: int = 0) -> int:
+    """Shortest ladder prefix ``t`` with every chunk's guaranteed L_inf
+    bound <= ``E`` (requires ``E >= eb``, like :func:`plan_error_mode`).
+
+    ``meta`` is a :class:`~.container.V3Meta`.  Walks the write-time
+    segment order, applying each segment's exact per-chunk error delta
+    (from the header delta tables) until the worst chunk meets the bound.
+    ``t_min`` floors the result for refinement: a session that already
+    holds ``t_min`` segments never plans a shorter prefix (planes are
+    never dropped), so a looser follow-up target is a no-op.
+    """
+    if E < meta.eb:
+        raise ValueError(f"requested bound {E} < compression bound {meta.eb}")
+    errs = [_level_cost_tables(m, propagation)[0] for m in meta.chunk_metas]
+    cur = [m.eb + sum(float(errs[c][li][lv.nbits])
+                      for li, lv in enumerate(m.levels))
+           for c, m in enumerate(meta.chunk_metas)]
+    segs = meta.plane_segments
+    t = 0
+    while t < len(segs) and (t < t_min or max(cur) > E):
+        s = segs[t]
+        for c, m in enumerate(meta.chunk_metas):
+            if s.level >= len(m.levels):
+                continue
+            nb = m.levels[s.level].nbits
+            if s.plane >= nb:
+                continue
+            cur[c] += float(errs[c][s.level][nb - s.plane - 1]
+                            - errs[c][s.level][nb - s.plane])
+        t += 1
+    return t
+
+
+def ladder_bitrate_mode(meta, max_bytes: int, t_min: int = 0) -> int:
+    """Longest ladder prefix whose loaded bytes fit ``max_bytes``.
+
+    Byte accounting matches the v1/v2 planners: escapes count (they
+    always load — the plan floor), anchors do not.  ``meta.cum_bytes[t]``
+    is exactly that cost for prefix ``t``, so this is a table lookup.
+    ``t_min`` floors the result for refinement, like
+    :func:`ladder_error_mode` (the budget check still applies to the
+    *requested* bytes, so a refine below the floor of already-held bytes
+    simply no-ops at ``t_min``).
+    """
+    cum = meta.cum_bytes
+    if max_bytes < cum[0]:
+        raise ValueError(
+            f"max_bytes={max_bytes} is infeasible: the smallest plan for "
+            f"this archive loads {cum[0]} bytes (escape channels are "
+            "always loaded with their level); request at least that many "
+            "bytes or use an error-bound target")
+    t = 0
+    while t + 1 < len(cum) and cum[t + 1] <= max_bytes:
+        t += 1
+    return max(t, t_min)
+
+
 def _finish(meta: ArchiveMeta, keep: List[int], errs, mode: str) -> LoadPlan:
     total = sum(sum(lv.plane_sizes[: keep[li]]) + lv.esc_size
                 for li, lv in enumerate(meta.levels))

@@ -67,7 +67,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .. import container, loader
-from ..container import ArchiveReader, ChunkedArchiveReader
+from ..container import ArchiveReader, ChunkedArchiveReader, V3ArchiveReader
 from . import spec
 from .spec import ExecPolicy, Fidelity
 from .state import (ChunkedRetrievalState, RetrievalState, initial_state,
@@ -98,6 +98,24 @@ def plan_retrieval(meta, fidelity: Fidelity,
     return loader.plan_full(meta, propagation)
 
 
+def plan_ladder(meta, fidelity: Fidelity, propagation: str,
+                t_min: int = 0) -> int:
+    """The v3 twin of :func:`plan_retrieval`: resolve a Fidelity to a
+    ladder-prefix length over ``meta.plane_segments`` (``meta`` is a
+    :class:`~..container.V3Meta`).  ``t_min`` is the session's held
+    prefix — plans never shrink it, mirroring the v1/v2
+    refine-never-drops-planes rule.  Public for the same reason as
+    :func:`plan_retrieval`: the serving tier plans v3 requests against
+    this exact dispatcher."""
+    if fidelity.kind == spec.ERROR_BOUND:
+        return loader.ladder_error_mode(meta, fidelity.value, propagation,
+                                        t_min=t_min)
+    budget = fidelity.target_bytes(meta.n_elements)
+    if budget is not None:
+        return loader.ladder_bitrate_mode(meta, budget, t_min=t_min)
+    return len(meta.plane_segments)
+
+
 def read_archive(buf_or_reader, fidelity: Optional[Fidelity] = None,
                  policy: Optional[ExecPolicy] = None,
                  propagation: str = loader.SAFE,
@@ -120,10 +138,14 @@ def read_archive(buf_or_reader, fidelity: Optional[Fidelity] = None,
     """
     fidelity = Fidelity.full() if fidelity is None else fidelity
     policy = spec.DEFAULT_POLICY if policy is None else policy
-    if isinstance(buf_or_reader, (ArchiveReader, ChunkedArchiveReader)):
+    if isinstance(buf_or_reader, (ArchiveReader, ChunkedArchiveReader,
+                                  V3ArchiveReader)):
         reader = buf_or_reader
     else:
         reader = container.open_reader(buf_or_reader)
+    if isinstance(reader, V3ArchiveReader):
+        return _retrieve_v3(reader, fidelity, propagation, state,
+                            policy, cache=cache, counters=counters)
     if isinstance(reader, ChunkedArchiveReader):
         return _retrieve_chunked(reader, fidelity, propagation, state,
                                  policy, cache=cache, counters=counters)
@@ -450,3 +472,50 @@ def _retrieve_group(reader: ChunkedArchiveReader, idxs: List[int],
                        ctx, propagation, cache=cache, counters=counters)
     for i, st in zip(idxs, sts):
         state.chunk_states[i] = st
+
+
+def _retrieve_v3(reader: V3ArchiveReader, fidelity: Fidelity,
+                 propagation: str,
+                 state: Optional[ChunkedRetrievalState],
+                 policy: ExecPolicy, cache=None, counters=None,
+                 ) -> Tuple[np.ndarray, ChunkedRetrievalState]:
+    """Plane-major (v3) retrieval: one ladder plan, one contiguous read,
+    then the same grouped chunk decode as v2.
+
+    Where v2 plans per chunk and scatters per-chunk blob reads, v3
+    resolves the whole request to a single ladder-prefix length ``t``
+    (:func:`plan_ladder`), stages the byte gap with ONE contiguous source
+    read (:meth:`~..container.V3ArchiveReader.ensure_prefix`), and decodes
+    every chunk from the staged prefix — so a fidelity ladder issues
+    monotone contiguous ranges no matter how many chunks refine.  Byte
+    targets are global by construction (``cum_bytes`` sums the grid), so
+    no proportional split is needed; the refine floor is the state's
+    ``ladder_pos`` instead of per-chunk spent bytes.  Per-chunk decode
+    states, accounting, and the assembled output follow v2 exactly, and
+    the shared :func:`decode_group` executor handles batching / sharding
+    / scalar fallback identically.
+    """
+    m = reader.meta
+    ctx = policy.bind(chunked=True, encode=False)
+    if state is None:
+        state = ChunkedRetrievalState(reader=reader,
+                                      chunk_states=[None] * len(m.chunks))
+    t = plan_ladder(m, fidelity, propagation, t_min=state.ladder_pos)
+    reader.ensure_prefix(t)
+    keeps = m.ladder_keeps(t)
+    for idxs in shape_groups([cm.stop - cm.start for cm in m.chunks],
+                             max_group=group_cap(ctx.mesh)):
+        subs = [reader.chunk_reader(i) for i in idxs]
+        sts = decode_group(subs, [state.chunk_states[i] for i in idxs],
+                           [keeps[i] for i in idxs], ctx, propagation,
+                           cache=cache, counters=counters)
+        for i, st in zip(idxs, sts):
+            state.chunk_states[i] = st
+    out = np.empty(m.shape, np.dtype(m.dtype))
+    for i, cm in enumerate(m.chunks):
+        out[cm.start:cm.stop] = \
+            state.chunk_states[i].xhat.astype(np.dtype(m.dtype))
+    state.err_bound = max(cs.err_bound for cs in state.chunk_states)
+    state.bytes_read = reader.bytes_read
+    state.ladder_pos = max(state.ladder_pos, t)
+    return out, state

@@ -57,27 +57,49 @@ resolve_exec_mesh = spec.resolve_exec_mesh
 def encode_array(x: np.ndarray, eb: float,
                  interp: str = interpolation.CUBIC, relative: bool = False,
                  chunk_elems: Optional[int] = None,
-                 policy: Optional[ExecPolicy] = None) -> bytes:
+                 policy: Optional[ExecPolicy] = None,
+                 version: Optional[int] = None) -> bytes:
     """Compress ``x`` with point-wise error bound ``eb`` (native entry).
 
     This is the policy-native encoder under ``repro.api.Codec.compress``:
-    (eb, interp, relative, chunk_elems) are the *bytes-affecting* spec —
-    the :class:`~.spec.ExecPolicy` only selects how the work executes
-    (backend substrate, chunk batching, mesh sharding) and never changes
-    the archive bytes.  ``relative=True`` interprets eb as a fraction of
-    the value range.  ``chunk_elems`` switches to the chunked v2 container
-    with ~chunk_elems-sized independent slabs.
+    (eb, interp, relative, chunk_elems, version) are the *bytes-affecting*
+    spec — the :class:`~.spec.ExecPolicy` only selects how the work
+    executes (backend substrate, chunk batching, mesh sharding) and never
+    changes the archive bytes.  ``relative=True`` interprets eb as a
+    fraction of the value range.  ``chunk_elems`` switches to a chunked
+    container with ~chunk_elems-sized independent slabs.
+
+    ``version`` selects the container framing: 1 (plain v1, the unchunked
+    default), 2 (chunk-major v2, the chunked default), or 3 (plane-major
+    v3 — chunked compression laid out in retrieval-ladder order, see
+    ``docs/format.md`` §3).  Compression itself is version-independent:
+    v3 archives hold the exact per-chunk streams a v2 archive would,
+    regrouped — only the byte layout (and thus the read access pattern)
+    differs.  ``version=3`` without ``chunk_elems`` frames the whole
+    array as one chunk.
     """
     policy = spec.DEFAULT_POLICY if policy is None else policy
+    if version is None:
+        version = 1 if chunk_elems is None else 2
+    if version not in (1, 2, 3):
+        raise ValueError(f"unknown container version {version!r}; "
+                         "expected 1, 2 or 3")
+    if version == 1 and chunk_elems is not None:
+        raise ValueError("version=1 cannot hold chunks; "
+                         "drop chunk_elems or use version 2 or 3")
+    if version == 2 and chunk_elems is None:
+        raise ValueError("version=2 is the chunked container; "
+                         "pass chunk_elems (or use version=1)")
     x = np.asarray(x)
     if relative:
         eb = eb * (float(x.max()) - float(x.min()) or 1.0)
     if eb <= 0:
         raise ValueError("error bound must be positive")
-    ctx = policy.bind(chunked=chunk_elems is not None, encode=True)
-    if chunk_elems is None:
+    ctx = policy.bind(chunked=version != 1, encode=True)
+    if version == 1:
         return _compress_single(x, eb, interp, ctx.bk)
-    bounds = chunk_bounds(x.shape, chunk_elems)
+    bounds = chunk_bounds(x.shape, chunk_elems if chunk_elems is not None
+                          else max(1, int(x.size)))
     bufs: List[Optional[bytes]] = [None] * len(bounds)
     for idxs in shape_groups([b - a for a, b in bounds],
                              max_group=group_cap(ctx.mesh)):
@@ -89,8 +111,9 @@ def encode_array(x: np.ndarray, eb: float,
             for i in idxs:
                 a, b = bounds[i]
                 bufs[i] = _compress_single(x[a:b], eb, interp, ctx.bk)
-    return container.write_chunked_archive(x.shape, x.dtype, eb, interp,
-                                           bounds, bufs)
+    writer = (container.write_v3_archive if version == 3
+              else container.write_chunked_archive)
+    return writer(x.shape, x.dtype, eb, interp, bounds, bufs)
 
 
 def compress(x: np.ndarray, eb: float, interp: str = interpolation.CUBIC,

@@ -70,11 +70,15 @@ class RetrievalState:
 
 @dataclass
 class ChunkedRetrievalState:
-    """Progressive state for a v2 archive: one RetrievalState per chunk."""
+    """Progressive state for a chunked (v2 or v3) archive: one
+    RetrievalState per chunk.  ``ladder_pos`` only moves on v3: the
+    ladder-prefix length already held, so refinement plans start there
+    (the v3 twin of per-level ``planes_loaded`` floors)."""
     reader: ChunkedArchiveReader
     chunk_states: List[Optional[RetrievalState]]
     err_bound: float = float("inf")
     bytes_read: int = 0
+    ladder_pos: int = 0
 
 
 def fork_state(state):
@@ -104,7 +108,8 @@ def fork_state(state):
         return ChunkedRetrievalState(reader=reader,
                                      chunk_states=chunk_states,
                                      err_bound=state.err_bound,
-                                     bytes_read=state.bytes_read)
+                                     bytes_read=state.bytes_read,
+                                     ladder_pos=state.ladder_pos)
     reader = state.reader.fork()
     return RetrievalState(reader=reader,
                           planes_loaded=list(state.planes_loaded),

@@ -39,6 +39,7 @@ import numpy as np
 
 from ..api import Archive, ExecPolicy, Fidelity
 from ..core import loader
+from ..core.container import V3ArchiveReader
 from ..core.pipeline import decode, spec
 from ..core.pipeline.encode import group_cap
 from ..core.pipeline.state import (ChunkedRetrievalState, RetrievalState,
@@ -79,6 +80,7 @@ class ServeRequest:
     # session internals (reader + progressive state), server-managed
     _reader: object = None
     _state: object = None
+    _ladder_t: object = None          # v3: this tick's planned prefix length
 
 
 @dataclass
@@ -237,6 +239,24 @@ class RetrievalServer:
             keep = decode.plan_retrieval(reader.meta, req.fidelity,
                                          prop).keep_planes
             return [_Job(req, None, reader, state, keep)]
+        if isinstance(reader, V3ArchiveReader):
+            # plane-major: one ladder plan for the whole grid, ONE
+            # contiguous range staged up front — the per-chunk jobs then
+            # decode from the staged prefix, so coalesced ticks keep the
+            # v3 monotone-contiguous read pattern (the server is the
+            # range-request client the layout was designed for)
+            if state is None:
+                state = req._state = ChunkedRetrievalState(
+                    reader=reader,
+                    chunk_states=[None] * len(reader.meta.chunks))
+            t = decode.plan_ladder(reader.meta, req.fidelity, prop,
+                                   t_min=state.ladder_pos)
+            reader.ensure_prefix(t)
+            keeps = reader.meta.ladder_keeps(t)
+            req._ladder_t = t
+            return [_Job(req, i, reader.chunk_reader(i),
+                         state.chunk_states[i], keeps[i])
+                    for i in range(len(reader.meta.chunks))]
         budgets = decode.chunk_budgets(reader, req.fidelity, state)
         if state is None:
             state = req._state = ChunkedRetrievalState(
@@ -336,6 +356,9 @@ class RetrievalServer:
             state.err_bound = max(cs.err_bound
                                   for cs in state.chunk_states)
             state.bytes_read = reader.bytes_read
+            if req._ladder_t is not None:   # v3: record the held prefix
+                state.ladder_pos = max(state.ladder_pos, req._ladder_t)
+                req._ladder_t = None
             req.result = out
             req.err_bound = state.err_bound
             req.bytes_read = state.bytes_read

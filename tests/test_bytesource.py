@@ -1,0 +1,155 @@
+"""The pluggable byte-range I/O layer under the container readers.
+
+BufferSource zero-copy semantics, FileSource mmap-backed file access,
+CountingSource range accounting (the v3 monotone-contiguity test double),
+and window forwarding at absolute offsets.
+"""
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro.core.bytesource import (BufferSource, ByteSource, CountingSource,
+                                   FileSource, as_source)
+
+PAYLOAD = bytes(range(256)) * 8
+
+
+# --------------------------------------------------------------- coercion
+
+def test_as_source_wraps_bytes_and_passes_sources_through():
+    src = as_source(PAYLOAD)
+    assert isinstance(src, BufferSource)
+    assert as_source(src) is src                      # no double wrapping
+    cs = CountingSource(PAYLOAD)
+    assert as_source(cs) is cs
+
+
+def test_buffer_source_reads_and_size():
+    src = BufferSource(PAYLOAD)
+    assert src.size == len(PAYLOAD)
+    assert bytes(src.read(0, 4)) == PAYLOAD[:4]
+    assert bytes(src.read(100, 50)) == PAYLOAD[100:150]
+    assert bytes(src.read(0, src.size)) == PAYLOAD
+    assert src.tobytes() == PAYLOAD
+
+
+def test_buffer_source_is_zero_copy():
+    src = BufferSource(PAYLOAD)
+    view = src.read(10, 6)
+    assert isinstance(view, memoryview)
+    assert bytes(view) == PAYLOAD[10:16]
+
+
+# ------------------------------------------------------------ file source
+
+def test_file_source_reads_ranges(tmp_path):
+    p = tmp_path / "payload.bin"
+    p.write_bytes(PAYLOAD)
+    src = FileSource(p)                               # pathlib.Path accepted
+    assert src.size == len(PAYLOAD)
+    assert bytes(src.read(7, 13)) == PAYLOAD[7:20]
+    assert bytes(src.read(0, src.size)) == PAYLOAD
+    src.close()
+    src.close()                                       # idempotent
+
+
+def test_file_source_empty_file(tmp_path):
+    p = tmp_path / "empty.bin"
+    p.write_bytes(b"")
+    src = FileSource(str(p))                          # str path accepted
+    assert src.size == 0
+    assert bytes(src.read(0, 0)) == b""
+    src.close()
+
+
+# -------------------------------------------------------- range accounting
+
+def test_counting_source_logs_in_order():
+    cs = CountingSource(PAYLOAD)
+    assert bytes(cs.read(0, 4)) == PAYLOAD[:4]
+    cs.read(4, 8)
+    cs.read(100, 10)
+    assert cs.requests == [(0, 4), (4, 8), (100, 10)]
+    assert cs.n_requests == 3
+    assert cs.bytes_requested == 22
+    assert cs.size == len(PAYLOAD)
+
+
+def test_counting_source_ignores_zero_byte_reads():
+    """Empty planes / empty escape blobs hit no storage and must not
+    distort the range metrics."""
+    cs = CountingSource(PAYLOAD)
+    cs.read(0, 4)
+    cs.read(50, 0)
+    cs.read(4, 4)
+    assert cs.requests == [(0, 4), (4, 4)]
+    assert len(cs.coalesced()) == 1                   # still one run
+
+
+def test_coalesced_merges_adjacent_in_order():
+    cs = CountingSource(PAYLOAD)
+    for off, size in [(0, 10), (10, 5), (15, 5), (40, 8), (48, 2), (0, 4)]:
+        cs.read(off, size)
+    assert cs.coalesced() == [(0, 20), (40, 10), (0, 4)]
+
+
+def test_monotone_and_seek_distance():
+    cs = CountingSource(PAYLOAD)
+    cs.read(0, 10)
+    cs.read(10, 10)
+    cs.read(30, 5)                                    # forward gap: ok
+    assert cs.monotone()
+    assert cs.seek_distance == 10                     # the 20 -> 30 gap
+    cs.read(5, 3)                                     # backward seek
+    assert not cs.monotone()
+    cs.reset()
+    assert cs.requests == [] and cs.monotone() and cs.seek_distance == 0
+
+
+def test_counting_wraps_any_source(tmp_path):
+    p = tmp_path / "x.bin"
+    p.write_bytes(PAYLOAD)
+    inner = FileSource(p)
+    cs = CountingSource(inner)
+    assert bytes(cs.read(3, 5)) == PAYLOAD[3:8]
+    assert cs.requests == [(3, 5)]
+    cs.close()                                        # forwards to inner
+
+
+# ---------------------------------------------------------------- windows
+
+def test_window_forwards_absolute_offsets():
+    """A chunk sub-reader windowed into a container must surface its
+    requests at real container positions — that is what makes range
+    accounting comparable across container versions."""
+    cs = CountingSource(PAYLOAD)
+    win = cs.window(100, 40)
+    assert win.size == 40
+    assert bytes(win.read(0, 10)) == PAYLOAD[100:110]
+    assert bytes(win.read(30, 10)) == PAYLOAD[130:140]
+    assert cs.requests == [(100, 10), (130, 10)]
+
+
+def test_byte_source_base_is_abstract():
+    src = ByteSource()
+    with pytest.raises(NotImplementedError):
+        src.read(0, 1)
+    with pytest.raises(NotImplementedError):
+        src.size
+
+
+# ------------------------------------------- readers ride on byte sources
+
+def test_archive_reader_accepts_sources():
+    """Every container parser/reader entry accepts a ByteSource in place
+    of bytes, with identical results."""
+    from repro.api import Codec
+    from repro.core import container
+
+    x = smooth_field((24, 18), seed=3)
+    buf = Codec(eb=1e-4).compress(x).tobytes()
+    m_bytes = container.parse_meta(buf)
+    m_src = container.parse_meta(BufferSource(buf))
+    assert m_bytes.levels[0].plane_offsets == m_src.levels[0].plane_offsets
+    r = container.open_reader(CountingSource(buf))
+    assert r.anchors().shape == tuple(m_bytes.anchors_shape)

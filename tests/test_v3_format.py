@@ -1,0 +1,352 @@
+"""IPC3 plane-major container: layout invariants, streaming access
+pattern, and corruption rejection (docs/format.md §3).
+
+The headline claim pinned here: a Fidelity ladder over a v3 archive
+issues monotonically increasing contiguous byte ranges — asserted through
+``CountingSource`` range accounting, not inferred from the layout.
+"""
+import json
+import struct
+
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro.api import Archive, Codec, CorruptArchiveError, Fidelity
+from repro.core import container, loader
+from repro.core.bytesource import CountingSource
+from repro.core.container import (MAGIC3, V3ArchiveReader, V3Meta,
+                                  parse_v3_meta)
+
+X = smooth_field((60, 40), seed=7)
+EB = 1e-5
+LADDER = [1e-1, 1e-2, 1e-3, 1e-4, 1e-5]
+
+
+def _v3(chunk_elems=600):
+    return Codec(eb=EB, chunk_elems=chunk_elems, version=3).compress(X)
+
+
+def _v2(chunk_elems=600):
+    return Codec(eb=EB, chunk_elems=chunk_elems).compress(X)
+
+
+# ----------------------------------------------------------------- layout
+
+def test_v3_round_trip_and_bound():
+    a = _v3()
+    assert a.version == 3 and a.chunked and a.n_chunks > 1
+    out = a.open().read()
+    assert np.abs(out - X).max() <= EB
+
+
+def test_v3_full_read_bit_identical_to_v2():
+    """The framing regroups identical per-chunk streams: cold full reads
+    of v2 and v3 archives of one array are bit-identical."""
+    assert np.array_equal(_v2().open().read(), _v3().open().read())
+
+
+def test_v3_segments_tile_contiguously_in_ladder_order():
+    m = _v3()._meta
+    assert isinstance(m, V3Meta)
+    cursor = m.header_end
+    for s in m.segments:
+        assert s.offset == cursor
+        cursor += s.size
+    assert cursor == m.total_size
+    # base region (anchors + escapes) strictly precedes every plane segment
+    kinds = [s.kind for s in m.segments]
+    assert kinds[0] == "anchors"
+    assert "planes" not in kinds[:kinds.index("planes")]
+    # within a level, plane segments are MSB-first
+    per_level = {}
+    for s in m.plane_segments:
+        assert s.plane == per_level.get(s.level, -1) + 1
+        per_level[s.level] = s.plane
+
+
+def test_v3_matches_write_time_ladder_order():
+    m = _v3()._meta
+    order = loader.ladder_order(m.chunk_metas)
+    assert [(s.level, s.plane) for s in m.plane_segments] == order
+
+
+def test_ladder_keeps_clamps_to_chunk_nbits():
+    m = _v3()._meta
+    T = len(m.plane_segments)
+    keeps_full = m.ladder_keeps(T)
+    assert keeps_full == [[lv.nbits for lv in cm.levels]
+                          for cm in m.chunk_metas]
+    assert m.ladder_keeps(0) == [[0] * len(cm.levels)
+                                 for cm in m.chunk_metas]
+    # monotone, per-chunk bounded prefix growth
+    prev = m.ladder_keeps(0)
+    for t in range(1, T + 1):
+        cur = m.ladder_keeps(t)
+        for pc, cc, cm in zip(prev, cur, m.chunk_metas):
+            assert all(c >= p for p, c in zip(pc, cc))
+            assert all(c <= lv.nbits for c, lv in zip(cc, cm.levels))
+        prev = cur
+
+
+def test_cum_bytes_matches_segment_sizes():
+    m = _v3()._meta
+    esc = sum(s.size for s in m.segments if s.kind == "escapes")
+    assert m.cum_bytes[0] == esc
+    for t, s in enumerate(m.plane_segments):
+        assert m.cum_bytes[t + 1] == m.cum_bytes[t] + s.size
+
+
+# -------------------------------------------- the streaming access pattern
+
+def test_fidelity_ladder_reads_monotone_contiguous_ranges():
+    """THE v3 claim: refining through a fidelity ladder issues monotone
+    byte ranges whose data-section portion coalesces to ONE contiguous
+    run — no per-chunk scatter, no re-seeks."""
+    a = _v3()
+    cs = CountingSource(a.tobytes())
+    s = Archive.from_source(cs).open()
+    he = a._meta.header_end
+    for E in LADDER:
+        out = s.read(Fidelity.error_bound(E))
+        assert np.abs(out - X).max() <= E
+    assert cs.monotone()
+    data_reqs = [r for r in cs.requests if r[0] >= he]
+    runs = CountingSource(b"")
+    runs.requests = data_reqs
+    assert len(runs.coalesced()) == 1
+    start, size = runs.coalesced()[0]
+    assert start == he                      # the run starts at the base region
+
+
+def test_each_refine_issues_at_most_one_data_read():
+    a = _v3()
+    cs = CountingSource(a.tobytes())
+    s = Archive.from_source(cs).open()
+    he = a._meta.header_end
+    for E in LADDER:
+        before = len([r for r in cs.requests if r[0] >= he])
+        s.read(Fidelity.error_bound(E))
+        after = len([r for r in cs.requests if r[0] >= he])
+        assert after - before <= 1
+
+
+def test_refine_never_rereads_and_looser_target_noops():
+    a = _v3()
+    s = a.open()
+    s.read(Fidelity.error_bound(1e-3))
+    br = s.bytes_read
+    pos = s._state.ladder_pos
+    out = s.read(Fidelity.error_bound(1e-1))          # looser: no-op
+    assert s.bytes_read == br and s._state.ladder_pos == pos
+    assert np.abs(out - X).max() <= 1e-3              # keeps the finer data
+    s.read(Fidelity.error_bound(1e-5))
+    assert s._state.ladder_pos >= pos
+
+
+def test_ensure_prefix_stages_one_contiguous_read():
+    a = _v3()
+    cs = CountingSource(a.tobytes())
+    r = V3ArchiveReader(cs)
+    he = r.meta.header_end
+    T = len(r.meta.plane_segments)
+    cs.reset()
+    r.ensure_prefix(T // 2)
+    data = [q for q in cs.requests if q[0] >= he]
+    assert len(data) == 1 and data[0][0] == he
+    r.ensure_prefix(T // 2)                           # already staged: no-op
+    r.ensure_prefix(T // 4)                           # shrink: no-op
+    assert len([q for q in cs.requests if q[0] >= he]) == 1
+    r.ensure_prefix(T)
+    data = [q for q in cs.requests if q[0] >= he]
+    assert len(data) == 2
+    assert data[1][0] == data[0][0] + data[0][1]      # gap read, contiguous
+
+
+def test_forks_share_the_staged_prefix():
+    """Fork accounting is independent, but the staged transport buffer is
+    shared: a branch never re-fetches ranges its sibling staged."""
+    a = _v3()
+    cs = CountingSource(a.tobytes())
+    s = Archive.from_source(cs).open()
+    s.read(Fidelity.error_bound(1e-3))
+    n = cs.n_requests
+    from repro.core.pipeline.state import fork_state
+    st2 = fork_state(s._state)
+    assert st2.ladder_pos == s._state.ladder_pos
+    assert st2.bytes_read == s._state.bytes_read
+    assert cs.n_requests == n                         # forking fetched nothing
+
+
+# ------------------------------------------------------------ plan modes
+
+def test_ladder_bitrate_mode_respects_budget():
+    a = _v3()
+    m = a._meta
+    for frac in (0.1, 0.3, 0.7, 1.0):
+        budget = int(m.cum_bytes[-1] * frac) + m.cum_bytes[0]
+        t = loader.ladder_bitrate_mode(m, budget)
+        assert m.cum_bytes[t] <= budget
+        if t < len(m.plane_segments):
+            assert m.cum_bytes[t + 1] > budget        # maximal prefix
+    # t_min floors the plan
+    assert loader.ladder_bitrate_mode(m, m.cum_bytes[0], t_min=5) == 5
+
+
+def test_ladder_error_mode_bounds_and_floor():
+    m = _v3()._meta
+    with pytest.raises(ValueError, match="compression bound"):
+        loader.ladder_error_mode(m, EB / 10)
+    t_loose = loader.ladder_error_mode(m, 1e-2)
+    t_tight = loader.ladder_error_mode(m, 1e-4)
+    assert 0 < t_loose <= t_tight <= len(m.plane_segments)
+    assert loader.ladder_error_mode(m, 1e-2, t_min=t_tight) == t_tight
+
+
+def test_max_bytes_session_stays_within_budget():
+    a = _v3()
+    budget = a.nbytes // 3
+    s = a.open()
+    s.read(Fidelity.max_bytes(budget))
+    assert s.bytes_read <= budget
+
+
+# ------------------------------------------------------- serving tier (v3)
+
+def test_server_serves_v3_with_shared_cache():
+    from repro.serving.cache import PlaneCache
+    from repro.serving.server import RetrievalServer
+
+    a = _v3()
+    srv = RetrievalServer(cache=PlaneCache())
+    srv.add_archive("a", a)
+    r1 = srv.submit("a", Fidelity.error_bound(1e-2))
+    r2 = srv.submit("a", Fidelity.error_bound(1e-4))
+    srv.drain()
+    assert r1.status == "done" and np.abs(r1.result - X).max() <= 1e-2
+    assert r2.status == "done" and np.abs(r2.result - X).max() <= 1e-4
+    # bit parity with a private uncached session at the same fidelity
+    assert np.array_equal(a.open().read(Fidelity.error_bound(1e-2)),
+                          r1.result)
+    # refine chain advances the ladder without re-reading
+    r3 = srv.submit("a", Fidelity.error_bound(1e-5), refine_of=r2)
+    srv.drain()
+    assert r3.status == "done" and np.abs(r3.result - X).max() <= 1e-5
+    assert r3.bytes_read >= r2.bytes_read
+    assert r3._state.ladder_pos >= r2._state.ladder_pos
+
+
+def test_server_v3_requests_read_monotone_ranges():
+    from repro.serving.server import RetrievalServer
+
+    buf = _v3().tobytes()
+    cs = CountingSource(buf)
+    srv = RetrievalServer()
+    srv.add_archive("a", Archive.from_source(cs))
+    parent = srv.submit("a", Fidelity.error_bound(1e-1))
+    srv.drain()
+    for E in (1e-2, 1e-3, 1e-4):
+        parent = srv.submit("a", Fidelity.error_bound(E), refine_of=parent)
+        srv.drain()
+    assert parent.status == "done"
+    assert cs.monotone()
+
+
+# ---------------------------------------------------- corruption rejection
+
+def _mutate(buf: bytes, fn):
+    """Round-trip the v3 header JSON through ``fn`` and reframe."""
+    (hlen,) = struct.unpack("<I", buf[4:8])
+    h = json.loads(buf[8:8 + hlen].decode())
+    fn(h)
+    hj = json.dumps(h, separators=(",", ":")).encode()
+    pad = hlen - len(hj)
+    if pad < 0:
+        raise AssertionError("mutation grew the header; offsets would shift")
+    # keep the header length identical so blob offsets stay valid
+    hj = hj[:-1] + b" " * pad + hj[-1:]
+    return MAGIC3 + struct.pack("<I", hlen) + hj + buf[8 + hlen:]
+
+
+def test_v3_rejects_non_contiguous_segments():
+    buf = _v3().tobytes()
+
+    def gap(h):
+        h["segments"][2]["offset"] += 1
+    with pytest.raises(CorruptArchiveError, match="contiguous|expected"):
+        Archive(_mutate(buf, gap))
+
+
+def test_v3_rejects_plane_order_violation():
+    buf = _v3().tobytes()
+
+    def swap(h):
+        planes = [i for i, s in enumerate(h["segments"])
+                  if s["kind"] == "planes"]
+        a, b = planes[0], planes[1]
+        # swap the (level, plane) identities but keep extents in place
+        for k in ("kind", "level", "plane"):
+            h["segments"][a][k], h["segments"][b][k] = \
+                h["segments"][b][k], h["segments"][a][k]
+    with pytest.raises(CorruptArchiveError):
+        Archive(_mutate(buf, swap))
+
+
+def test_v3_rejects_base_segment_after_planes():
+    buf = _v3().tobytes()
+
+    def demote(h):
+        segs = h["segments"]
+        planes = [i for i, s in enumerate(segs) if s["kind"] == "planes"]
+        esc = [i for i, s in enumerate(segs) if s["kind"] == "escapes"]
+        # relabel a plane segment in the tail as an escapes segment
+        segs[planes[-1]]["kind"] = "escapes"
+        segs[planes[-1]]["plane"] = -1
+        segs[esc[0]]["kind"] = "planes"
+    with pytest.raises(CorruptArchiveError):
+        Archive(_mutate(buf, demote))
+
+
+def test_v3_rejects_blob_outside_its_segment():
+    buf = _v3().tobytes()
+
+    def stray(h):
+        # relocate a plane blob into the anchors segment: in bounds, but
+        # outside the (level, plane) segment that should contain it
+        ch = h["chunk_headers"][0]["levels"][0]
+        ch["plane_offsets"][0] = h["segments"][0]["offset"]
+    with pytest.raises(CorruptArchiveError, match="segment"):
+        Archive(_mutate(buf, stray))
+
+
+def test_v3_rejects_truncation_everywhere():
+    buf = _v3().tobytes()
+    (hlen,) = struct.unpack("<I", buf[4:8])
+    for cut in (0, 2, 4, 6, 8, 8 + hlen // 2, 8 + hlen + 1, len(buf) - 3):
+        with pytest.raises(CorruptArchiveError):
+            Archive(buf[:cut])
+
+
+def test_v3_rejects_wrong_parser_and_magic():
+    v3 = _v3().tobytes()
+    with pytest.raises(ValueError, match="v3|plane-major|IPC3"):
+        container.parse_meta(v3)
+    with pytest.raises(CorruptArchiveError, match="magic"):
+        parse_v3_meta(_v2().tobytes())
+
+
+def test_v3_single_chunk_without_chunk_elems():
+    """version=3 without chunk_elems frames the whole array as one chunk
+    — still a valid, ladder-ordered v3 archive."""
+    a = Codec(eb=1e-4, version=3).compress(X)
+    assert a.version == 3 and a.n_chunks == 1
+    assert np.abs(a.open().read() - X).max() <= 1e-4
+
+
+def test_codec_version_validation():
+    with pytest.raises(ValueError, match="version"):
+        Codec(eb=1e-4, version=4)
+    with pytest.raises(ValueError, match="chunks"):
+        Codec(eb=1e-4, chunk_elems=100, version=1)
+    with pytest.raises(ValueError, match="chunk_elems"):
+        Codec(eb=1e-4, version=2)
