@@ -30,6 +30,12 @@ array, with every byte-range request logged through a
 v3 layout win — monotone, single-run contiguous reads, strictly fewer
 coalesced ranges and less seek distance than v2.
 
+A fifth section runs that refine ladder over real loopback HTTP through
+:class:`~repro.core.remote.HTTPSource` against the test suite's
+in-process range server — once clean, once with a dropped GET — pinning
+bit parity with a local session, one coalesced data run on the wire,
+and retry-path recovery.
+
 CPU caveat (same as ``backend_speed``): off-TPU the jax backend runs
 Pallas in interpret mode, so wall-clock favors numpy and the dispatch /
 cache counters are the trendable metrics.
@@ -207,6 +213,84 @@ def _layout_bench():
     return record, checks, row
 
 
+REMOTE_LADDER = [1e-2, 1e-3, 1e-4, 1e-5]
+
+
+def _remote_bench():
+    """The same refine ladder pulled over real (loopback) HTTP through
+    :class:`~repro.core.remote.HTTPSource`, against the in-process range
+    server the network test suites use.  Two passes over one v3 archive:
+    a clean server, and one that drops a connection mid-ladder so the
+    retry/backoff path is on the measured path.  Recorded: wall time,
+    GET counts, wire bytes vs archive bytes, and retry counts.  Claim
+    checks pin the remote story — bit parity with a local BufferSource
+    session, one coalesced data run over the wire, and fault recovery
+    with a nonzero retry count."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tests"))
+    from range_server import RangeHTTPServer, ServerFault
+
+    from repro.core.remote import HTTPSource
+
+    rng = np.random.default_rng(23)
+    x = np.cumsum(rng.standard_normal((96, 96)), axis=0) / 10.0
+    arc = Codec(eb=1e-5, chunk_elems=2048, version=3).compress(x)
+    buf = arc.tobytes()
+    header_end = int(arc._meta.header_end)
+    fids = [Fidelity.error_bound(E) for E in REMOTE_LADDER]
+    local = Archive.frombytes(buf).open()
+    reference = [local.read(f) for f in fids]
+
+    record = {}
+    outs = {}
+    for name, faults in (
+            ("clean", None),
+            ("faulted", [ServerFault("drop", at=3)])):
+        srv = RangeHTTPServer(buf, faults=faults)
+        try:
+            src = HTTPSource(srv.url, timeout=10.0, backoff=0.01)
+            session = Archive.from_source(src).open()
+            t0 = time.perf_counter()
+            for f in fids:
+                out = session.read(f)
+            dt = time.perf_counter() - t0
+            outs[name] = out
+            data = [r for r in src.requests if r[0] >= header_end]
+            runs = CountingSource(b"")
+            runs.requests = data
+            record[name] = dict(
+                seconds=dt, archive_bytes=len(buf),
+                session_bytes_read=session.bytes_read,
+                gets=srv.n_gets, retries=src.retry_count,
+                wire_bytes=src.wire_bytes,
+                data_coalesced_runs=len(runs.coalesced()),
+                monotone=runs.monotone())
+            src.close()
+        finally:
+            srv.stop()
+    checks = [
+        ("serve_remote_bits_match_local", "ladder", "remote",
+         all(np.array_equal(outs[n], reference[-1]) for n in outs)),
+        ("serve_remote_one_data_run", "ladder", "remote",
+         record["clean"]["data_coalesced_runs"] == 1
+         and record["clean"]["monotone"]),
+        ("serve_remote_fault_recovered", "ladder", "remote",
+         record["faulted"]["retries"] > 0),
+        # no data byte crosses the wire twice: wire volume is bounded by
+        # the framing/header region plus the bytes the session planned
+        ("serve_remote_no_refetch", "ladder", "remote",
+         record["clean"]["wire_bytes"]
+         <= header_end + record["clean"]["session_bytes_read"] + 16),
+    ]
+    row = csv_row(
+        "serve/remote/http_ladder", record["clean"]["seconds"] * 1e6,
+        f"gets={record['clean']['gets']};"
+        f"wire={record['clean']['wire_bytes']};"
+        f"faulted_retries={record['faulted']['retries']}")
+    return record, checks, row
+
+
 def run(scale=None, n_requests: int = 18, backend: str = "jax",
         json_out: str = JSON_OUT):
     if n_requests < 16:
@@ -256,6 +340,12 @@ def run(scale=None, n_requests: int = 18, backend: str = "jax",
     checks.extend(layout_checks)
     rows.append(layout_row)
     print(layout_row)
+    # (e) the same ladder over real loopback HTTP: bit parity, one range
+    # per rung on the wire, and the retry path survives a dropped GET
+    remote_record, remote_checks, remote_row = _remote_bench()
+    checks.extend(remote_checks)
+    rows.append(remote_row)
+    print(remote_row)
 
     if json_out:
         with open(json_out, "w") as f:
@@ -264,6 +354,7 @@ def run(scale=None, n_requests: int = 18, backend: str = "jax",
                 cache_max_bytes=CACHE_BYTES,
                 workload=[(a, repr(f), c) for a, f, c in workload],
                 records=records, layout=layout_record,
+                remote=remote_record,
                 checks=[dict(name=c[0], case=c[1], op=c[2], ok=bool(c[3]))
                         for c in checks]), f, indent=2)
         print(f"wrote {json_out} ({len(records)} mode records)")

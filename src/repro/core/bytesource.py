@@ -35,6 +35,7 @@ from __future__ import annotations
 import io
 import mmap
 import os
+import threading
 from typing import List, Optional, Tuple, Union
 
 
@@ -138,15 +139,17 @@ class FileSource(ByteSource):
         return f"FileSource({self.path!r}, {self._size} bytes)"
 
 
-class CountingSource(ByteSource):
-    """Transparent wrapper recording every range request, in order.
+class RangeLog:
+    """Thread-safe ordered log of range requests, plus derived metrics.
 
-    The range-accounting test double of the I/O layer: wraps any source
-    and logs ``(offset, size)`` per :meth:`read`, exposing the derived
-    metrics the v3 layout claims are stated in
+    Shared accounting machinery for every source that records its range
+    traffic — :class:`CountingSource` (the in-memory test double) and
+    ``remote.HTTPSource`` (real wire requests) expose the SAME metric
+    surface through it, which is what makes in-memory layout claims and
+    over-the-network measurements directly comparable
     (``docs/format.md`` §3.5):
 
-    * :attr:`requests` — the raw request log, in call order;
+    * :attr:`requests` — the raw ``(offset, size)`` log, in call order;
     * :meth:`coalesced` — the log merged greedily *in order*: a request
       starting exactly at the previous run's end extends it, anything
       else opens a new run.  A reader whose access pattern is truly
@@ -156,41 +159,43 @@ class CountingSource(ByteSource):
       for a scatter-read pattern (the v2-vs-v3 benchmark metric).
     * :meth:`monotone` — True when request offsets never move backward.
 
-    Zero-byte requests (empty planes, empty escape blobs) are not
-    recorded: they hit no storage and would distort the range counts.
+    Appends take a lock: the serving tier reads many sessions over one
+    shared source concurrently, and an unguarded ``list.append`` +
+    metric sweep interleaving would tear the log (pinned by the
+    concurrent-reader test in ``tests/test_bytesource.py``).  Metric
+    reads operate on an atomic snapshot, so they are safe to call while
+    other threads keep appending.
     """
 
-    def __init__(self, inner):
-        self.inner = as_source(inner)
+    def __init__(self):
         self.requests: List[Tuple[int, int]] = []
+        self._log_lock = threading.Lock()
 
-    def read(self, offset: int, size: int):
+    def record_range(self, offset: int, size: int) -> None:
+        """Append one range request to the log (thread-safe).  Zero-byte
+        requests (empty planes, empty escape blobs) are not recorded:
+        they hit no storage and would distort the range counts."""
         if size:
-            self.requests.append((int(offset), int(size)))
-        return self.inner.read(offset, size)
+            with self._log_lock:
+                self.requests.append((int(offset), int(size)))
 
-    @property
-    def size(self) -> int:
-        return self.inner.size
-
-    def close(self) -> None:
-        self.inner.close()
-
-    # ---- derived metrics
+    def _ranges(self) -> List[Tuple[int, int]]:
+        with self._log_lock:
+            return list(self.requests)
 
     @property
     def n_requests(self) -> int:
-        return len(self.requests)
+        return len(self._ranges())
 
     @property
     def bytes_requested(self) -> int:
-        return sum(s for _, s in self.requests)
+        return sum(s for _, s in self._ranges())
 
     def coalesced(self) -> List[Tuple[int, int]]:
         """In-order greedy coalescing: adjacent-in-time AND
         adjacent-in-space requests merge into one run."""
         runs: List[List[int]] = []
-        for off, size in self.requests:
+        for off, size in self._ranges():
             if runs and off == runs[-1][0] + runs[-1][1]:
                 runs[-1][1] += size
             else:
@@ -199,21 +204,47 @@ class CountingSource(ByteSource):
 
     def monotone(self) -> bool:
         """Did the request stream ever seek backward?"""
-        return all(b[0] >= a[0] + a[1] or b[0] >= a[0]
-                   for a, b in zip(self.requests, self.requests[1:])) and \
-            all(b[0] >= a[0] for a, b in zip(self.requests,
-                                             self.requests[1:]))
+        reqs = self._ranges()
+        return all(b[0] >= a[0] for a, b in zip(reqs, reqs[1:]))
 
     @property
     def seek_distance(self) -> int:
         """Summed absolute gap between consecutive requests (0 = pure
         streaming)."""
+        reqs = self._ranges()
         return sum(abs(b[0] - (a[0] + a[1]))
-                   for a, b in zip(self.requests, self.requests[1:]))
+                   for a, b in zip(reqs, reqs[1:]))
 
     def reset(self) -> None:
-        """Drop the log (metrics restart; the wrapped source is kept)."""
-        self.requests = []
+        """Drop the log (metrics restart; the source itself is kept)."""
+        with self._log_lock:
+            self.requests = []
+
+
+class CountingSource(RangeLog, ByteSource):
+    """Transparent wrapper recording every range request, in order.
+
+    The range-accounting test double of the I/O layer: wraps any source
+    and logs ``(offset, size)`` per :meth:`read` through the shared
+    :class:`RangeLog` machinery — the metric surface the v3 layout
+    claims are stated in.  It measures *how* an archive was read, not
+    just how much.
+    """
+
+    def __init__(self, inner):
+        RangeLog.__init__(self)
+        self.inner = as_source(inner)
+
+    def read(self, offset: int, size: int):
+        self.record_range(offset, size)
+        return self.inner.read(offset, size)
+
+    @property
+    def size(self) -> int:
+        return self.inner.size
+
+    def close(self) -> None:
+        self.inner.close()
 
     def __repr__(self) -> str:
         return (f"CountingSource({self.n_requests} requests, "

@@ -59,6 +59,26 @@ class CorruptArchiveError(ValueError):
     ``struct.unpack`` / ``json`` noise from the middle of the parser."""
 
 
+def _read_exact(src: ByteSource, offset: int, size: int, what: str) -> bytes:
+    """``src.read`` that enforces the no-short-reads contract.
+
+    :class:`~.bytesource.ByteSource.read` declares short reads a contract
+    violation, but an implementation over real storage (a truncated file,
+    a remote object whose tail was never written) can still return fewer
+    bytes than requested.  Every framing/data boundary in this module
+    reads through here so that failure surfaces as a
+    :class:`CorruptArchiveError` naming the boundary — never as a
+    ``struct.error`` / ``json`` exception from the middle of the parser,
+    and never as silently-corrupt decoded data.
+    """
+    data = bytes(src.read(offset, size))
+    if len(data) != size:
+        raise CorruptArchiveError(
+            f"short read of {what}: requested [{offset}, {offset + size}) "
+            f"but the source returned {len(data)} of {size} bytes")
+    return data
+
+
 def _magic(src: ByteSource) -> bytes:
     """The 4 magic bytes (empty-safe): the version dispatch token."""
     return bytes(src.read(0, 4))
@@ -78,13 +98,15 @@ def _framing(src: ByteSource, what: str):
         raise CorruptArchiveError(
             f"truncated {what}: {src.size} bytes, need at least 8 for "
             "magic + header length")
-    (hlen,) = struct.unpack("<I", bytes(src.read(4, 4)))
+    (hlen,) = struct.unpack(
+        "<I", _read_exact(src, 4, 4, f"{what} header length"))
     if 8 + hlen > src.size:
         raise CorruptArchiveError(
             f"truncated {what}: header claims {hlen} bytes but only "
             f"{src.size - 8} follow the framing")
     try:
-        header = json.loads(bytes(src.read(8, hlen)).decode())
+        header = json.loads(
+            _read_exact(src, 8, hlen, f"{what} header").decode())
     except (UnicodeDecodeError, json.JSONDecodeError) as e:
         raise CorruptArchiveError(f"undecodable {what} header: {e}") from e
     if not isinstance(header, dict):
@@ -301,10 +323,15 @@ class ArchiveReader:
         self.cache_scope = None
 
     def read(self, offset: int, size: int, tag: str) -> bytes:
+        # fetch and validate BEFORE accounting: a failing/short read (a
+        # remote source out of retries, a truncated file) must not mark
+        # the tag fetched — a successful retry then still counts its bytes
+        data = _read_exact(self.src, offset, size, f"blob {tag!r}") \
+            if size else b""
         if size and tag not in self._fetched:
             self._fetched.add(tag)
             self.bytes_read += size
-        return self.src.read(offset, size)
+        return data
 
     def plane_fetched(self, level_idx: int, plane_idx: int) -> bool:
         """Has this reader (= this accounting scope) already fetched the
@@ -843,7 +870,10 @@ class V3ArchiveReader:
             m.plane_segments[t - 1].offset + m.plane_segments[t - 1].size)
         st = self._stage
         if target > st.end:
-            st.buf += bytes(self.src.read(st.end, target - st.end))
+            # validated before appending: a short staged read would shift
+            # every downstream blob offset and decode garbage silently
+            st.buf += _read_exact(self.src, st.end, target - st.end,
+                                  f"v3 ladder prefix t={t}")
 
     def chunk_reader(self, i: int) -> ArchiveReader:
         if i not in self._readers:

@@ -1,0 +1,139 @@
+"""Deterministic fault injection at the :class:`ByteSource` seam.
+
+Remote retrieval fails in ways an in-memory buffer never does: a read
+raises mid-refine, returns short, or stalls.  The retry/degradation
+machinery (``core/remote.py``, the serving tier's retry budget) exists
+for exactly those moments — and must be testable without real flaky
+networks.  :class:`FaultInjectingSource` wraps any source with a
+*scripted* fault schedule keyed on the read-call index, so every
+failure path is replayed deterministically:
+
+* ``error`` — the read raises :class:`ConnectionError` (an ``OSError``,
+  the transport-failure class the retry layers classify as retryable);
+* ``truncate`` — the read returns only the first ``arg`` bytes (the
+  short-read path the container hardening turns into
+  ``CorruptArchiveError`` at the exact framing boundary);
+* ``stall`` — the read sleeps ``arg`` seconds, then succeeds (latency
+  injection; with an injected ``sleep`` it costs no wall clock).
+
+Faults either fire once (``at`` = one call index) or persist from an
+index onward (``persist=True`` — a source that stays down).  The
+schedule is mutable at runtime: tests arm a fault at the *current*
+``calls`` position (``src.arm(Fault(...))``) instead of precomputing
+brittle absolute indices.  Every fired fault is appended to
+:attr:`FaultInjectingSource.fired` for assertions.
+
+The companion HTTP-level harness — scripted drops, truncations, stalls
+and wrong statuses on a real loopback server — lives in
+``tests/range_server.py``; this wrapper covers the ByteSource layer so
+property tests (``tests/test_fault_injection.py``) can hammer the whole
+decode pipeline with random schedules and assert the invariant that
+matters: *no schedule ever yields a wrong-bytes reconstruction* — every
+outcome is correct data or a raised/structured failure.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from .bytesource import ByteSource, as_source
+
+
+@dataclass
+class Fault:
+    """One scripted fault.
+
+    ``kind`` is ``"error"`` / ``"truncate"`` / ``"stall"``; ``at`` is
+    the 0-based read-call index it fires on (``None`` = the next call at
+    arm time); ``arg`` is kind-specific (bytes kept for ``truncate``,
+    default half the request; seconds for ``stall``, default 0.01);
+    ``persist=True`` makes it fire on every call from ``at`` onward.
+    """
+    kind: str
+    at: Optional[int] = None
+    arg: Optional[float] = None
+    persist: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ("error", "truncate", "stall"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+@dataclass
+class FiredFault:
+    """Log entry: fault ``kind`` fired on call ``call`` = read
+    ``(offset, size)``."""
+    call: int
+    kind: str
+    offset: int
+    size: int
+
+
+class FaultInjectingSource(ByteSource):
+    """Transparent wrapper applying a scripted :class:`Fault` schedule.
+
+    Reads that no fault matches pass straight through, byte-identical.
+    ``calls`` counts every :meth:`read` (including zero-byte ones, so
+    indices are stable); ``fired`` logs each fault that actually fired.
+    """
+
+    def __init__(self, inner, schedule: Optional[List[Fault]] = None,
+                 sleep=time.sleep):
+        self.inner = as_source(inner)
+        self.schedule: List[Fault] = list(schedule or [])
+        self.calls = 0
+        self.fired: List[FiredFault] = []
+        self._sleep = sleep
+        for f in self.schedule:
+            if f.at is None:
+                raise ValueError(
+                    "schedule faults need an explicit 'at' index; "
+                    "use arm() for next-call faults")
+
+    def arm(self, fault: Fault) -> Fault:
+        """Add ``fault`` to the schedule; ``at=None`` resolves to the
+        next read call, so tests can arm relative to live progress
+        instead of precomputing absolute call indices."""
+        if fault.at is None:
+            fault.at = self.calls
+        self.schedule.append(fault)
+        return fault
+
+    def _match(self, idx: int) -> Optional[Fault]:
+        for f in self.schedule:
+            if f.at == idx or (f.persist and f.at is not None
+                               and idx >= f.at):
+                return f
+        return None
+
+    def read(self, offset: int, size: int):
+        idx = self.calls
+        self.calls += 1
+        f = self._match(idx)
+        if f is None:
+            return self.inner.read(offset, size)
+        self.fired.append(FiredFault(idx, f.kind, int(offset), int(size)))
+        if f.kind == "error":
+            raise ConnectionError(
+                f"injected fault: read #{idx} "
+                f"[{offset}, {offset + size}) dropped")
+        if f.kind == "stall":
+            self._sleep(0.01 if f.arg is None else f.arg)
+            return self.inner.read(offset, size)
+        # truncate: serve a short prefix of the true bytes
+        keep = int(size // 2 if f.arg is None else f.arg)
+        keep = max(0, min(keep, size))
+        return bytes(self.inner.read(offset, size))[:keep]
+
+    @property
+    def size(self) -> int:
+        return self.inner.size
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def __repr__(self) -> str:
+        return (f"FaultInjectingSource({self.calls} calls, "
+                f"{len(self.fired)} faults fired, "
+                f"{len(self.schedule)} scheduled)")

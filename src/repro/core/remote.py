@@ -1,0 +1,316 @@
+"""Remote retrieval: an HTTP/1.1 Range-request :class:`ByteSource`.
+
+The whole point of the v3 plane-major layout is that a progressive
+refine costs ONE contiguous range request (``docs/format.md`` §3) — but
+until this module the claim was only ever exercised against the
+in-memory :class:`~.bytesource.CountingSource` double.  ``HTTPSource``
+makes the access pattern real: each ``read(offset, size)`` becomes an
+HTTP/1.1 ``Range: bytes=o-(o+n-1)`` request against an object-store /
+static-file endpoint, using only the stdlib ``http.client`` (no new
+dependencies).
+
+Design points, each pinned by ``tests/test_remote_retrieval.py`` /
+``tests/test_fault_injection.py``:
+
+* **Bounded retries with exponential backoff + jitter.**  Transport
+  errors (connect refused, reset, timeout, short body, malformed 206)
+  are retried up to ``retries`` times with ``backoff * 2**k`` capped at
+  ``backoff_max`` and multiplied by ``1 + jitter·U[0,1)``; exhausting
+  the budget raises :class:`RemoteReadError`.  Decisive server answers
+  (4xx) raise :class:`RemoteProtocolError` immediately — retrying a 404
+  cannot help.
+* **206-vs-200 validation.**  A ``206`` must carry a ``Content-Range``
+  whose start matches the request and whose body length matches its
+  claim (short/broken bodies are retried).  A ``200`` means the server
+  ignored ``Range``: the full body is accepted, sliced locally, and
+  counted in :attr:`range_ignored` — correctness is preserved even
+  against servers with no range support, at a bandwidth cost the
+  accounting makes visible.  A valid ``206`` shorter than the request
+  because the *object* ends early is returned short — the container
+  layer turns that into ``CorruptArchiveError`` at the exact boundary.
+* **Lazy size probe.**  :attr:`size` issues one ``HEAD`` on first use
+  (or is learned for free from ``Content-Range`` totals), so opening an
+  archive costs no extra data request and the one-Range-per-rung
+  accounting stays clean.
+* **Bounded readahead.**  With ``readahead=n``, each wire fetch extends
+  ``n`` bytes past the request (clamped to EOF) and the surplus is kept;
+  a monotone v3 ladder then streams ahead of the decoder and sequential
+  header reads collapse into one wire request (:attr:`readahead_hits`).
+* **CountingSource-compatible accounting.**  The shared
+  :class:`~.bytesource.RangeLog` machinery records every *wire* range in
+  order, so ``coalesced()`` / ``monotone()`` / ``seek_distance`` mean
+  the same thing for a remote archive as for the in-memory double, and
+  ``benchmarks/serve_bench.py`` can put both in one table.
+
+Thread safety: the serving tier reads one shared source from concurrent
+sessions, and one ``http.client`` connection is not concurrency-safe —
+all wire I/O (and the readahead buffer) is serialized under one lock;
+the range log has its own (see :class:`~.bytesource.RangeLog`).
+"""
+from __future__ import annotations
+
+import http.client
+import random
+import re
+import threading
+import time
+import urllib.parse
+from typing import Optional
+
+from .bytesource import ByteSource, RangeLog
+
+
+class RemoteError(OSError):
+    """Base class for remote-retrieval failures.  Subclasses
+    :class:`OSError` so generic transport-error handling — including the
+    serving tier's retryable-vs-permanent classification — catches it
+    without importing this module."""
+
+
+class RemoteProtocolError(RemoteError):
+    """The server answered decisively wrong (4xx status, a bogus 416):
+    the request as formed can never succeed, so it is NOT retried."""
+
+
+class RemoteReadError(RemoteError):
+    """The retry budget was exhausted without one valid response.  The
+    last underlying error rides along as ``__cause__``."""
+
+
+class _RetryableResponse(http.client.HTTPException):
+    """Internal marker: a response that is malformed/transient (5xx,
+    short body, bad Content-Range) and worth retrying."""
+
+
+_CONTENT_RANGE = re.compile(r"bytes (\d+)-(\d+)/(\d+|\*)$")
+
+
+class HTTPSource(RangeLog, ByteSource):
+    """HTTP/1.1 Range-request source over a single remote object.
+
+    Parameters
+    ----------
+    url:
+        ``http://`` or ``https://`` URL of the archive object.
+    timeout:
+        Per-request socket timeout in seconds (connect + each read).
+    retries:
+        Extra attempts after the first failure (``retries=3`` means at
+        most 4 wire attempts per range).
+    backoff, backoff_max, jitter:
+        Sleep before retry ``k`` (1-based) is
+        ``min(backoff * 2**(k-1), backoff_max) * (1 + jitter·U[0,1))``.
+    readahead:
+        Extra bytes fetched past each request and cached (0 disables).
+    sleep, rng:
+        Injection points for tests: the backoff sleeper and the jitter
+        RNG (any object with ``random()``).
+    """
+
+    def __init__(self, url: str, *, timeout: float = 5.0, retries: int = 3,
+                 backoff: float = 0.05, backoff_max: float = 2.0,
+                 jitter: float = 0.25, readahead: int = 0,
+                 sleep=time.sleep, rng=None):
+        RangeLog.__init__(self)
+        self.url = url
+        p = urllib.parse.urlsplit(url)
+        if p.scheme not in ("http", "https"):
+            raise ValueError(f"HTTPSource needs an http(s) URL, got {url!r}")
+        if not p.hostname:
+            raise ValueError(f"HTTPSource URL has no host: {url!r}")
+        self._secure = p.scheme == "https"
+        self._host = p.hostname
+        self._port = p.port
+        self._path = (p.path or "/") + (f"?{p.query}" if p.query else "")
+        self.timeout = float(timeout)
+        self.retries = int(retries)
+        self.backoff = float(backoff)
+        self.backoff_max = float(backoff_max)
+        self.jitter = float(jitter)
+        self.readahead = int(readahead)
+        self._sleep = sleep
+        self._rng = rng if rng is not None else random.Random()
+        self._conn: Optional[http.client.HTTPConnection] = None
+        self._io_lock = threading.Lock()
+        self._size: Optional[int] = None
+        self._ra_start = 0
+        self._ra_buf = b""
+        # wire counters (the serve_bench "over the wire" columns)
+        self.wire_bytes = 0        # payload bytes actually received
+        self.retry_count = 0       # attempts beyond the first, cumulative
+        self.range_ignored = 0     # 200-instead-of-206 full-body responses
+        self.readahead_hits = 0    # reads served from the readahead buffer
+
+    # ------------------------------------------------------------ transport
+
+    def _connection(self) -> http.client.HTTPConnection:
+        if self._conn is None:
+            cls = (http.client.HTTPSConnection if self._secure
+                   else http.client.HTTPConnection)
+            self._conn = cls(self._host, self._port, timeout=self.timeout)
+        return self._conn
+
+    def _drop_conn(self) -> None:
+        if self._conn is not None:
+            try:
+                self._conn.close()
+            except OSError:
+                pass
+            self._conn = None
+
+    def _with_retries(self, attempt_fn, what: str):
+        """Run ``attempt_fn()`` under the retry policy.  Retryable
+        failures are transport-level (:class:`OSError`) and malformed
+        responses (:class:`http.client.HTTPException`); a
+        :class:`RemoteProtocolError` is decisive and re-raised as is."""
+        last: Optional[BaseException] = None
+        for k in range(self.retries + 1):
+            if k:
+                self.retry_count += 1
+                delay = min(self.backoff * (2 ** (k - 1)), self.backoff_max)
+                self._sleep(delay * (1.0 + self.jitter * self._rng.random()))
+            try:
+                return attempt_fn()
+            except RemoteProtocolError:
+                self._drop_conn()
+                raise
+            except (OSError, http.client.HTTPException) as e:
+                last = e
+                self._drop_conn()
+        raise RemoteReadError(
+            f"{what} of {self.url} failed after {self.retries + 1} "
+            f"attempts: {last}") from last
+
+    # ------------------------------------------------------------- requests
+
+    def _attempt_range(self, offset: int, want: int) -> bytes:
+        conn = self._connection()
+        conn.request("GET", self._path,
+                     headers={"Range": f"bytes={offset}-{offset + want - 1}"})
+        resp = conn.getresponse()
+        status = resp.status
+        if status == 206:
+            m = _CONTENT_RANGE.match(resp.getheader("Content-Range") or "")
+            if not m:
+                resp.read()
+                raise _RetryableResponse(
+                    f"206 with unparseable Content-Range "
+                    f"{resp.getheader('Content-Range')!r}")
+            start, end, total = m.groups()
+            start, end = int(start), int(end)
+            body = bytes(resp.read())
+            self.wire_bytes += len(body)
+            if start != offset:
+                raise _RetryableResponse(
+                    f"206 starts at {start}, requested {offset}")
+            if len(body) != end - start + 1:
+                raise _RetryableResponse(
+                    f"206 body carries {len(body)} of the "
+                    f"{end - start + 1} bytes its Content-Range claims")
+            if total != "*":
+                self._size = int(total)
+            self.record_range(offset, len(body))
+            return body
+        if status == 200:
+            # server ignored Range: the body is the whole object — slice
+            # locally so correctness survives range-less servers, and
+            # count the waste so benchmarks surface it
+            body = bytes(resp.read())
+            self.wire_bytes += len(body)
+            if self._size is not None and len(body) != self._size:
+                raise _RetryableResponse(
+                    f"200 body is {len(body)} bytes, object size is "
+                    f"{self._size}")
+            self._size = len(body)
+            self.range_ignored += 1
+            self.record_range(0, len(body))
+            return body[offset: offset + want]
+        if status == 416:
+            m = re.match(r"bytes \*/(\d+)$",
+                         resp.getheader("Content-Range") or "")
+            resp.read()
+            if m:
+                self._size = int(m.group(1))
+            if self._size is not None and offset >= self._size:
+                # past-EOF reads mirror BufferSource slicing: empty
+                return b""
+            raise _RetryableResponse(
+                f"416 for in-bounds range [{offset}, {offset + want})")
+        resp.read()
+        if status >= 500:
+            raise _RetryableResponse(f"HTTP {status}")
+        raise RemoteProtocolError(
+            f"HTTP {status} for range [{offset}, {offset + want}) "
+            f"of {self.url}")
+
+    def _attempt_head(self) -> int:
+        conn = self._connection()
+        conn.request("HEAD", self._path)
+        resp = conn.getresponse()
+        resp.read()
+        if resp.status != 200:
+            if 400 <= resp.status < 500:
+                raise RemoteProtocolError(
+                    f"HTTP {resp.status} for HEAD {self.url}")
+            raise _RetryableResponse(f"HTTP {resp.status} for HEAD")
+        clen = resp.getheader("Content-Length")
+        if clen is None or not clen.isdigit():
+            raise _RetryableResponse(
+                f"HEAD without usable Content-Length ({clen!r})")
+        return int(clen)
+
+    # ------------------------------------------------------ ByteSource API
+
+    def read(self, offset: int, size: int):
+        offset, size = int(offset), int(size)
+        if size <= 0:
+            return b""
+        with self._io_lock:
+            lo = offset - self._ra_start
+            if 0 <= lo and lo + size <= len(self._ra_buf):
+                self.readahead_hits += 1
+                return self._ra_buf[lo: lo + size]
+            want = size
+            if self.readahead:
+                end = offset + size + self.readahead
+                if self._size is not None:
+                    end = min(end, self._size)
+                want = max(size, end - offset)
+            data = self._with_retries(
+                lambda: self._attempt_range(offset, want),
+                f"range [{offset}, {offset + want})")
+            if self.readahead:
+                self._ra_start, self._ra_buf = offset, data
+            return data[:size]
+
+    @property
+    def size(self) -> int:
+        with self._io_lock:
+            if self._size is None:
+                self._size = self._with_retries(self._attempt_head,
+                                                "size probe (HEAD)")
+            return self._size
+
+    def close(self) -> None:
+        with self._io_lock:
+            self._drop_conn()
+            self._ra_buf = b""
+
+    # ------------------------------------------------------------- metrics
+
+    def stats(self) -> dict:
+        """One benchmark-ready snapshot of the wire accounting."""
+        return dict(url=self.url, n_requests=self.n_requests,
+                    coalesced_ranges=len(self.coalesced()),
+                    monotone=self.monotone(),
+                    seek_distance=self.seek_distance,
+                    bytes_requested=self.bytes_requested,
+                    wire_bytes=self.wire_bytes,
+                    retry_count=self.retry_count,
+                    range_ignored=self.range_ignored,
+                    readahead_hits=self.readahead_hits)
+
+    def __repr__(self) -> str:
+        return (f"HTTPSource({self.url!r}, {self.n_requests} requests, "
+                f"{self.wire_bytes} wire bytes, "
+                f"{self.retry_count} retries)")

@@ -1,0 +1,116 @@
+"""Re-lay existing archives plane-major: ``v1/v2 -> v3``, no re-compression.
+
+The v3 plane-major layout (``docs/format.md`` §3) is a pure *byte
+permutation* of the same compressed blobs a v2 container carries —
+:func:`~repro.core.container.write_v3_archive` takes exactly
+``write_chunked_archive``'s inputs — so any archive already compressed
+as v2 (or v1: a single-slab grid) can be upgraded to the streaming
+layout without touching a single codec kernel.  That is what this
+module does, as a function (:func:`repack`) and as the CLI the ROADMAP
+promised::
+
+    python -m repro.repack in.ipc2 out.ipc3 [--verify]
+
+Properties, pinned by ``tests/test_repack.py``:
+
+* the output is a byte-for-byte valid IPC3 archive — in fact identical
+  to what ``Codec(..., version=3)`` would have produced from the same
+  chunking, since both routes feed the same blobs through
+  ``write_v3_archive``;
+* a full read of the output is bit-identical to a full read of the
+  input (``--verify`` checks exactly this before the output is kept);
+* already-v3 inputs are rejected with a clear error rather than
+  silently double-repacked.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from .core.bytesource import as_source
+from .core.container import (MAGIC, MAGIC2, MAGIC3, CorruptArchiveError,
+                             parse_chunked_meta, parse_meta, write_v3_archive)
+
+
+def repack(buf) -> bytes:
+    """Re-lay a v1 or v2 archive's bytes into a v3 container.
+
+    ``buf`` is the complete input archive (bytes-like or a
+    :class:`~repro.core.bytesource.ByteSource`).  The compressed chunk
+    payloads are moved, never re-encoded: a v2 container contributes its
+    chunk extents directly; a v1 archive becomes a single-chunk grid
+    spanning the whole array.  Raises
+    :class:`~repro.core.container.CorruptArchiveError` for malformed
+    input and :class:`ValueError` for an already-v3 archive.
+    """
+    src = as_source(buf)
+    magic = bytes(src.read(0, 4))
+    if magic == MAGIC3:
+        raise ValueError("input is already a plane-major (v3) archive; "
+                         "repack upgrades v1/v2 only")
+    if magic == MAGIC2:
+        meta = parse_chunked_meta(src)
+        bounds = [(c.start, c.stop) for c in meta.chunks]
+        chunk_bufs = [bytes(src.read(c.offset, c.size))
+                      for c in meta.chunks]
+    elif magic == MAGIC:
+        meta = parse_meta(src)
+        if not meta.shape:
+            raise CorruptArchiveError(
+                "cannot repack a 0-dimensional archive: the v3 chunk "
+                "grid slabs along axis 0")
+        bounds = [(0, meta.shape[0])]
+        chunk_bufs = [bytes(src.read(0, src.size))]
+    else:
+        raise CorruptArchiveError(
+            f"not an IPComp archive: expected magic {MAGIC!r} or "
+            f"{MAGIC2!r}, got {magic!r}")
+    return write_v3_archive(meta.shape, meta.dtype, meta.eb, meta.interp,
+                            bounds, chunk_bufs)
+
+
+def _full_read(buf) -> np.ndarray:
+    from .api import Archive, Fidelity
+    return Archive.from_source(buf).open().read(Fidelity.full())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.repack",
+        description="Re-lay a v1/v2 IPComp archive plane-major (IPC3) "
+                    "without re-compression.")
+    ap.add_argument("input", help="path to the v1/v2 archive")
+    ap.add_argument("output", help="path for the v3 archive")
+    ap.add_argument("--verify", action="store_true",
+                    help="decode both archives in full and require "
+                         "bit-identical reconstructions before keeping "
+                         "the output")
+    args = ap.parse_args(argv)
+
+    with open(args.input, "rb") as f:
+        raw = f.read()
+    try:
+        out = repack(raw)
+    except (CorruptArchiveError, ValueError) as e:
+        print(f"repack: {e}", file=sys.stderr)
+        return 2
+    if args.verify:
+        a, b = _full_read(raw), _full_read(out)
+        if a.dtype != b.dtype or a.shape != b.shape \
+                or not np.array_equal(a, b, equal_nan=True):
+            print("repack: verification FAILED — full reads differ; "
+                  "output not written", file=sys.stderr)
+            return 3
+    with open(args.output, "wb") as f:
+        f.write(out)
+    delta = len(out) - len(raw)
+    print(f"{args.input} ({len(raw)} bytes) -> {args.output} "
+          f"({len(out)} bytes, {delta:+d}); "
+          f"{'verified bit-identical' if args.verify else 'not verified'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

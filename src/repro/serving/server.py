@@ -24,7 +24,13 @@ server realizes both:
 
 Requests are isolated: a planner error (e.g. an infeasible
 ``Fidelity.max_bytes``) fails that request with the error message and
-the tick goes on.  Reconstruction bits are identical to a private
+the tick goes on.  Transient transport errors (remote sources timing
+out, resetting, running out of their own wire retries) consume a
+per-request retry budget instead: the request re-queues and re-plans
+from its committed progressive state; when the budget runs out it
+settles ``partial`` at the last fully decoded rung — a bit-exact
+coarser answer with the error recorded — and stays chainable for
+children (``docs/architecture.md`` "Remote retrieval").  Reconstruction bits are identical to a private
 uncached session per request — caching, dedup, and coalescing are
 execution details (pinned by ``tests/test_serve_tier.py`` and the
 ``benchmarks/serve_bench.py`` parity check).
@@ -44,12 +50,27 @@ from ..core.pipeline import decode, spec
 from ..core.pipeline.encode import group_cap
 from ..core.pipeline.state import (ChunkedRetrievalState, RetrievalState,
                                    fork_state)
+from ..core.remote import RemoteProtocolError
 from .cache import PlaneCache
 
 QUEUED = "queued"
 RUNNING = "running"
 DONE = "done"
 FAILED = "failed"
+#: retries exhausted mid-refine, but an earlier rung was fully decoded:
+#: the request settles with that rung's reconstruction, its achieved
+#: ``err_bound``, and the transport error recorded — a degraded answer,
+#: not a poisoned session (children may still refine from it)
+PARTIAL = "partial"
+
+
+def _retryable(exc: BaseException) -> bool:
+    """Transient transport failures are worth re-planning in a later
+    tick: every :class:`OSError` (timeouts, resets, ``RemoteReadError``)
+    except a decisive :class:`RemoteProtocolError`.  Anything else —
+    ``CorruptArchiveError``, planner rejections — is permanent: the same
+    plan would fail the same way."""
+    return isinstance(exc, OSError) and not isinstance(exc, RemoteProtocolError)
 
 
 @dataclass
@@ -64,6 +85,13 @@ class ServeRequest:
     copy of it (forked reader accounting included) and fetches only the
     planes its tighter fidelity adds (Algorithm 2, across requests);
     sibling refinements of one parent are fully independent sessions.
+
+    Transient transport errors re-queue the request for a later tick up
+    to its retry budget (``retry_budget``, defaulting to the server's);
+    an exhausted budget settles the request ``partial`` at its last
+    fully decoded rung — result, achieved ``err_bound``, and the
+    transport error all recorded — or ``failed`` if no rung ever
+    completed.
     """
     req_id: int
     archive_id: str
@@ -77,6 +105,8 @@ class ServeRequest:
     err_bound: float = float("inf")
     submitted_s: float = field(default_factory=time.perf_counter)
     latency_s: float = 0.0
+    retries: int = 0                  # transport retries consumed so far
+    retry_budget: Optional[int] = None  # None -> the server's default
     # session internals (reader + progressive state), server-managed
     _reader: object = None
     _state: object = None
@@ -126,11 +156,14 @@ class RetrievalServer:
 
     def __init__(self, policy: Optional[ExecPolicy] = None,
                  cache: Optional[PlaneCache] = None, coalesce: bool = True,
-                 propagation: str = loader.SAFE):
+                 propagation: str = loader.SAFE, retry_budget: int = 2):
         self.policy = policy if policy is not None else spec.DEFAULT_POLICY
         self.cache = cache
         self.coalesce = coalesce
         self.propagation = propagation
+        #: default transport retries per request (re-queue + re-plan in a
+        #: later tick) before a request degrades to ``partial``/``failed``
+        self.retry_budget = int(retry_budget)
         self.counters: Dict[str, int] = {}
         self.ticks = 0
         self._archives: Dict[str, Archive] = {}
@@ -138,6 +171,9 @@ class RetrievalServer:
         self._next_id = 0
         self._done = 0
         self._failed = 0
+        self._partial = 0
+        self._retries = 0               # lifetime re-queues
+        self._tick_retries = 0          # re-queues in the latest tick
 
     # ---- registry / queue
 
@@ -158,13 +194,16 @@ class RetrievalServer:
 
     def submit(self, archive_id: str, fidelity: Optional[Fidelity] = None,
                propagation: Optional[str] = None,
-               refine_of: Optional[ServeRequest] = None) -> ServeRequest:
+               refine_of: Optional[ServeRequest] = None,
+               retry_budget: Optional[int] = None) -> ServeRequest:
         """Enqueue a retrieval; returns the live :class:`ServeRequest`.
 
         ``refine_of`` chains onto an earlier request for the same
-        archive: once the parent is DONE, the child branches a private
-        copy of its progressive state and fetches only the additional
-        planes.
+        archive: once the parent has settled with a result (DONE, or
+        PARTIAL after degradation), the child branches a private copy of
+        its progressive state and fetches only the additional planes.
+        ``retry_budget`` overrides the server's default transport-retry
+        allowance for this request alone.
         """
         if archive_id not in self._archives:
             raise KeyError(f"unknown archive_id {archive_id!r}; "
@@ -178,7 +217,7 @@ class RetrievalServer:
             fidelity=fidelity if fidelity is not None else Fidelity.full(),
             propagation=propagation if propagation is not None
             else self.propagation,
-            refine_of=refine_of)
+            refine_of=refine_of, retry_budget=retry_budget)
         self._next_id += 1
         self._queue.append(req)
         return req
@@ -192,13 +231,16 @@ class RetrievalServer:
     def _runnable(self) -> Tuple[List[ServeRequest], List[ServeRequest]]:
         """Dequeue requests whose refine parent (if any) has settled.
 
-        Returns ``(ready, failed)``: runnable requests, plus the children
-        of FAILED parents — failed immediately here, and returned so
-        ``run_tick`` reports them as settled this tick."""
+        A PARTIAL parent is chainable: it settled with a complete (if
+        coarser) progressive state, so children branch from its achieved
+        rung — degradation never poisons the chain.  Returns ``(ready,
+        failed)``: runnable requests, plus the children of FAILED
+        parents — failed immediately here, and returned so ``run_tick``
+        reports them as settled this tick."""
         ready, still, failed = [], [], []
         for req in self._queue:
             parent = req.refine_of
-            if parent is None or parent.status == DONE:
+            if parent is None or parent.status in (DONE, PARTIAL):
                 ready.append(req)
             elif parent.status == FAILED:
                 self._fail(req, f"refine parent request {parent.req_id} "
@@ -214,6 +256,66 @@ class RetrievalServer:
         req.error = error
         req.latency_s = time.perf_counter() - req.submitted_s
         self._failed += 1
+
+    def _budget(self, req: ServeRequest) -> int:
+        return self.retry_budget if req.retry_budget is None \
+            else req.retry_budget
+
+    def _settle_partial(self, req: ServeRequest, error: str) -> bool:
+        """Settle ``req`` at its last fully decoded rung, if one exists.
+
+        The committed progressive state (``req._state``) only ever holds
+        rungs whose every chunk assembled — failed reads raise before any
+        state is merged — so if it is complete, its reconstruction is a
+        bit-exact coarser answer.  Returns False when nothing was ever
+        achieved (the caller then fails the request outright)."""
+        st = req._state
+        if st is None or req._reader is None:
+            return False
+        m = req._reader.meta
+        if isinstance(st, ChunkedRetrievalState):
+            if any(cs is None for cs in st.chunk_states):
+                return False
+            out = np.empty(m.shape, np.dtype(m.dtype))
+            for i, cm in enumerate(m.chunks):
+                out[cm.start:cm.stop] = \
+                    st.chunk_states[i].xhat.astype(out.dtype)
+            req.result = out
+        elif getattr(st, "xhat", None) is not None:
+            req.result = st.xhat.astype(np.dtype(m.dtype))
+        else:
+            return False
+        req.err_bound = st.err_bound
+        req.bytes_read = req._reader.bytes_read
+        req.status = PARTIAL
+        req.error = error
+        req.latency_s = time.perf_counter() - req.submitted_s
+        self._partial += 1
+        return True
+
+    def _resolve_failure(self, req: ServeRequest, exc: BaseException,
+                         settled: List[ServeRequest]) -> None:
+        """Route one request's tick failure: re-queue (transient error,
+        budget left), degrade to PARTIAL (budget exhausted, a rung
+        achieved), or FAIL (permanent error / nothing achieved)."""
+        msg = f"{type(exc).__name__}: {exc}"
+        if _retryable(exc):
+            if req.retries < self._budget(req):
+                req.retries += 1
+                req.status = QUEUED
+                req._ladder_t = None
+                self._retries += 1
+                self._tick_retries += 1
+                self._queue.append(req)
+                return
+            if self._settle_partial(
+                    req, f"retry budget exhausted "
+                    f"({req.retries} retries): {msg}"):
+                settled.append(req)
+                return
+            msg = f"retry budget exhausted ({req.retries} retries): {msg}"
+        self._fail(req, msg)
+        settled.append(req)
 
     def _plan_jobs(self, req: ServeRequest) -> List[_Job]:
         """Open/reuse the request's session and plan its chunk jobs.
@@ -278,6 +380,7 @@ class RetrievalServer:
         requests that settled (DONE or FAILED) this tick.
         """
         self.ticks += 1
+        self._tick_retries = 0
         ready, settled = self._runnable()
         groups: Dict[tuple, List[_Job]] = {}
         by_req: Dict[int, List[_Job]] = {}
@@ -285,9 +388,11 @@ class RetrievalServer:
             req.status = RUNNING
             try:
                 jobs = self._plan_jobs(req)
-            except Exception as e:  # planner rejection: isolate to request
-                self._fail(req, f"{type(e).__name__}: {e}")
-                settled.append(req)
+            except Exception as e:
+                # planner rejection or a transport error while staging
+                # the ladder prefix: isolate to this request — retry,
+                # degrade, or fail per _resolve_failure
+                self._resolve_failure(req, e, settled)
                 continue
             by_req[req.req_id] = jobs
             for job in jobs:
@@ -310,24 +415,40 @@ class RetrievalServer:
                                                      encode=False)
             except Exception as e:
                 for job in jobs:
-                    if job.req.status != FAILED:
+                    if job.req.status == RUNNING:
                         self._fail(job.req, f"{type(e).__name__}: {e}")
                         settled.append(job.req)
                 continue
             ctx = ctxs[chunked]
             cap = group_cap(ctx.mesh)
             for lo in range(0, len(jobs), cap):
-                part = jobs[lo:lo + cap]
-                # requests sharing a group share a propagation (in sig)
-                sts = decode.decode_group(
-                    [j.sub_reader for j in part],
-                    [j.prior_state for j in part],
-                    [j.keep_planes for j in part],
-                    ctx, prop, cache=self.cache, counters=self.counters)
+                # a request resolved by an earlier failing slice drops
+                # out of later slices: its jobs will be re-planned (or
+                # never run) — decoding them now would waste the launch
+                part = [j for j in jobs[lo:lo + cap]
+                        if j.req.status == RUNNING]
+                if not part:
+                    continue
+                try:
+                    # requests sharing a group share a propagation (in sig)
+                    sts = decode.decode_group(
+                        [j.sub_reader for j in part],
+                        [j.prior_state for j in part],
+                        [j.keep_planes for j in part],
+                        ctx, prop, cache=self.cache, counters=self.counters)
+                except Exception as e:
+                    # a mid-group fetch failure aborts the whole slice:
+                    # every owning request resolves (retry/degrade/fail)
+                    # — committed states are untouched, since failed
+                    # reads raise before any accounting or state merge
+                    for r in {j.req.req_id: j.req for j in part}.values():
+                        if r.status == RUNNING:
+                            self._resolve_failure(r, e, settled)
+                    continue
                 for job, st in zip(part, sts):
                     job.new_state = st
         for req in ready:
-            if req.status == FAILED:
+            if req.status != RUNNING:
                 continue
             self._assemble(req, by_req[req.req_id])
             settled.append(req)
@@ -377,7 +498,10 @@ class RetrievalServer:
                     f"drain exceeded {max_ticks} ticks with "
                     f"{len(self._queue)} requests still queued")
             progressed = self.run_tick()
-            if not progressed and self._queue:
+            # a tick that only re-queued transport retries is progress
+            # (the budget bounds it); zero settlements AND zero retries
+            # with a non-empty queue is a real dependency deadlock
+            if not progressed and not self._tick_retries and self._queue:
                 raise RuntimeError(
                     "scheduler stalled: queued requests have unsatisfied "
                     "refine dependencies")
@@ -393,6 +517,9 @@ class RetrievalServer:
             "pending": len(self._queue),
             "done": self._done,
             "failed": self._failed,
+            "partial": self._partial,
+            "retries": self._retries,
+            "retry_budget": self.retry_budget,
             "coalesce": self.coalesce,
             "counters": dict(self.counters),
             "archives": len(self._archives),
@@ -404,4 +531,5 @@ class RetrievalServer:
     def __repr__(self) -> str:
         return (f"RetrievalServer({len(self._archives)} archives, "
                 f"{len(self._queue)} queued, {self._done} done, "
-                f"{self._failed} failed, coalesce={self.coalesce})")
+                f"{self._partial} partial, {self._failed} failed, "
+                f"coalesce={self.coalesce})")

@@ -1,0 +1,223 @@
+"""In-process HTTP range server with a scripted fault schedule.
+
+The network-lane test harness: a ``ThreadingHTTPServer`` on a loopback
+ephemeral port serving ONE byte payload with real HTTP/1.1 semantics —
+``HEAD`` (Content-Length), ``GET`` with ``Range`` (206 + Content-Range),
+``GET`` without (200 full body) — so ``HTTPSource`` is exercised over an
+actual socket, not a mock.
+
+Faults are scripted per GET index (HEADs don't consume indices), making
+every retry path deterministic:
+
+* ``drop``       — close the connection without any response;
+* ``truncate``   — send honest 206 headers, then only ``arg`` body bytes;
+* ``stall``      — sleep ``arg`` seconds before responding (client
+                   timeouts fire; keep ``arg`` > the client timeout);
+* ``status``     — respond ``arg`` (e.g. 500/503) with an empty body;
+* ``ignore_range`` — answer 200 with the full body as if ``Range`` were
+                   never sent.
+
+``server.log`` records every request as ``(method, range | None)`` —
+the ground truth behind "exactly one Range request per rung" — and
+``server.stop()`` + ``RangeHTTPServer(payload, port=old_port)`` models
+a server restart on the same port mid-ladder (``allow_reuse_address``
+makes the rebind immediate).
+
+Usage::
+
+    with serve(payload, faults=[ServerFault("drop", at=2)]) as srv:
+        src = HTTPSource(srv.url, timeout=0.5, backoff=0.01)
+        ...
+        assert [r for m, r in srv.log if m == "GET"] == [...]
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import List, Optional, Tuple
+
+
+@dataclass
+class ServerFault:
+    """One scripted server-side fault, firing on GET number ``at``
+    (0-based, in arrival order); ``persist=True`` fires from ``at``
+    onward (a server that stays broken)."""
+    kind: str                    # drop | truncate | stall | status | ignore_range
+    at: int
+    arg: Optional[float] = None  # truncate: body bytes; stall: secs; status: code
+    persist: bool = False
+
+    def __post_init__(self):
+        kinds = ("drop", "truncate", "stall", "status", "ignore_range")
+        if self.kind not in kinds:
+            raise ValueError(f"unknown server fault kind {self.kind!r}")
+
+
+class RangeHTTPServer:
+    """Threaded loopback range server over one immutable payload."""
+
+    def __init__(self, payload: bytes,
+                 faults: Optional[List[ServerFault]] = None, port: int = 0):
+        self.payload = bytes(payload)
+        self.faults: List[ServerFault] = list(faults or [])
+        self.log: List[Tuple[str, Optional[Tuple[int, int]]]] = []
+        self._gets = 0
+        self._lock = threading.Lock()
+        owner = self
+
+        class Handler(BaseHTTPRequestHandler):
+            protocol_version = "HTTP/1.1"
+
+            def log_message(self, *a):  # keep pytest output clean
+                pass
+
+            def do_HEAD(self):
+                with owner._lock:
+                    owner.log.append(("HEAD", None))
+                self.send_response(200)
+                self.send_header("Accept-Ranges", "bytes")
+                self.send_header("Content-Length", str(len(owner.payload)))
+                self.end_headers()
+
+            def do_GET(self):
+                rng = self._parse_range()
+                with owner._lock:
+                    owner.log.append(("GET", rng))
+                    idx = owner._gets
+                    owner._gets += 1
+                    fault = next(
+                        (f for f in owner.faults
+                         if f.at == idx or (f.persist and idx >= f.at)),
+                        None)
+                if fault is not None and fault.kind == "stall":
+                    time.sleep(1.0 if fault.arg is None else fault.arg)
+                    fault = None  # then answer normally
+                if fault is not None:
+                    return self._apply_fault(fault, rng)
+                if rng is None:
+                    return self._send_full()
+                return self._send_range(*rng)
+
+            # ---- plumbing
+
+            def _parse_range(self):
+                h = self.headers.get("Range", "")
+                if not h.startswith("bytes="):
+                    return None
+                lo, _, hi = h[len("bytes="):].partition("-")
+                try:
+                    start = int(lo)
+                    end = int(hi) if hi else len(owner.payload) - 1
+                except ValueError:
+                    return None
+                return (start, end)
+
+            def _send_full(self):
+                body = owner.payload
+                self.send_response(200)
+                self.send_header("Accept-Ranges", "bytes")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def _send_range(self, start, end):
+                total = len(owner.payload)
+                if start >= total:
+                    self.send_response(416)
+                    self.send_header("Content-Range", f"bytes */{total}")
+                    self.send_header("Content-Length", "0")
+                    self.end_headers()
+                    return
+                end = min(end, total - 1)
+                body = owner.payload[start: end + 1]
+                self.send_response(206)
+                self.send_header("Content-Range",
+                                 f"bytes {start}-{end}/{total}")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def _apply_fault(self, fault, rng):
+                if fault.kind == "drop":
+                    # no response at all: the client sees a reset/empty
+                    # status line and classifies it retryable
+                    self.close_connection = True
+                    try:
+                        self.connection.close()
+                    except OSError:
+                        pass
+                    return
+                if fault.kind == "status":
+                    code = int(500 if fault.arg is None else fault.arg)
+                    self.send_response(code)
+                    self.send_header("Content-Length", "0")
+                    self.end_headers()
+                    return
+                if fault.kind == "ignore_range":
+                    return self._send_full()
+                # truncate: honest headers, short body, dead connection
+                total = len(owner.payload)
+                start, end = rng if rng else (0, total - 1)
+                end = min(end, total - 1)
+                body = owner.payload[start: end + 1]
+                keep = int(len(body) // 2 if fault.arg is None else fault.arg)
+                self.send_response(206 if rng else 200)
+                if rng:
+                    self.send_header("Content-Range",
+                                     f"bytes {start}-{end}/{total}")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body[:keep])
+                self.close_connection = True
+                try:
+                    self.connection.close()
+                except OSError:
+                    pass
+
+        class _QuietServer(ThreadingHTTPServer):
+            daemon_threads = True
+
+            def handle_error(self, request, client_address):
+                # injected stalls/timeouts make clients hang up mid-write
+                # by design; the default handler would spam tracebacks
+                pass
+
+        self._httpd = _QuietServer(("127.0.0.1", port), Handler)
+        self.port = self._httpd.server_address[1]
+        self.url = f"http://127.0.0.1:{self.port}/archive"
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name=f"range-server:{self.port}",
+                                        daemon=True)
+        self._thread.start()
+
+    @property
+    def n_gets(self) -> int:
+        with self._lock:
+            return self._gets
+
+    def get_ranges(self) -> List[Optional[Tuple[int, int]]]:
+        """The Range tuples of every GET so far, in arrival order."""
+        with self._lock:
+            return [r for m, r in self.log if m == "GET"]
+
+    def stop(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)
+
+
+class serve:
+    """Context manager: ``with serve(payload, faults=...) as srv``."""
+
+    def __init__(self, payload: bytes,
+                 faults: Optional[List[ServerFault]] = None, port: int = 0):
+        self._args = (payload, faults, port)
+
+    def __enter__(self) -> RangeHTTPServer:
+        self.server = RangeHTTPServer(*self._args)
+        return self.server
+
+    def __exit__(self, *exc) -> None:
+        self.server.stop()

@@ -116,6 +116,41 @@ def test_counting_wraps_any_source(tmp_path):
     cs.close()                                        # forwards to inner
 
 
+def test_range_log_is_thread_safe():
+    """Concurrent readers (the serving tier's shared-archive case) must
+    not lose or tear log appends: list.append is atomic under CPython,
+    but the metric snapshots iterate the list while writers append — the
+    log takes a lock so both sides see a consistent sequence."""
+    import threading
+
+    cs = CountingSource(PAYLOAD)
+    N_THREADS, N_READS = 8, 400
+    errors = []
+
+    def reader(tid):
+        try:
+            for i in range(N_READS):
+                off = (tid * N_READS + i) % (len(PAYLOAD) - 8)
+                assert bytes(cs.read(off, 8)) == PAYLOAD[off:off + 8]
+                # exercise the snapshotting metrics concurrently with
+                # the appends — this is what used to race
+                cs.coalesced()
+                cs.monotone()
+                assert cs.bytes_requested >= 8
+        except Exception as e:                        # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader, args=(t,))
+               for t in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    assert cs.n_requests == N_THREADS * N_READS       # no lost appends
+    assert cs.bytes_requested == N_THREADS * N_READS * 8
+
+
 # ---------------------------------------------------------------- windows
 
 def test_window_forwards_absolute_offsets():

@@ -161,6 +161,58 @@ def test_v3_rejects_duplicate_segment_identity():
         Archive(_remutate(buf, container.MAGIC3, dup))
 
 
+# --------------------------------------------------- short-read matrix
+# A source that stops producing bytes at position ``cut`` — the remote
+# analogue of a truncated file or an object whose tail was never
+# written.  It still *claims* the full size, so only the read path can
+# notice.  Every framing boundary must surface the short read as
+# CorruptArchiveError, never as struct/json noise or silently wrong
+# data.
+
+class _CutSource(container.ByteSource):
+    def __init__(self, buf, cut):
+        self.buf, self.cut = buf, cut
+
+    def read(self, offset, size, tag=None):
+        return self.buf[offset:min(offset + size, self.cut)]
+
+    @property
+    def size(self):
+        return len(self.buf)
+
+
+def _cuts(buf):
+    """Cut positions hitting each framing boundary: mid-magic,
+    mid-header-length, mid-header JSON, first data byte, mid-data,
+    last byte."""
+    (hlen,) = struct.unpack("<I", buf[4:8])
+    he = 8 + hlen
+    return {"magic": 2, "hlen": 6, "header": 8 + hlen // 2,
+            "data-start": he, "data-mid": (he + len(buf)) // 2,
+            "last-byte": len(buf) - 1}
+
+
+@pytest.mark.parametrize("make", [_v1_buf, _v2_buf, _v3_buf],
+                         ids=["v1", "v2", "v3"])
+@pytest.mark.parametrize("where", ["magic", "hlen", "header", "data-start",
+                                   "data-mid", "last-byte"])
+def test_short_read_surfaces_as_corrupt_archive(make, where):
+    buf = make()
+    src = _CutSource(buf, _cuts(buf)[where])
+    with pytest.raises(CorruptArchiveError):
+        Archive.from_source(src).open().read()
+
+
+@pytest.mark.parametrize("make", [_v1_buf, _v2_buf, _v3_buf],
+                         ids=["v1", "v2", "v3"])
+def test_cut_past_end_is_harmless(make):
+    """The guard rejects short reads, not sources: a cut at EOF never
+    fires and the archive decodes normally."""
+    buf = make()
+    out = Archive.from_source(_CutSource(buf, len(buf))).open().read()
+    assert np.abs(out - X).max() <= 1e-4
+
+
 # ------------------------------------------- unchanged archives still parse
 
 @pytest.mark.parametrize("make", [_v1_buf, _v2_buf, _v3_buf],

@@ -1,0 +1,159 @@
+"""FaultInjectingSource unit contract + the no-wrong-bytes property.
+
+The property half is the point of the harness (ISSUE 9 satellite):
+*random* fault schedules hammered against the full decode pipeline must
+never yield a wrong-bytes reconstruction — every outcome is either
+correct data (the fidelity's bound holds) or a raised /
+structured-``partial`` failure.  Runs under real hypothesis when
+installed, else the vendored shim.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+from _fields import smooth_field
+from repro.api import Archive, Codec, CorruptArchiveError, Fidelity
+from repro.core.bytesource import BufferSource
+from repro.core.faults import Fault, FaultInjectingSource
+
+X = smooth_field((48, 32), seed=11)
+EB = 1e-4
+V3 = Codec(eb=EB, chunk_elems=512, version=3).compress(X).tobytes()
+V2 = Codec(eb=EB, chunk_elems=512).compress(X).tobytes()
+V1 = Codec(eb=EB).compress(X).tobytes()
+
+_no_sleep = lambda s: None  # noqa: E731  — stalls cost zero wall clock
+
+
+# ----------------------------------------------------------- unit contract
+
+def test_passthrough_is_byte_identical():
+    fif = FaultInjectingSource(V3)
+    assert bytes(fif.read(0, 64)) == V3[:64]
+    assert fif.size == len(V3)
+    assert fif.calls == 1 and fif.fired == []
+
+
+def test_error_fault_fires_once_at_index():
+    fif = FaultInjectingSource(V3, schedule=[Fault("error", at=1)])
+    fif.read(0, 4)
+    with pytest.raises(ConnectionError, match="injected"):
+        fif.read(4, 4)
+    assert bytes(fif.read(4, 4)) == V3[4:8]        # next call is clean
+    assert [f.kind for f in fif.fired] == ["error"]
+
+
+def test_persistent_fault_stays_down():
+    fif = FaultInjectingSource(V3, schedule=[Fault("error", at=2,
+                                                   persist=True)])
+    fif.read(0, 4)
+    fif.read(4, 4)
+    for _ in range(3):
+        with pytest.raises(ConnectionError):
+            fif.read(8, 4)
+
+
+def test_truncate_fault_returns_short():
+    fif = FaultInjectingSource(V3, schedule=[Fault("truncate", at=0, arg=3)])
+    assert bytes(fif.read(0, 10)) == V3[:3]
+
+
+def test_stall_fault_sleeps_then_succeeds():
+    slept = []
+    fif = FaultInjectingSource(V3, sleep=slept.append,
+                               schedule=[Fault("stall", at=0, arg=0.5)])
+    assert bytes(fif.read(0, 8)) == V3[:8]
+    assert slept == [0.5]
+
+
+def test_arm_resolves_to_next_call():
+    fif = FaultInjectingSource(V3)
+    fif.read(0, 4)
+    f = fif.arm(Fault("error"))
+    assert f.at == 1
+    with pytest.raises(ConnectionError):
+        fif.read(4, 4)
+
+
+def test_schedule_requires_explicit_index():
+    with pytest.raises(ValueError, match="at"):
+        FaultInjectingSource(V3, schedule=[Fault("error")])
+    with pytest.raises(ValueError, match="kind"):
+        Fault("explode")
+
+
+# ------------------------------------------------- short-read => corrupt
+
+@pytest.mark.parametrize("buf", [V1, V2, V3], ids=["v1", "v2", "v3"])
+def test_persistent_truncation_surfaces_as_corrupt_archive(buf):
+    """A source that always returns short must surface as
+    CorruptArchiveError at some boundary — never as struct/json noise,
+    never as garbage data."""
+    fif = FaultInjectingSource(
+        buf, schedule=[Fault("truncate", at=0, arg=2, persist=True)])
+    with pytest.raises(CorruptArchiveError):
+        Archive.from_source(fif).open().read()
+
+
+# -------------------------------------------------- the no-wrong-bytes law
+
+def _outcome(buf, schedule, fidelity):
+    """Run one retrieval through a faulted source; classify the result."""
+    fif = FaultInjectingSource(BufferSource(buf), schedule=schedule,
+                               sleep=_no_sleep)
+    try:
+        out = Archive.from_source(fif).open().read(fidelity)
+    except (OSError, CorruptArchiveError, ValueError) as e:
+        return ("raised", type(e).__name__, fif)
+    return ("data", out, fif)
+
+
+@settings(max_examples=25)
+@given(
+    st.sampled_from(["v1", "v2", "v3"]),
+    st.lists(st.sampled_from(["error", "truncate", "stall"]),
+             min_size=0, max_size=6),
+    st.lists(st.integers(0, 40), min_size=6, max_size=6),
+    st.integers(0, 2),
+)
+def test_random_fault_schedules_never_yield_wrong_bytes(
+        version, kinds, positions, e_idx):
+    """THE invariant: any schedule of errors/truncations/stalls produces
+    either a reconstruction honoring the requested bound, or a raised
+    failure — silent corruption is impossible."""
+    buf = {"v1": V1, "v2": V2, "v3": V3}[version]
+    E = [1e-1, 1e-3, EB][e_idx]
+    schedule = [Fault(k, at=p, arg=2 if k == "truncate" else 0)
+                for k, p in zip(kinds, positions)]
+    kind, payload, fif = _outcome(buf, schedule, Fidelity.error_bound(E))
+    if kind == "data":
+        assert np.abs(payload - X).max() <= E, \
+            f"wrong bytes past {len(fif.fired)} faults: {schedule}"
+    # "raised" is always acceptable — never wrong data
+
+
+@settings(max_examples=10)
+@given(
+    st.lists(st.integers(0, 60), min_size=1, max_size=4),
+)
+def test_random_faults_in_refine_chain_never_corrupt(positions):
+    """Faults landing mid-ladder: every successful rung of a refine
+    chain still honors its bound, whatever failed before it."""
+    fif = FaultInjectingSource(
+        BufferSource(V3),
+        schedule=[Fault("error", at=p) for p in positions],
+        sleep=_no_sleep)
+    try:
+        session = Archive.from_source(fif).open()
+    except (OSError, CorruptArchiveError):
+        return
+    for E in (1e-1, 1e-2, 1e-3, EB):
+        try:
+            out = session.read(Fidelity.error_bound(E))
+        except (OSError, CorruptArchiveError):
+            continue
+        assert np.abs(out - X).max() <= E

@@ -1,0 +1,101 @@
+"""The v2 -> v3 repack path: byte-identity, bit parity, and the CLI
+(ISSUE 9 tentpole d; ROADMAP item 5 residual).
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro.api import Archive, Codec, CorruptArchiveError, Fidelity
+from repro.repack import main, repack
+
+X = smooth_field((60, 40), seed=7)
+EB = 1e-5
+V2 = Codec(eb=EB, chunk_elems=600).compress(X).tobytes()
+V3 = Codec(eb=EB, chunk_elems=600, version=3).compress(X).tobytes()
+V1 = Codec(eb=EB).compress(X).tobytes()
+
+
+def test_repack_v2_is_byte_identical_to_native_v3():
+    """repack moves blobs through the same write_v3_archive the encoder
+    uses: given the same chunking, the outputs are the same bytes."""
+    assert repack(V2) == V3
+
+
+def test_repack_output_is_valid_v3_with_bit_identical_full_read():
+    out = repack(V2)
+    a = Archive.frombytes(out)                    # parses + validates
+    assert a.version == 3 and a.n_chunks == Archive.frombytes(V2).n_chunks
+    assert np.array_equal(a.open().read(Fidelity.full()),
+                          Archive.frombytes(V2).open().read(Fidelity.full()))
+
+
+def test_repack_v1_single_chunk_grid():
+    out = repack(V1)
+    a = Archive.frombytes(out)
+    assert a.version == 3 and a.n_chunks == 1
+    assert np.array_equal(a.open().read(Fidelity.full()),
+                          Archive.frombytes(V1).open().read(Fidelity.full()))
+
+
+def test_repacked_archive_ladders_monotone():
+    """The upgraded layout delivers the v3 access pattern, not just v3
+    framing."""
+    from repro.core.bytesource import CountingSource
+    cs = CountingSource(repack(V2))
+    s = Archive.from_source(cs).open()
+    he = Archive.frombytes(repack(V2))._meta.header_end
+    for E in (1e-1, 1e-2, 1e-3, 1e-4):
+        out = s.read(Fidelity.error_bound(E))
+        assert np.abs(out - X).max() <= E
+    assert cs.monotone()
+    data = [r for r in cs.requests if r[0] >= he]
+    runs = CountingSource(b"")
+    runs.requests = data
+    assert len(runs.coalesced()) == 1
+
+
+def test_repack_rejects_v3_input():
+    with pytest.raises(ValueError, match="already"):
+        repack(V3)
+
+
+def test_repack_rejects_garbage():
+    with pytest.raises(CorruptArchiveError):
+        repack(b"NOPE" + bytes(64))
+    with pytest.raises(CorruptArchiveError):
+        repack(V2[:40])                            # truncated header
+
+
+# ----------------------------------------------------------------- the CLI
+
+def test_cli_roundtrip(tmp_path: Path):
+    src, dst = tmp_path / "in.ipc2", tmp_path / "out.ipc3"
+    src.write_bytes(V2)
+    assert main([str(src), str(dst), "--verify"]) == 0
+    assert dst.read_bytes() == V3
+
+
+def test_cli_rejects_bad_input(tmp_path: Path, capsys):
+    src, dst = tmp_path / "in.ipc3", tmp_path / "out.ipc3"
+    src.write_bytes(V3)
+    assert main([str(src), str(dst)]) == 2
+    assert not dst.exists()
+    assert "already" in capsys.readouterr().err
+
+
+def test_cli_module_entrypoint(tmp_path: Path):
+    """`python -m repro.repack` works as documented."""
+    src, dst = tmp_path / "in.ipc2", tmp_path / "out.ipc3"
+    src.write_bytes(V2)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.repack", str(src), str(dst)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(Path(__file__).resolve().parents[1] / "src"),
+             "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert proc.returncode == 0, proc.stderr
+    assert dst.read_bytes() == V3
+    assert "->" in proc.stdout

@@ -1,0 +1,205 @@
+"""Serving-tier graceful degradation: retry budget, PARTIAL settlement,
+and non-poisoned refine chains (ISSUE 9 tentpole c).
+
+The contract pinned here: transient transport failures consume a
+per-request retry budget and re-plan from committed state; an exhausted
+budget settles the request ``partial`` at its last fully decoded rung —
+bit-exact, bound-honest, chainable — and permanent errors (corruption,
+planner rejections) still fail immediately.
+"""
+import numpy as np
+import pytest
+
+from _fields import smooth_field
+from repro.api import Archive, Codec, Fidelity
+from repro.core.faults import Fault, FaultInjectingSource
+from repro.serving.server import (DONE, FAILED, PARTIAL, RetrievalServer,
+                                  _retryable)
+from repro.core.remote import (RemoteProtocolError, RemoteReadError)
+
+X = smooth_field((60, 40), seed=7)
+EB = 1e-5
+V3 = Codec(eb=EB, chunk_elems=600, version=3).compress(X).tobytes()
+V2 = Codec(eb=EB, chunk_elems=600).compress(X).tobytes()
+
+_no_sleep = lambda s: None  # noqa: E731
+
+
+def _server(buf, archive_id="a", **kw):
+    fif = FaultInjectingSource(buf, sleep=_no_sleep)
+    srv = RetrievalServer(**kw)
+    srv.add_archive(archive_id, Archive.from_source(fif))
+    return srv, fif
+
+
+# ---------------------------------------------------------- classification
+
+def test_retryable_classification():
+    assert _retryable(ConnectionError("reset"))
+    assert _retryable(TimeoutError())
+    assert _retryable(RemoteReadError("out of retries"))
+    assert not _retryable(RemoteProtocolError("HTTP 404"))
+    assert not _retryable(ValueError("planner says no"))
+
+
+# ------------------------------------------------------------ retry paths
+
+def test_transient_fault_retries_to_done():
+    srv, fif = _server(V3, retry_budget=2)
+    fif.arm(Fault("error"))                       # one-shot, first read
+    req = srv.submit("a", Fidelity.error_bound(1e-3))
+    srv.drain()
+    assert req.status == DONE and req.retries == 1
+    assert np.abs(req.result - X).max() <= 1e-3
+    assert srv.stats()["retries"] == 1 and srv.stats()["partial"] == 0
+
+
+def test_retry_replans_from_committed_state():
+    """A fault mid-refine must not lose the rungs already committed: the
+    retry re-plans from ladder_pos, and the final bits match a fault-free
+    session stepping the same rungs."""
+    ref = Archive.frombytes(V3).open()
+    srv, fif = _server(V3, retry_budget=3)
+    parent = srv.submit("a", Fidelity.error_bound(1e-1))
+    srv.drain()
+    ref.read(Fidelity.error_bound(1e-1))
+    fif.arm(Fault("error"))                       # breaks the refine once
+    child = srv.submit("a", Fidelity.error_bound(1e-4), refine_of=parent)
+    srv.drain()
+    assert child.status == DONE and child.retries == 1
+    assert np.array_equal(child.result, ref.read(Fidelity.error_bound(1e-4)))
+
+
+def test_exhausted_budget_settles_partial_at_last_rung():
+    srv, fif = _server(V3, retry_budget=2)
+    parent = srv.submit("a", Fidelity.error_bound(1e-1))
+    srv.drain()
+    assert parent.status == DONE
+    fif.arm(Fault("error", persist=True))         # source goes dark
+    child = srv.submit("a", Fidelity.error_bound(1e-4), refine_of=parent)
+    srv.drain()
+    assert child.status == PARTIAL
+    assert child.retries == 2
+    assert "retry budget exhausted" in child.error
+    # settled at the parent's rung: same bits, same honest bound
+    assert np.array_equal(child.result, parent.result)
+    assert child.err_bound == parent.err_bound
+    assert np.abs(child.result - X).max() <= child.err_bound
+    assert srv.stats()["partial"] == 1
+
+
+def test_fresh_request_with_no_rung_fails_outright():
+    """Nothing achieved -> FAILED, not a bogus empty partial."""
+    srv, fif = _server(V3, retry_budget=1)
+    fif.arm(Fault("error", persist=True))
+    req = srv.submit("a", Fidelity.error_bound(1e-2))
+    srv.drain()
+    assert req.status == FAILED
+    assert req.result is None
+    assert "retry budget exhausted" in req.error
+
+
+def test_partial_parent_is_chainable():
+    """Degradation never poisons the chain: children refine from the
+    partial parent's achieved rung once the source heals."""
+    srv, fif = _server(V3, retry_budget=1)
+    parent = srv.submit("a", Fidelity.error_bound(1e-1))
+    srv.drain()
+    fif.arm(Fault("error", persist=True))
+    mid = srv.submit("a", Fidelity.error_bound(1e-4), refine_of=parent)
+    srv.drain()
+    assert mid.status == PARTIAL
+    fif.schedule.clear()                          # source heals
+    child = srv.submit("a", Fidelity.error_bound(1e-4), refine_of=mid)
+    srv.drain()
+    assert child.status == DONE
+    assert np.abs(child.result - X).max() <= 1e-4
+    assert child.bytes_read >= mid.bytes_read
+
+
+def test_failed_parent_still_fails_children():
+    srv, fif = _server(V3, retry_budget=0)
+    fif.arm(Fault("error", persist=True))
+    parent = srv.submit("a", Fidelity.error_bound(1e-2))
+    child = srv.submit("a", Fidelity.error_bound(1e-4), refine_of=parent)
+    srv.drain()
+    assert parent.status == FAILED
+    assert child.status == FAILED and "refine parent" in child.error
+
+
+def test_permanent_errors_do_not_consume_retries():
+    """Planner rejections fail immediately, budget untouched."""
+    srv, _ = _server(V3, retry_budget=5)
+    req = srv.submit("a", Fidelity.error_bound(EB / 100))  # below archive eb
+    srv.drain()
+    assert req.status == FAILED and req.retries == 0
+    assert srv.stats()["retries"] == 0
+
+
+def test_per_request_budget_overrides_server_default():
+    srv, fif = _server(V3, retry_budget=5)
+    fif.arm(Fault("error", persist=True))
+    req = srv.submit("a", Fidelity.error_bound(1e-2), retry_budget=1)
+    srv.drain()
+    assert req.status == FAILED and req.retries == 1
+
+
+def test_v2_transient_fault_also_retries():
+    """The budget covers v2's scattered per-chunk reads too (faults fire
+    inside decode_group, not prefix staging)."""
+    srv, fif = _server(V2, retry_budget=2)
+    fif.arm(Fault("error"))
+    req = srv.submit("a", Fidelity.error_bound(1e-3))
+    srv.drain()
+    assert req.status == DONE and req.retries == 1
+    assert np.abs(req.result - X).max() <= 1e-3
+
+
+def test_faulty_request_does_not_disturb_neighbors():
+    """Tick isolation: a request driven partial by its source leaves
+    same-tick requests on a healthy archive untouched."""
+    good = FaultInjectingSource(V3, sleep=_no_sleep)
+    bad = FaultInjectingSource(V3, sleep=_no_sleep)
+    srv = RetrievalServer(retry_budget=1)
+    srv.add_archive("good", Archive.from_source(good))
+    srv.add_archive("bad", Archive.from_source(bad))
+    bad.arm(Fault("error", persist=True))
+    r_bad = srv.submit("bad", Fidelity.error_bound(1e-3))
+    r_good = srv.submit("good", Fidelity.error_bound(1e-3))
+    srv.drain()
+    assert r_good.status == DONE
+    assert np.abs(r_good.result - X).max() <= 1e-3
+    assert r_bad.status == FAILED
+
+
+def test_drain_counts_retry_ticks_as_progress():
+    """A tick that only re-queues retries must not trip the stall guard."""
+    srv, fif = _server(V3, retry_budget=3)
+    fif.arm(Fault("error", at=0, persist=True))
+    req = srv.submit("a", Fidelity.error_bound(1e-2))
+    settled = srv.drain()                          # no RuntimeError
+    assert [r.req_id for r in settled] == [req.req_id]
+    assert srv.ticks == 4                          # 1 first try + 3 retries
+
+
+def test_stats_and_repr_surface_degradation():
+    srv, fif = _server(V3, retry_budget=0)
+    fif.arm(Fault("error", persist=True))
+    srv.submit("a", Fidelity.error_bound(1e-2))
+    srv.drain()
+    s = srv.stats()
+    assert s["failed"] == 1 and s["retry_budget"] == 0
+    assert "partial" in repr(srv)
+
+
+def test_pipeline_truncation_is_permanent():
+    """A truncating source is corruption, not a transient: no retry."""
+    srv, fif = _server(V3, retry_budget=5)
+    parent = srv.submit("a", Fidelity.error_bound(1e-1))
+    srv.drain()
+    assert parent.status == DONE
+    fif.arm(Fault("truncate", arg=1, persist=True))
+    child = srv.submit("a", Fidelity.error_bound(1e-4), refine_of=parent)
+    srv.drain()
+    assert child.status == FAILED and child.retries == 0
+    assert "CorruptArchiveError" in child.error
