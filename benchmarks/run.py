@@ -19,15 +19,15 @@ from __future__ import annotations
 import argparse
 import sys
 
-from . import (backend_speed, fig5_ratio, fig6_retrieval, fig7_bitrate,
-               fig8_speed, fig10_psnr, serve_bench, table2_entropy,
-               grad_compress_bench)
+from . import (backend_speed, ckpt_bench, fig5_ratio, fig6_retrieval,
+               fig7_bitrate, fig8_speed, fig10_psnr, serve_bench,
+               table2_entropy, grad_compress_bench)
 
 MODULES = {
     "fig5": fig5_ratio, "fig6": fig6_retrieval, "fig7": fig7_bitrate,
     "fig8": fig8_speed, "fig10": fig10_psnr, "table2": table2_entropy,
     "grad_compress": grad_compress_bench, "backend_speed": backend_speed,
-    "serve": serve_bench,
+    "serve": serve_bench, "ckpt": ckpt_bench,
 }
 
 

@@ -8,6 +8,7 @@ config (use on accelerators; same code path).
   PYTHONPATH=src python examples/train_e2e.py --steps 120
 """
 import argparse
+import shutil
 import subprocess
 import sys
 
@@ -17,11 +18,14 @@ def main():
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
+    # fresh run: a leftover dir from an aborted run would resume mid-way
+    shutil.rmtree("/tmp/repro_e2e_ckpt", ignore_errors=True)
     cmd = [sys.executable, "-m", "repro.launch.train",
            "--arch", "smollm-360m", "--steps", str(args.steps),
            "--seq", "128", "--batch", "8",
            "--ckpt-every", str(max(10, args.steps // 4)),
            "--fail-at", str(args.steps // 2),
+           "--progressive-restore",
            "--ckpt-dir", "/tmp/repro_e2e_ckpt"]
     if not args.full:
         cmd.append("--reduced")

@@ -1,5 +1,9 @@
-from .store import (CheckpointManager, save_checkpoint, restore_checkpoint,
-                    progressive_restore)
+from .bundle import Bundle, LeafSpec, write_bundle
+from .restore import RestoreSession, read_full
+from .store import (CheckpointManager, latest_step, progressive_restore,
+                    restore_checkpoint, save_checkpoint, step_path)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
-           "progressive_restore"]
+__all__ = ["Bundle", "CheckpointManager", "LeafSpec", "RestoreSession",
+           "latest_step", "progressive_restore", "read_full",
+           "restore_checkpoint", "save_checkpoint", "step_path",
+           "write_bundle"]

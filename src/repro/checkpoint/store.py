@@ -1,39 +1,51 @@
 """Progressive checkpointing — the paper's technique as a first-class
 training-infrastructure feature.
 
-Every parameter leaf is an IPComp archive (error-bounded, bitplane-
-progressive).  Restart paths:
+A checkpoint step is ONE bundle file (``checkpoint.bundle``): a
+manifest-indexed directory of per-leaf IPC3 plane-major archives, so a
+coarse restore reads one contiguous range per leaf prefix and a refine
+extends each range monotonically.  Restart paths:
 
-  * ``restore_checkpoint``       — full precision (error <= eb everywhere).
-  * ``progressive_restore``      — coarse-first: load only the bitplanes
-    needed for a requested weight error bound, start stepping immediately,
-    refine in the background (Algorithm 2) touching ONLY the missing planes.
-    At 1000-node scale this turns a cold restart's all-hosts-read-everything
-    storm into a small fraction of the bytes (measured in the benchmarks).
+  * ``restore_checkpoint``  — full precision (error <= eb everywhere),
+    every leaf blob sha-verified on read.
+  * ``progressive_restore`` / ``CheckpointManager.restore_progressive``
+    — coarse-first through a ``checkpoint.restore.RestoreSession``:
+    load only the bitplanes needed for a requested weight error, start
+    stepping immediately, refine in the background touching ONLY the
+    missing planes.  At 1000-node scale this turns a cold restart's
+    all-hosts-read-everything storm into a small fraction of the bytes
+    (gated in ``benchmarks/ckpt_bench.py``).
 
-Layout (object-store friendly):
-  <dir>/step_<N>/manifest.json       leaf index, shapes, dtypes, eb, hashes
-  <dir>/step_<N>/<leaf_id>.ipc       one IPComp archive per leaf
-  <dir>/LATEST                       atomic pointer (rename)
+Layout (object-store friendly)::
 
-Checkpoints are sharding-agnostic: leaves are saved as logical (gathered)
-arrays and re-sharded on restore against whatever mesh the restart uses —
-elastic scaling after node failure.
+  <dir>/step_<N>.ckpt     one IPCB bundle per step (atomic os.replace)
+  <dir>/LATEST            atomic pointer (rename)
+  <dir>/.step_<N>_*       in-flight save scratch (shards + merge buffer);
+                          ignored by readers, reaped by the manager's gc
+
+Saves are parallel partitioned encodes (``workers`` encoder threads,
+deterministic output — see ``bundle.write_bundle``).  Checkpoints are
+sharding-agnostic: leaves are saved as logical (gathered) arrays and
+re-sharded on restore against whatever mesh the restart uses — elastic
+scaling after node failure.  Remote restore: pass an ``http(s)://``
+URL to ``Bundle.open`` / ``RestoreSession`` and the same session code
+path runs over HTTP range requests with the remote layer's
+retry/degradation semantics.
 """
 from __future__ import annotations
 
-import hashlib
-import json
 import os
 import shutil
 import tempfile
-from dataclasses import dataclass
+import weakref
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-from ..api import Archive, Codec, Fidelity
+from . import bundle as bundle_mod
+from .bundle import Bundle, LeafSpec
+from .restore import RestoreSession, read_full
 
 
 def _leaf_id(path) -> str:
@@ -47,49 +59,48 @@ def _as_f32(x: np.ndarray) -> np.ndarray:
     return np.asarray(jax.device_get(x)).astype(np.float32)
 
 
+def step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step}.ckpt")
+
+
+def _tree_unflattener(like: Any):
+    """(leaf ids in flatten order, dict->tree unflatten hook) for ``like``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    lids = [_leaf_id(p) for p, _ in flat]
+
+    def unflatten(arrays: Dict[str, np.ndarray]):
+        return treedef.unflatten([jax.numpy.asarray(arrays[l])
+                                  for l in lids])
+    return lids, unflatten
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
                     rel_eb: float = 1e-6, interp: str = "cubic",
-                    lossless_small: int = 4096) -> Dict:
-    """Write ``tree`` (params or full TrainState) at ``step``.
+                    lossless_small: int = 4096, workers: int = 1,
+                    chunk_elems: Optional[int] = None) -> Dict:
+    """Write ``tree`` (params or full TrainState) at ``step`` as one
+    bundle file, via ``workers`` parallel encoder shards merged
+    atomically (output bytes are worker-count independent).
 
-    Leaves smaller than ``lossless_small`` elements (norms, biases, scalars)
-    are stored raw — compression metadata would dominate.
+    Leaves smaller than ``lossless_small`` elements (norms, biases,
+    scalars) are stored raw — compression metadata would dominate.
     """
-    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".step_{step}_")
-    leaves = {}
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    total_raw = total_comp = 0
+    specs: List[LeafSpec] = []
     for path, leaf in flat:
-        lid = _leaf_id(path)
-        arr = _as_f32(leaf)
-        raw = arr.size * np.asarray(leaf).dtype.itemsize
-        if arr.size <= lossless_small or arr.ndim == 0:
-            blob = arr.tobytes()
-            kind = "raw"
-        else:
-            a2 = arr.reshape(arr.shape[0], -1) if arr.ndim > 2 else arr
-            blob = Codec(eb=rel_eb, interp=interp,
-                         relative=True).compress(a2).tobytes()
-            kind = "ipc"
-        with open(os.path.join(tmp, lid + ".ipc"), "wb") as f:
-            f.write(blob)
-        leaves[lid] = dict(
-            kind=kind, shape=list(np.asarray(leaf).shape),
-            dtype=str(np.asarray(leaf).dtype),
-            comp_shape=list(a2.shape) if kind == "ipc" else None,
-            nbytes=len(blob),
-            sha=hashlib.sha256(blob).hexdigest()[:16])
-        total_raw += raw
-        total_comp += len(blob)
-    manifest = dict(step=step, rel_eb=rel_eb, interp=interp, leaves=leaves,
-                    total_raw=total_raw, total_comp=total_comp,
-                    treedef=str(treedef))
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    final = os.path.join(ckpt_dir, f"step_{step}")
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)                        # atomic publish
+        nd = np.asarray(jax.device_get(leaf))
+        specs.append(LeafSpec(lid=_leaf_id(path), arr=nd.astype(np.float32),
+                              dtype=str(nd.dtype),
+                              raw_nbytes=nd.size * nd.dtype.itemsize))
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".step_{step}_")
+    try:
+        manifest = bundle_mod.write_bundle(
+            step_path(ckpt_dir, step), specs, step=step, rel_eb=rel_eb,
+            interp=interp, treedef=str(treedef),
+            lossless_small=lossless_small, workers=workers,
+            chunk_elems=chunk_elems, shard_dir=tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
     with open(os.path.join(ckpt_dir, ".LATEST_tmp"), "w") as f:
         f.write(str(step))
     os.replace(os.path.join(ckpt_dir, ".LATEST_tmp"),
@@ -104,106 +115,158 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return int(open(p).read().strip())
 
 
-def _load_leaf(d: str, lid: str, meta: dict,
-               error_bound: Optional[float] = None) -> np.ndarray:
-    """Full-precision leaf load (progressive loads go through the per-leaf
-    sessions in :func:`progressive_restore`)."""
-    path = os.path.join(d, lid + ".ipc")
-    if meta["kind"] == "raw":
-        blob = open(path, "rb").read()
-        arr = np.frombuffer(blob, np.float32).reshape(meta["shape"])
-        return arr.astype(np.dtype(meta["dtype"]))
-    sess = Archive.load(path).open()
-    out = sess.read(None if error_bound is None
-                    else Fidelity.error_bound(error_bound))
-    return out.reshape(meta["shape"]).astype(np.dtype(meta["dtype"]))
-
-
 def restore_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
     """Full-precision restore into the structure of ``like`` (re-sharding
-    against whatever mesh ``like``'s shardings carry)."""
-    d = os.path.join(ckpt_dir, f"step_{step}")
-    manifest = json.load(open(os.path.join(d, "manifest.json")))
-    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-    out = []
-    for path, leaf in flat:
-        lid = _leaf_id(path)
-        arr = _load_leaf(d, lid, manifest["leaves"][lid], None)
-        out.append(jax.numpy.asarray(arr))
-    return treedef.unflatten(out)
-
-
-@dataclass
-class ProgressiveRestore:
-    """Carries per-leaf ProgressiveReader sessions between refinement
-    rounds."""
-    dir: str
-    step: int
-    manifest: dict
-    states: Dict[str, Any]
-    bytes_read: int = 0
+    against whatever mesh ``like``'s shardings carry).  Every leaf blob
+    is sha256-verified against the manifest."""
+    _, unflatten = _tree_unflattener(like)
+    with Bundle.open(step_path(ckpt_dir, step)) as b:
+        return unflatten(read_full(b, verify=True))
 
 
 def progressive_restore(ckpt_dir: str, step: int, like: Any, *,
-                        weight_error: float,
-                        session: Optional[ProgressiveRestore] = None
-                        ) -> Tuple[Any, ProgressiveRestore]:
+                        weight_error: Optional[float],
+                        session: Optional[RestoreSession] = None
+                        ) -> Tuple[Any, RestoreSession]:
     """Coarse-first restore: load only the bitplanes needed for
-    ``weight_error`` (relative to each leaf's range).  Call again with the
-    returned session and a smaller bound to refine incrementally — only the
-    missing planes are read (Algorithm 2 at checkpoint scale)."""
-    d = os.path.join(ckpt_dir, f"step_{step}")
+    ``weight_error`` (relative to each leaf's range).  Call again with
+    the returned session and a smaller bound to refine incrementally —
+    only the missing planes are read (Algorithm 2 at checkpoint scale).
+    The session caches the parsed manifest and the raw (lossless)
+    leaves; raw leaves report exact-zero error in
+    ``session.leaf_bounds``."""
     if session is None:
-        manifest = json.load(open(os.path.join(d, "manifest.json")))
-        session = ProgressiveRestore(dir=d, step=step, manifest=manifest,
-                                     states={})
-    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-    out = []
-    for path, leaf in flat:
-        lid = _leaf_id(path)
-        meta = session.manifest["leaves"][lid]
-        if meta["kind"] == "ipc":
-            sess = session.states.get(lid)
-            if sess is None:
-                sess = Archive.load(os.path.join(d, lid + ".ipc")).open()
-                session.states[lid] = sess
-            # absolute bound per leaf: weight_error is relative to range
-            # (eb stored absolute; manifest rel_eb relates it to the range)
-            eb = sess.archive.eb
-            bound = max(weight_error * eb / session.manifest["rel_eb"], eb)
-            arr = sess.read(Fidelity.error_bound(bound)) \
-                .reshape(meta["shape"]).astype(np.dtype(meta["dtype"]))
-        else:
-            arr = _load_leaf(d, lid, meta, None)
-        out.append(jax.numpy.asarray(arr))
-    session.bytes_read = sum(
-        st.bytes_read for st in session.states.values())
-    return treedef.unflatten(out), session
+        _, unflatten = _tree_unflattener(like)
+        session = RestoreSession(Bundle.open(step_path(ckpt_dir, step)),
+                                 unflatten=unflatten)
+    return session.restore(weight_error), session
 
 
 class CheckpointManager:
-    """keep_n rotation + restart helper for the training driver."""
+    """keep_n rotation + restart helper for the training driver.
 
-    def __init__(self, ckpt_dir: str, keep_n: int = 3, rel_eb: float = 1e-6):
+    Tracks live :class:`RestoreSession`\\ s it handed out: the rotation
+    gc never deletes a step an unclosed session is reading, so an
+    in-flight progressive restore either completes from its open source
+    or — if the bundle was removed out-of-band — fails loudly, never
+    returns wrong bytes.  Leftover ``.step_*`` scratch dirs from
+    crashed saves are ignored by every reader and reaped here.
+    """
+
+    def __init__(self, ckpt_dir: str, keep_n: int = 3, rel_eb: float = 1e-6,
+                 workers: int = 1):
         self.dir = ckpt_dir
         self.keep_n = keep_n
         self.rel_eb = rel_eb
+        self.workers = workers
         os.makedirs(ckpt_dir, exist_ok=True)
+        self._live: List[Tuple[int, "weakref.ref[RestoreSession]"]] = []
 
     def save(self, step: int, tree: Any) -> Dict:
-        man = save_checkpoint(self.dir, step, tree, rel_eb=self.rel_eb)
+        man = save_checkpoint(self.dir, step, tree, rel_eb=self.rel_eb,
+                              workers=self.workers)
         self._gc()
         return man
 
+    # ------------------------------------------------------------ rotation
+
+    def _pinned_steps(self) -> set:
+        alive, keep = set(), []
+        for s, ref in self._live:
+            sess = ref()
+            if sess is not None and not sess.closed:
+                alive.add(s)
+                keep.append((s, ref))
+        self._live = keep
+        return alive
+
+    @staticmethod
+    def _parse_step_name(name: str) -> Optional[int]:
+        if name.startswith("step_"):
+            stem = name[5:-5] if name.endswith(".ckpt") else name[5:]
+            try:
+                return int(stem)
+            except ValueError:
+                return None
+        return None
+
     def _gc(self):
-        steps = sorted(int(n.split("_")[1]) for n in os.listdir(self.dir)
-                       if n.startswith("step_"))
-        for s in steps[: -self.keep_n]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
-                          ignore_errors=True)
+        pinned = self._pinned_steps()
+        found: List[Tuple[int, str]] = []
+        for n in os.listdir(self.dir):
+            p = os.path.join(self.dir, n)
+            if n.startswith(".step_"):
+                # crashed-save scratch: never referenced by LATEST or any
+                # manifest — reap it (our own save's scratch is already
+                # gone by the time save() calls _gc)
+                if os.path.isdir(p):
+                    shutil.rmtree(p, ignore_errors=True)
+                else:
+                    try:
+                        os.unlink(p)
+                    except OSError:
+                        pass
+                continue
+            s = self._parse_step_name(n)
+            if s is not None:
+                found.append((s, p))
+        found.sort()
+        for s, p in found[: -self.keep_n] if self.keep_n else found:
+            if s in pinned:
+                continue   # an unclosed RestoreSession is reading this step
+            if os.path.isdir(p):
+                shutil.rmtree(p, ignore_errors=True)
+            else:
+                try:
+                    os.unlink(p)
+                except OSError:
+                    pass
+
+    # ------------------------------------------------------------- restore
 
     def restore_latest(self, like: Any) -> Tuple[Optional[int], Any]:
         step = latest_step(self.dir)
         if step is None:
             return None, like
         return step, restore_checkpoint(self.dir, step, like)
+
+    def restore_progressive(self, like: Any, *, weight_error: float,
+                            refine_to: Any = None,
+                            step: Optional[int] = None,
+                            exact=None
+                            ) -> Tuple[Optional[int], Any,
+                                       Optional[RestoreSession]]:
+        """Coarse-first restart: restore the latest (or given) step at
+        ``weight_error`` and return ``(step, tree, session)`` — the
+        caller starts stepping on ``tree`` immediately.
+
+        ``refine_to`` starts the session's background refiner:
+        ``"full"`` streams every remaining plane, a float refines to
+        that (tighter) weight error, ``None`` leaves refinement to the
+        caller.  Poll ``session.poll_refined()`` for the refined tree
+        and ``session.close()`` when done (closing releases the step
+        for keep-rotation gc).  With no checkpoint present, returns
+        ``(None, like, None)``.
+
+        ``exact`` (optional ``lid -> bool``) marks precision-critical
+        leaves that must restore at full precision even in the coarse
+        round — e.g. optimizer second moments, where a range-relative
+        bound flips near-zero entries negative.
+        """
+        step = latest_step(self.dir) if step is None else step
+        if step is None:
+            return None, like, None
+        path = step_path(self.dir, step)
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"checkpoint step {step} not found at {path} — was it "
+                "rotated out by keep_n gc? (LATEST may be stale)")
+        _, unflatten = _tree_unflattener(like)
+        session = RestoreSession(Bundle.open(path), unflatten=unflatten,
+                                 exact=exact)
+        self._live.append((step, weakref.ref(session)))
+        tree = session.restore(weight_error)
+        if refine_to is not None:
+            session.refine_async(
+                None if refine_to == "full" else float(refine_to))
+        return step, tree, session

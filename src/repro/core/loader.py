@@ -223,7 +223,19 @@ def ladder_order(chunk_metas: Sequence[ArchiveMeta],
 
     Within a level the candidate is always the next MSB-first plane (XOR
     plane coding makes planes order-dependent), so the order interleaves
-    *levels*, never planes within a level.  Scores use the SAFE
+    *levels*, never planes within a level.  A level's candidate is
+    scored with a LOOKAHEAD: the best cumulative gain per byte over any
+    *run* of its next planes, and the whole winning run is emitted at
+    once.  The lookahead matters because ``delta_table`` need not be
+    monotone at the top — keeping only the MSB negabinary digit can
+    reconstruct FARTHER from the data than truncating to zero (the
+    lone digit overshoots), so plane 0 alone can score a negative gain.
+    A per-plane greedy then parks that level's entire ladder at the end
+    of the order, and every error-mode prefix through it degenerates to
+    a near-total read; the run score sees past the dip (plane 0+1
+    together are a large gain for few bytes).  For levels with monotone
+    decaying gains the best run is always length 1 and the order —
+    hence the archive bytes — is unchanged.  Scores use the SAFE
     propagation model by default — the write-time order must serve
     whichever model retrieval later plans under, and SAFE is the
     conservative one.  Zero-byte segments score infinite (free error
@@ -239,13 +251,13 @@ def ladder_order(chunk_metas: Sequence[ArchiveMeta],
                  for li in range(nlev)]
     next_k = [0] * nlev
     order: List[tuple] = []
-    while True:
+
+    def best_run(li: int):
+        """(score, run length) of the best prefix of level li's
+        remaining planes by cumulative gain per cumulative byte."""
+        gain, size = 0.0, 0
         best = None
-        for li in range(nlev):
-            k = next_k[li]
-            if k >= nbits_max[li]:
-                continue
-            gain, size = 0.0, 0
+        for k in range(next_k[li], nbits_max[li]):
             for m, e in zip(chunk_metas, errs):
                 if li >= len(m.levels) or k >= m.levels[li].nbits:
                     continue
@@ -253,14 +265,27 @@ def ladder_order(chunk_metas: Sequence[ArchiveMeta],
                 gain += float(e[li][nb - k] - e[li][nb - k - 1])
                 size += m.levels[li].plane_sizes[k]
             score = math.inf if size == 0 else gain / size
+            if best is None or score > best[0]:
+                best = (score, k - next_k[li] + 1)
+            if best[0] == math.inf:
+                break          # free prefix: emit now, rescore the rest
+        return best
+
+    while True:
+        best = None
+        for li in range(nlev):
+            if next_k[li] >= nbits_max[li]:
+                continue
+            score, run = best_run(li)
             key = (score, -li)
             if best is None or key > best[0]:
-                best = (key, li)
+                best = (key, li, run)
         if best is None:
             return order
-        li = best[1]
-        order.append((li, next_k[li]))
-        next_k[li] += 1
+        _, li, run = best
+        for _ in range(run):
+            order.append((li, next_k[li]))
+            next_k[li] += 1
 
 
 def ladder_error_mode(meta, E: float, propagation: str = PAPER,

@@ -39,6 +39,12 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fail-at", type=int, nargs="*", default=None,
                     help="simulate node failures at these steps")
+    ap.add_argument("--progressive-restore", action="store_true",
+                    help="restart coarse-first: restore only the bitplanes "
+                         "for --restore-weight-error, refine in background")
+    ap.add_argument("--restore-weight-error", type=float, default=1e-2)
+    ap.add_argument("--ckpt-workers", type=int, default=1,
+                    help="parallel encoder shards per checkpoint save")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--report", default=None)
     args = ap.parse_args()
@@ -69,9 +75,12 @@ def main():
 
     driver = TrainDriver(
         step_fn=step_fn, stream=stream,
-        ckpt=CheckpointManager(args.ckpt_dir, keep_n=2),
+        ckpt=CheckpointManager(args.ckpt_dir, keep_n=2,
+                               workers=args.ckpt_workers),
         cfg=DriverConfig(total_steps=args.steps,
-                         ckpt_every=args.ckpt_every),
+                         ckpt_every=args.ckpt_every,
+                         progressive_restore=args.progressive_restore,
+                         restore_weight_error=args.restore_weight_error),
         injector=FailureInjector(args.fail_at) if args.fail_at else None,
         extras=extras or None)
 
@@ -81,7 +90,8 @@ def main():
     losses = report["losses"]
     k = max(1, len(losses) // 10)
     print(f"steps={report['final_step']} wall={dt:.1f}s "
-          f"restarts={report['restarts']} stragglers={len(report['stragglers'])}")
+          f"restarts={report['restarts']} stragglers={len(report['stragglers'])} "
+          f"refined={report.get('refined_adoptions', 0)}")
     print(f"loss first10={np.mean(losses[:k]):.4f} "
           f"last10={np.mean(losses[-k:]):.4f}")
     if args.report:

@@ -15,6 +15,13 @@ code path with simulated failures):
     metric so the control loop is testable).
   * elastic restart — restore maps saved logical arrays onto whatever mesh
     the new world size provides (checkpoints are sharding-agnostic).
+  * restore-while-refine — with ``progressive_restore`` on, a restart
+    reads only the bitplanes needed for ``restore_weight_error`` and
+    starts stepping immediately while a background
+    :class:`~repro.checkpoint.RestoreSession` refiner streams the
+    remaining planes; once ready, the refinement is folded into the live
+    state as a per-leaf delta (``w <- w + (refined - coarse)``), so it
+    composes with the training steps taken on the coarse weights.
 """
 from __future__ import annotations
 
@@ -26,7 +33,27 @@ import jax
 import numpy as np
 
 from ..checkpoint import CheckpointManager
+from ..checkpoint.store import _leaf_id
 from ..data.pipeline import TokenStream
+
+
+def _non_param_leaves(state):
+    """Leaf-id predicate marking everything OUTSIDE ``state.params`` as
+    precision-critical for a coarse restore.  Model weights tolerate a
+    range-relative error (training recovers, and the background refine
+    folds the residual back in), but optimizer statistics do not: Adam's
+    second moment is a near-zero positive field whose entries flip sign
+    under the same bound, collapsing the ``sqrt(v)`` denominator and
+    blowing up the first post-restart updates.  States without a
+    ``params`` attribute restore fully (no leaf is coarse)."""
+    params = getattr(state, "params", None)
+    if params is None:
+        return lambda lid: True
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    param_leaves = {id(leaf) for leaf in jax.tree_util.tree_leaves(params)}
+    exact_ids = {_leaf_id(p) for p, leaf in flat
+                 if id(leaf) not in param_leaves}
+    return lambda lid: lid in exact_ids
 
 
 @dataclass
@@ -37,6 +64,13 @@ class DriverConfig:
     straggler_factor: float = 3.0
     ewma_alpha: float = 0.2
     rel_eb: float = 1e-6
+    #: coarse-first restarts: restore at ``restore_weight_error`` and step
+    #: immediately; a background refiner streams the remaining planes
+    progressive_restore: bool = False
+    restore_weight_error: float = 1e-2
+    #: refine to full precision in the background after a progressive
+    #: restore (False: stay at the coarse weights)
+    restore_refine: bool = True
 
 
 class FailureInjector:
@@ -71,7 +105,50 @@ class TrainDriver:
 
     def run(self, state) -> Dict[str, Any]:
         """Run to total_steps with restart-on-failure. Returns a report."""
-        start, restored = self.ckpt.restore_latest(state)
+        session = None      # live RestoreSession with a background refiner
+        coarse = None       # the tree the session's coarse round produced
+        refined_adoptions = 0
+
+        def restore(cur):
+            """(step, tree) from the latest checkpoint; progressive mode
+            returns coarse weights immediately and leaves ``session``
+            refining in the background."""
+            nonlocal session, coarse
+            if session is not None:     # restart during a refine: drop it
+                session.close()
+                session, coarse = None, None
+            if self.cfg.progressive_restore and \
+                    hasattr(self.ckpt, "restore_progressive"):
+                last, tree, sess = self.ckpt.restore_progressive(
+                    cur, weight_error=self.cfg.restore_weight_error,
+                    refine_to="full" if self.cfg.restore_refine else None,
+                    exact=_non_param_leaves(cur))
+                if sess is not None and self.cfg.restore_refine:
+                    session, coarse = sess, tree
+                elif sess is not None:
+                    sess.close()
+                return last, tree
+            return self.ckpt.restore_latest(cur)
+
+        def adopt_refined(cur, block=False):
+            """Fold a finished background refine into the live state as a
+            per-leaf delta on the coarse tree — it composes with the
+            steps taken since restore; the optimizer state (part of the
+            checkpointed tree) refines the same way."""
+            nonlocal session, coarse, refined_adoptions
+            if session is None:
+                return cur
+            refined = session.refined() if block else session.poll_refined()
+            if refined is None:
+                return cur
+            cur = jax.tree_util.tree_map(lambda s, f, c: s + (f - c),
+                                         cur, refined, coarse)
+            session.close()
+            session, coarse = None, None
+            refined_adoptions += 1
+            return cur
+
+        start, restored = restore(state)
         if start is not None:
             state = restored
             step = start
@@ -90,12 +167,13 @@ class TrainDriver:
             except RuntimeError as e:
                 # node failure: restore last checkpoint, rebuild state
                 restarts += 1
-                last, restored = self.ckpt.restore_latest(state)
+                last, restored = restore(state)
                 if last is None:
                     raise RuntimeError("failure before first checkpoint") from e
                 state = restored
                 step = last
                 continue
+            state = adopt_refined(state)
             dt = time.time() - t0
             ewma = dt if ewma is None else \
                 (1 - self.cfg.ewma_alpha) * ewma + self.cfg.ewma_alpha * dt
@@ -104,7 +182,10 @@ class TrainDriver:
             losses.append(float(metrics["loss"]))
             step += 1
             if step % self.cfg.ckpt_every == 0:
+                state = adopt_refined(state, block=step == self.cfg.ckpt_every)
                 self.ckpt.save(step, state)
+        state = adopt_refined(state, block=True)  # never persist coarse-only
         self.ckpt.save(step, state)
         return dict(final_step=step, losses=losses, restarts=restarts,
-                    stragglers=straggler_steps)
+                    stragglers=straggler_steps,
+                    refined_adoptions=refined_adoptions)

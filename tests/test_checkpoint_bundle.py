@@ -1,0 +1,165 @@
+"""IPCB checkpoint bundle format: roundtrip, parallel-encode
+determinism, and the corruption/truncation integrity matrix
+(every failure must raise ``CorruptArchiveError`` and name the leaf)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import Bundle, LeafSpec, read_full, write_bundle
+from repro.checkpoint.bundle import MAGIC, encode_leaf
+from repro.core.bytesource import BufferSource
+from repro.core.container import CorruptArchiveError
+
+REL_EB = 1e-4
+
+
+def smooth(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.cumsum(rng.standard_normal(shape), axis=-1)
+    return x.astype(np.float32)
+
+
+def make_specs():
+    leaves = {
+        "blocks.0.attn.w": smooth((64, 256), 1),
+        "blocks.1.attn.w": smooth((64, 256), 2),
+        "blocks.0.mlp.w": smooth((8, 32, 64), 3),     # ndim>2: reshaped
+        "final_norm.scale": np.linspace(-1.0, 1.0, 64,
+                                        dtype=np.float32),  # raw (small)
+        "step_scalar": np.float32(3.5).reshape(()),         # raw (0-d)
+    }
+    specs = [LeafSpec(lid=k, arr=np.asarray(v, np.float32),
+                      dtype=str(np.asarray(v).dtype),
+                      raw_nbytes=np.asarray(v).nbytes)
+             for k, v in leaves.items()]
+    return leaves, specs
+
+
+def write_tmp(tmp_path, name="b.ckpt", workers=1, **kw):
+    leaves, specs = make_specs()
+    path = os.path.join(str(tmp_path), name)
+    man = write_bundle(path, specs, step=7, rel_eb=REL_EB, interp="cubic",
+                       workers=workers, **kw)
+    return leaves, path, man
+
+
+# ------------------------------------------------------------ roundtrip
+
+def test_bundle_roundtrip_full_precision(tmp_path):
+    leaves, path, man = write_tmp(tmp_path)
+    with Bundle.open(path) as b:
+        assert b.step == 7 and b.leaf_order == list(leaves)
+        out = read_full(b, verify=True)
+    for lid, ref in leaves.items():
+        got = out[lid]
+        assert got.shape == np.asarray(ref).shape
+        assert got.dtype == np.asarray(ref).dtype
+        e = man["leaves"][lid]
+        if e["kind"] == "raw":
+            np.testing.assert_array_equal(got, ref)
+        else:
+            rng_v = float(ref.max() - ref.min())
+            assert np.max(np.abs(got - ref)) <= REL_EB * rng_v * 1.001
+
+
+def test_manifest_regions_tile_and_kinds(tmp_path):
+    leaves, path, man = write_tmp(tmp_path)
+    end = 0
+    for lid in man["order"]:
+        e = man["leaves"][lid]
+        assert e["offset"] == end
+        end += e["nbytes"]
+        assert e["kind"] in ("ipc", "ipc1", "raw")
+        assert len(e["sha"]) == 64 and len(e["pfx_sha"]) == 64
+        assert 0 < e["pfx_size"] <= e["nbytes"]
+    assert man["total_comp"] == end
+    # small/scalar leaves are raw; the big smooth matrices compress
+    assert man["leaves"]["final_norm.scale"]["kind"] == "raw"
+    assert man["leaves"]["step_scalar"]["kind"] == "raw"
+    assert man["leaves"]["blocks.0.attn.w"]["kind"] in ("ipc", "ipc1")
+    assert man["leaves"]["blocks.0.attn.w"]["nbytes"] < 64 * 256 * 4
+
+
+def test_parallel_encode_bytes_identical(tmp_path):
+    _, p1, _ = write_tmp(tmp_path, "w1.ckpt", workers=1)
+    for w in (2, 3, 5):
+        _, pw, _ = write_tmp(tmp_path, f"w{w}.ckpt", workers=w)
+        assert open(pw, "rb").read() == open(p1, "rb").read(), \
+            f"bundle bytes differ at workers={w}"
+
+
+def test_raw_fallback_for_incompressible_leaf():
+    rng = np.random.default_rng(0)
+    noise = (rng.random((64, 256)).astype(np.float32) * 2 - 1)
+    spec = LeafSpec(lid="noise", arr=noise, dtype="float32",
+                    raw_nbytes=noise.nbytes)
+    entry, blob = encode_leaf(spec, rel_eb=1e-9, interp="cubic")
+    assert entry["kind"] == "raw"          # honesty over format purity
+    assert len(blob) == noise.nbytes
+    np.testing.assert_array_equal(
+        np.frombuffer(blob, np.float32).reshape(64, 256), noise)
+
+
+# ------------------------------------------------------------ integrity
+
+def _bundle_bytes(tmp_path):
+    leaves, path, man = write_tmp(tmp_path)
+    return leaves, man, bytearray(open(path, "rb").read())
+
+
+def test_corrupted_leaf_full_read_names_leaf(tmp_path):
+    _, man, buf = _bundle_bytes(tmp_path)
+    b = Bundle(BufferSource(bytes(buf)))
+    lid = "blocks.1.attn.w"
+    off, size = b.leaf_region(lid)
+    buf[off + size - 3] ^= 0xFF            # flip a byte deep in the blob
+    bad = Bundle(BufferSource(bytes(buf)))
+    with pytest.raises(CorruptArchiveError, match="blocks.1.attn.w"):
+        bad.read_leaf_bytes(lid, verify=True)
+    # other leaves still verify: corruption is isolated per leaf
+    bad.read_leaf_bytes("blocks.0.attn.w", verify=True)
+
+
+@pytest.mark.parametrize("lid", ["blocks.0.attn.w", "final_norm.scale"])
+def test_corrupted_prefix_fails_partial_read_gate(tmp_path, lid):
+    _, man, buf = _bundle_bytes(tmp_path)
+    b = Bundle(BufferSource(bytes(buf)))
+    off, _ = b.leaf_region(lid)
+    buf[off + 1] ^= 0x01                   # inside the verified prefix
+    bad = Bundle(BufferSource(bytes(buf)))
+    with pytest.raises(CorruptArchiveError, match=lid.replace(".", r"\.")):
+        bad.verify_leaf_prefix(lid)
+
+
+def test_truncated_bundle_rejected_at_open(tmp_path):
+    _, _, buf = _bundle_bytes(tmp_path)
+    with pytest.raises(CorruptArchiveError, match="truncated|holds"):
+        Bundle(BufferSource(bytes(buf[:-10])))
+    # truncated INSIDE the manifest region
+    with pytest.raises(CorruptArchiveError):
+        Bundle(BufferSource(bytes(buf[:12])))
+
+
+def test_bad_magic_and_garbage_manifest(tmp_path):
+    _, _, buf = _bundle_bytes(tmp_path)
+    with pytest.raises(CorruptArchiveError, match="IPCB"):
+        Bundle(BufferSource(b"NOPE" + bytes(buf[4:])))
+    bad = bytearray(buf)
+    bad[8] ^= 0xFF                         # first manifest byte -> not JSON
+    with pytest.raises(CorruptArchiveError):
+        Bundle(BufferSource(bytes(bad)))
+    assert buf[:4] == MAGIC
+
+
+def test_padded_bundle_rejected(tmp_path):
+    _, _, buf = _bundle_bytes(tmp_path)
+    with pytest.raises(CorruptArchiveError, match="truncated or padded"):
+        Bundle(BufferSource(bytes(buf) + b"\0" * 8))
+
+
+def test_missing_leaf_keyerror_names_leaf(tmp_path):
+    _, path, _ = write_tmp(tmp_path)
+    with Bundle.open(path) as b:
+        with pytest.raises(KeyError, match="no_such_leaf"):
+            b.entry("no_such_leaf")

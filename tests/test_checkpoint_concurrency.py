@@ -1,0 +1,160 @@
+"""Checkpoint lifecycle under contention: keep-rotation gc racing
+in-flight RestoreSessions, out-of-band deletion mid-session, crashed
+saves (scratch dirs, LATEST atomicity), and concurrent refine/save."""
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, step_path
+from repro.checkpoint.store import save_checkpoint
+
+
+def make_tree(seed=0):
+    rng = np.random.default_rng(seed)
+    smoothed = np.cumsum(rng.standard_normal((64, 256)), axis=-1)
+    return {"w": jax.numpy.asarray(smoothed, jax.numpy.float32),
+            "b": jax.numpy.asarray(np.linspace(0, 1, 32), jax.numpy.float32)}
+
+
+def assert_tree_close(got, ref, tol=1e-3):
+    for k in ref:
+        assert float(np.max(np.abs(np.asarray(got[k])
+                                   - np.asarray(ref[k])))) <= tol
+
+
+# ------------------------------------------------------ gc vs sessions
+
+def test_gc_never_reaps_step_held_by_open_session(tmp_path):
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep_n=1, rel_eb=1e-5)
+    t1 = make_tree(1)
+    mgr.save(1, t1)
+    step, coarse, sess = mgr.restore_progressive(
+        t1, weight_error=1e-2, refine_to=None)
+    assert step == 1
+    # two more saves would rotate step 1 out — but the session pins it
+    mgr.save(2, make_tree(2))
+    mgr.save(3, make_tree(3))
+    assert os.path.exists(step_path(d, 1))
+    # the in-flight session completes CORRECTLY from the pinned bundle
+    full = sess.restore(None)
+    assert_tree_close(full, t1, tol=1e-3)
+    sess.close()
+    mgr.save(4, make_tree(4))               # now the pin is gone: reaped
+    assert not os.path.exists(step_path(d, 1))
+    assert os.path.exists(step_path(d, 4))
+
+
+def test_deleted_bundle_mid_session_completes_or_fails_loudly(tmp_path):
+    """An unpinned deletion under an open session must never yield wrong
+    bytes: the mmap keeps the published (immutable) bundle alive, so the
+    restore completes with the ORIGINAL step's data."""
+    d = str(tmp_path)
+    t1 = make_tree(1)
+    save_checkpoint(d, 1, t1, rel_eb=1e-5)
+    from repro.checkpoint import Bundle, RestoreSession
+    sess = RestoreSession(Bundle.open(step_path(d, 1)))
+    sess.restore(1e-2)
+    os.unlink(step_path(d, 1))              # out-of-band removal
+    save_checkpoint(d, 2, make_tree(2), rel_eb=1e-5)  # unrelated new step
+    try:
+        full = sess.restore(None)
+    except Exception:
+        pass                                # loud failure is acceptable...
+    else:                                   # ...silent wrong bytes are not
+        assert float(np.max(np.abs(full["w"]
+                                   - np.asarray(t1["w"])))) <= 1e-3
+    finally:
+        sess.close()
+
+
+def test_refine_async_races_gc_saves(tmp_path):
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep_n=1, rel_eb=1e-5)
+    t1 = make_tree(1)
+    mgr.save(1, t1)
+    step, coarse, sess = mgr.restore_progressive(
+        t1, weight_error=1e-1, refine_to="full")
+    for s in range(2, 6):                   # rotation churns while refining
+        mgr.save(s, make_tree(s))
+    refined = sess.refined(timeout=60)
+    assert refined is not None
+    assert_tree_close(refined, t1, tol=1e-3)
+    sess.close()
+
+
+# ------------------------------------------------------- crashed saves
+
+def test_crashed_save_scratch_ignored_and_reaped(tmp_path):
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep_n=3, rel_eb=1e-5)
+    t1 = make_tree(1)
+    mgr.save(1, t1)
+    # a save that died mid-encode leaves shard scratch + a merge buffer
+    junk_dir = os.path.join(d, ".step_9_abc123")
+    os.makedirs(junk_dir)
+    open(os.path.join(junk_dir, "shard_0.bin"), "wb").write(b"\0" * 64)
+    open(os.path.join(junk_dir, "bundle.tmp"), "wb").write(b"IPCB????")
+    open(os.path.join(d, ".step_9_stray"), "wb").write(b"junk")
+    # readers ignore the scratch entirely
+    assert latest_step(d) == 1
+    step, restored = mgr.restore_latest(t1)
+    assert step == 1
+    assert_tree_close(restored, t1, tol=1e-3)
+    # the next save's gc reaps it
+    mgr.save(2, make_tree(2))
+    assert not os.path.exists(junk_dir)
+    assert not os.path.exists(os.path.join(d, ".step_9_stray"))
+
+
+def test_latest_pointer_flip_is_atomic_across_crash(tmp_path):
+    """A crash BEFORE the pointer flip leaves LATEST on the old step and
+    a complete old bundle — never a torn pointer or a half bundle."""
+    d = str(tmp_path)
+    t1 = make_tree(1)
+    save_checkpoint(d, 1, t1, rel_eb=1e-5)
+    # simulate dying between bundle publish and pointer flip for step 2
+    save_checkpoint(d, 2, make_tree(2), rel_eb=1e-5)
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write("1")                        # pointer still on the old step
+    open(os.path.join(d, ".LATEST_tmp"), "w").write("2")  # stranded tmp
+    mgr = CheckpointManager(d, keep_n=3, rel_eb=1e-5)
+    step, restored = mgr.restore_latest(t1)
+    assert step == 1                        # old pointer honored
+    assert_tree_close(restored, t1, tol=1e-3)
+    mgr.save(3, make_tree(3))               # next save replaces LATEST
+    assert latest_step(d) == 3
+
+
+def test_save_gc_threads_against_reader_threads(tmp_path):
+    """Hammer save+gc on one thread while sessions restore on others —
+    every completed restore must match its own step's tree."""
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep_n=2, rel_eb=1e-5)
+    trees = {s: make_tree(s) for s in range(1, 7)}
+    mgr.save(1, trees[1])
+    errors = []
+
+    def reader():
+        try:
+            for _ in range(4):
+                step, restored = mgr.restore_latest(trees[1])
+                if step is not None:
+                    assert_tree_close(restored, trees[step], tol=1e-3)
+        except FileNotFoundError:
+            pass                            # rotated under us: loud, not wrong
+        except Exception as e:              # wrong bytes / crashes: fail
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for s in range(2, 7):
+        mgr.save(s, trees[s])
+    for t in threads:
+        t.join(60)
+    assert not errors, errors

@@ -1,0 +1,119 @@
+"""Pin ``compression/grad.py``'s plane-drop semantics against the core
+negabinary/bitplane truncation (``core/negabinary.py``).
+
+The gradient path truncates with an arithmetic shift ``(q >> s) << s``;
+the checkpoint/codec path zeroes ``s`` low negabinary digits.  These
+coincide bit-exactly for s in {0, 1} and deliberately diverge deeper
+(both stay within 2^s of the input — same error class, different
+codewords); this suite pins the exact relationship so a change on
+either side trips loudly."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compression.grad import _quantize_leaf, _trunc_occupied
+from repro.core.negabinary import from_negabinary, to_negabinary, truncate
+
+
+def np_trunc_occupied(q: np.ndarray, keep_bits: int):
+    """Bit-exact numpy reference of ``grad._trunc_occupied`` (f32 width
+    computation, arithmetic shift on negatives)."""
+    maxq = np.float32(np.max(np.abs(q)))
+    nbits = int(np.ceil(np.log2(maxq + np.float32(1.0)), dtype=np.float32))
+    shift = max(nbits - keep_bits, 0)
+    q64 = q.astype(np.int64)
+    return (q64 >> shift) << shift, shift
+
+
+def nb_trunc(q: np.ndarray, drop: int) -> np.ndarray:
+    """The codec-side truncation: drop ``drop`` low negabinary digits."""
+    return from_negabinary(truncate(to_negabinary(q.astype(np.int64)), drop))
+
+
+def rand_q(seed, lo=-(2 ** 12), hi=2 ** 12, n=512):
+    return np.random.default_rng(seed).integers(lo, hi, size=n,
+                                                dtype=np.int64)
+
+
+# ------------------------------------------------- reference == jax impl
+
+@pytest.mark.parametrize("keep_bits", [1, 3, 6, 8, 12, 16, 31])
+def test_numpy_reference_matches_jax_bit_exactly(keep_bits):
+    for seed in range(3):
+        q = rand_q(seed)
+        jq, jshift = _trunc_occupied(jnp.asarray(q, jnp.int32), keep_bits)
+        rq, rshift = np_trunc_occupied(q, keep_bits)
+        assert int(jshift) == rshift
+        np.testing.assert_array_equal(np.asarray(jq, np.int64), rq)
+
+
+def test_arithmetic_shift_on_negatives_pinned():
+    # jax int32 >> is arithmetic: -1 >> 1 << 1 == -2, not 0
+    q = jnp.asarray([-1, -2, -3, -7], jnp.int32)
+    out, shift = _trunc_occupied(q, 2)      # nbits=3 -> shift=1
+    assert int(shift) == 1
+    np.testing.assert_array_equal(np.asarray(out), [-2, -2, -4, -8])
+
+
+# ------------------------------------------- parity with the core codec
+
+def test_bit_exact_vs_negabinary_for_shift_0_and_1():
+    """At shift 0 (identity) and shift 1 the arithmetic drop IS the
+    negabinary digit drop: q mod 2 equals negabinary digit 0."""
+    for seed in range(4):
+        q = rand_q(seed, lo=-100, hi=100)   # nbits = 7
+        for keep_bits, want_shift in ((7, 0), (6, 1), (32, 0)):
+            got, shift = np_trunc_occupied(q, keep_bits)
+            assert shift == want_shift
+            np.testing.assert_array_equal(got, nb_trunc(q, shift))
+
+
+def test_semantics_diverge_beyond_shift_1_pinned():
+    """Deeper drops legitimately differ (different codeword grids);
+    pin the known counterexamples so neither side drifts silently."""
+    q = np.array([2, 6], np.int64)
+    arith = (q >> 2) << 2
+    nb = nb_trunc(q, 2)
+    np.testing.assert_array_equal(arith, [0, 4])
+    np.testing.assert_array_equal(nb, [4, 8])
+    assert not np.array_equal(arith, nb)
+
+
+@pytest.mark.parametrize("drop", [0, 1, 2, 3, 5, 7])
+def test_both_paths_within_2_pow_drop(drop):
+    """Shared error contract: dropping ``drop`` low planes moves any
+    value by < 2^drop on BOTH paths (what makes the gradient path's
+    keep_bits accounting compatible with the codec's plane ladder)."""
+    for seed in range(3):
+        q = rand_q(seed)
+        assert np.max(np.abs(q - ((q >> drop) << drop))) < 2 ** drop \
+            or drop == 0
+        assert np.max(np.abs(q - nb_trunc(q, drop))) < max(2 ** drop, 1)
+
+
+def test_identity_when_keep_covers_occupied_width():
+    q = rand_q(0, lo=-(2 ** 9), hi=2 ** 9)  # nbits = 10
+    out, shift = np_trunc_occupied(q, 10)
+    assert shift == 0
+    np.testing.assert_array_equal(out, q)
+    jq, _ = _trunc_occupied(jnp.asarray(q, jnp.int32), 10)
+    np.testing.assert_array_equal(np.asarray(jq, np.int64), q)
+
+
+# ------------------------------------------------- quantizer invariants
+
+def test_quantize_leaf_error_feedback_closes_the_loop():
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    ef = jnp.zeros_like(g)
+    q, scale, err = _quantize_leaf(g, ef, rel_eb=1e-3, keep_bits=8)
+    recon = np.asarray(q, np.float32) * (2.0 * float(scale))
+    # the returned feedback is exactly the reconstruction residue
+    np.testing.assert_allclose(np.asarray(err), np.asarray(g) - recon,
+                               rtol=0, atol=1e-6)
+    # truncated q really dropped the low planes: re-truncating at the
+    # same keep_bits is the identity (the low planes are already zero)
+    q64 = np.asarray(q, np.int64)
+    again, shift = np_trunc_occupied(q64, 8)
+    assert shift > 0                        # something WAS dropped here
+    np.testing.assert_array_equal(again, q64)

@@ -1,0 +1,269 @@
+"""RestoreSession: coarse-first restore, refine-reads-only-the-delta
+accounting, grouped decode dispatch counts, the background refiner, and
+remote (HTTP-range) restore parity with the local path."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import Bundle, LeafSpec, RestoreSession, read_full, \
+    write_bundle
+from repro.core.bytesource import CountingSource, FileSource
+from repro.core.container import CorruptArchiveError
+from repro.core.pipeline.spec import ExecPolicy
+from repro.kernels import dispatch
+
+REL_EB = 1e-5
+WEIGHT_ERR = 1e-2
+
+
+def smooth(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.standard_normal(shape), axis=-1).astype(np.float32)
+
+
+def build(tmp_path, n_big=3, name="s.ckpt", lossless_small=4096):
+    leaves = {f"blocks.{i}.w": smooth((64, 256), i) for i in range(n_big)}
+    leaves["norm.scale"] = np.linspace(0.5, 1.5, 48).astype(np.float32)
+    specs = [LeafSpec(lid=k, arr=v, dtype="float32", raw_nbytes=v.nbytes)
+             for k, v in leaves.items()]
+    path = os.path.join(str(tmp_path), name)
+    man = write_bundle(path, specs, step=3, rel_eb=REL_EB, interp="cubic",
+                       lossless_small=lossless_small)
+    return leaves, path, man
+
+
+# ----------------------------------------------------------- semantics
+
+def test_coarse_then_refine_to_full(tmp_path):
+    leaves, path, man = build(tmp_path)
+    with RestoreSession(Bundle.open(path)) as s:
+        coarse = s.restore(WEIGHT_ERR)
+        coarse_bytes = s.bytes_read
+        assert 0 < coarse_bytes < os.path.getsize(path)
+        for lid, ref in leaves.items():
+            rng_v = float(ref.max() - ref.min()) or 1.0
+            tol = 0.0 if man["leaves"][lid]["kind"] == "raw" \
+                else WEIGHT_ERR * rng_v * 1.001
+            assert np.max(np.abs(coarse[lid] - ref)) <= tol
+        full = s.restore(None)
+        assert s.bytes_read > coarse_bytes
+        assert s.achieved_bound <= REL_EB * max(
+            float(v.max() - v.min()) for v in leaves.values()) * 1.001
+    # progressive full == the one-shot verified full restore, bit for bit
+    with Bundle.open(path) as b:
+        direct = read_full(b)
+    for lid in leaves:
+        np.testing.assert_array_equal(full[lid], direct[lid])
+
+
+def test_refine_reads_exactly_the_missing_planes(tmp_path):
+    _, path, _ = build(tmp_path)
+    with RestoreSession(Bundle.open(path)) as s:
+        s.restore(WEIGHT_ERR)
+        pos0 = s.ladder_positions()
+        b0 = s.bytes_read
+        s.restore(WEIGHT_ERR)               # same bound: no new bytes
+        assert s.bytes_read == b0
+        s.restore(None)
+        pos1 = s.ladder_positions()
+        delta = s.bytes_read - b0
+        assert delta == s.plane_bytes_between(pos0, pos1)
+        assert delta > 0
+        b1 = s.bytes_read
+        s.restore(None)                     # already full: no re-reads
+        assert s.bytes_read == b1
+
+
+def test_looser_request_never_shrinks_prefix(tmp_path):
+    leaves, path, _ = build(tmp_path)
+    with RestoreSession(Bundle.open(path)) as s:
+        full = s.restore(None)
+        full_bytes = s.bytes_read
+        loose = s.restore(1.0)              # way looser than what's loaded
+        assert s.bytes_read == full_bytes   # no new reads...
+        for lid in leaves:                  # ...and no precision lost
+            np.testing.assert_array_equal(loose[lid], full[lid])
+
+
+def test_raw_leaf_zero_bound_and_manifest_read_once(tmp_path):
+    leaves, path, _ = build(tmp_path)
+    src = CountingSource(FileSource(path))
+    with RestoreSession(Bundle.open(src)) as s:
+        for we in (WEIGHT_ERR, 1e-3, None):
+            out = s.restore(we)
+            np.testing.assert_array_equal(out["norm.scale"],
+                                          leaves["norm.scale"])
+            assert s.leaf_bounds["norm.scale"] == 0.0   # honest zero error
+        raw_off = s.bundle.leaf_region("norm.scale")[0]
+        reqs = src.requests
+    # the manifest is parsed once at open and cached on the session —
+    # exactly one read of the manifest region across all three rounds
+    assert sum(1 for off, _ in reqs if off == 8) == 1
+    # the raw leaf is fetched once and served from cache afterwards
+    assert sum(1 for off, _ in reqs if off == raw_off) == 1
+
+
+def test_closed_session_rejects_restore(tmp_path):
+    _, path, _ = build(tmp_path, n_big=1)
+    s = RestoreSession(Bundle.open(path))
+    s.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        s.restore(None)
+
+
+def test_manifest_kind_container_mismatch_detected(tmp_path):
+    _, path, _ = build(tmp_path, n_big=1)
+    buf = bytearray(open(path, "rb").read())
+    b = Bundle.open(path)
+    off, _ = b.leaf_region("blocks.0.w")
+    b.close()
+    buf[off:off + 4] = b"IPC\x01"           # v3 bytes relabeled as v1 framing
+    s = RestoreSession(Bundle(bytes(buf)), verify=False)
+    with pytest.raises(CorruptArchiveError):
+        s.restore(WEIGHT_ERR)
+
+
+def test_session_detects_corrupt_prefix_on_first_open(tmp_path):
+    _, path, _ = build(tmp_path, n_big=2)
+    buf = bytearray(open(path, "rb").read())
+    b = Bundle.open(path)
+    off, _ = b.leaf_region("blocks.1.w")
+    b.close()
+    buf[off + 8] ^= 0x40                    # inside the verified prefix
+    with RestoreSession(Bundle(bytes(buf))) as s:
+        with pytest.raises(CorruptArchiveError, match=r"blocks\.1\.w"):
+            s.restore(WEIGHT_ERR)
+
+
+# ------------------------------------------------------- grouped decode
+
+def test_grouped_decode_fewer_dispatches_than_per_leaf():
+    pytest.importorskip("jax")
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        _, path, man = build(td, n_big=4, lossless_small=0)
+        kinds = {e["kind"] for lid, e in man["leaves"].items()
+                 if lid.startswith("blocks.")}
+        assert kinds == {"ipc"}, f"expected all-v3 big leaves, got {kinds}"
+        pol = ExecPolicy(backend="jax")
+
+        def run(group_leaves):
+            with RestoreSession(Bundle.open(path), policy=pol,
+                                group_leaves=group_leaves) as s:
+                with dispatch.measure() as d:
+                    out = s.restore(None)
+            return out, sum(d.values())
+
+        grouped, n_grouped = run(True)
+        per_leaf, n_per_leaf = run(False)
+        # the acceptance gate: equal-shaped leaves share batched kernel
+        # launches — strictly fewer dispatches, identical bits
+        assert n_grouped < n_per_leaf, (n_grouped, n_per_leaf)
+        for lid in grouped:
+            np.testing.assert_array_equal(grouped[lid], per_leaf[lid])
+
+
+# --------------------------------------------------- background refiner
+
+def test_refine_async_publishes_full_tree(tmp_path):
+    leaves, path, _ = build(tmp_path)
+    with RestoreSession(Bundle.open(path)) as s:
+        coarse = s.restore(WEIGHT_ERR)
+        frozen = {k: v.copy() for k, v in coarse.items()}
+        s.refine_async(None)
+        refined = s.refined(timeout=60)
+        assert refined is not None and s.done
+    with Bundle.open(path) as b:
+        direct = read_full(b)
+    for lid in leaves:
+        # the background refiner converges to the one-shot full restore
+        np.testing.assert_array_equal(refined[lid], direct[lid])
+        # double-buffered: the coarse tree was never mutated
+        np.testing.assert_array_equal(coarse[lid], frozen[lid])
+
+
+def test_refiner_failure_surfaces_in_poll(tmp_path):
+    _, path, _ = build(tmp_path, n_big=1)
+    s = RestoreSession(Bundle.open(path))
+    s.restore(WEIGHT_ERR)
+    s.bundle.source.close()                 # pull the rug under the refiner
+    t = s.refine_async(None)
+    t.join(30)
+    with pytest.raises(Exception):
+        s.refined()
+    s.closed = True                         # source already gone
+
+
+def test_exact_leaves_restore_full_in_coarse_round(tmp_path):
+    """Leaves matching the ``exact`` predicate decode at full precision
+    in the coarse round (a restart's optimizer moments must never be
+    approximated — near-zero entries flip sign under a range-relative
+    bound), while non-matching leaves stay coarse."""
+    leaves, path, _ = build(tmp_path)
+    with RestoreSession(Bundle.open(path)) as ref:
+        full = ref.restore(None)
+    exact_lid = "blocks.0.w"
+    s = RestoreSession(Bundle.open(path),
+                       exact=lambda lid: lid == exact_lid)
+    with s:
+        assert s.leaf_bound(exact_lid, WEIGHT_ERR) is None
+        assert s.leaf_bound("blocks.1.w", WEIGHT_ERR) is not None
+        coarse = s.restore(WEIGHT_ERR)
+        coarse_bytes = s.bytes_read
+        np.testing.assert_array_equal(coarse[exact_lid], full[exact_lid])
+        assert not np.array_equal(coarse["blocks.1.w"], full["blocks.1.w"])
+        # refine still only fetches the OTHER leaves' missing planes
+        pos0 = s.ladder_positions()
+        out = s.restore(None)
+        assert s.bytes_read - coarse_bytes \
+            == s.plane_bytes_between(pos0, s.ladder_positions())
+    for lid in leaves:
+        np.testing.assert_array_equal(out[lid], full[lid])
+
+
+def test_unflatten_hook_applied(tmp_path):
+    leaves, path, _ = build(tmp_path, n_big=1)
+    order = sorted(leaves)
+    s = RestoreSession(Bundle.open(path),
+                       unflatten=lambda d: [d[k] for k in order])
+    with s:
+        out = s.restore(None)
+    assert isinstance(out, list) and len(out) == len(order)
+
+
+# -------------------------------------------------------------- remote
+
+@pytest.mark.network
+def test_remote_restore_bit_identical_with_fault(tmp_path):
+    from tests.range_server import ServerFault, serve
+    leaves, path, _ = build(tmp_path)
+    payload = open(path, "rb").read()
+    with RestoreSession(Bundle.open(path)) as s:
+        local_coarse = s.restore(WEIGHT_ERR)
+        local_full = s.restore(None)
+    with serve(payload, faults=[ServerFault("drop", at=2)]) as srv:
+        with RestoreSession(Bundle.open(srv.url, timeout=2.0,
+                                        backoff=0.01)) as s:
+            remote_coarse = s.restore(WEIGHT_ERR)
+            s.refine_async(None)
+            remote_full = s.refined(timeout=60)
+        gets = [r for m, r in srv.log if m == "GET"]
+    assert len(gets) >= 3                   # the dropped GET was retried
+    for lid in leaves:
+        np.testing.assert_array_equal(remote_coarse[lid], local_coarse[lid])
+        np.testing.assert_array_equal(remote_full[lid], local_full[lid])
+
+
+@pytest.mark.network
+def test_remote_restore_persistent_failure_raises(tmp_path):
+    from repro.core.remote import RemoteError
+    from tests.range_server import ServerFault, serve
+    _, path, _ = build(tmp_path, n_big=1)
+    payload = open(path, "rb").read()
+    with serve(payload,
+               faults=[ServerFault("status", at=0, arg=503,
+                                   persist=True)]) as srv:
+        with pytest.raises(RemoteError):
+            Bundle.open(srv.url, timeout=1.0, retries=2, backoff=0.01)
